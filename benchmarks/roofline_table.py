@@ -1,0 +1,61 @@
+"""Render the EXPERIMENTS.md roofline tables from dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table [--dir runs/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def table(rows, mesh):
+    rows = [r for r in rows if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "bottleneck | MODEL_FLOPS | useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute_s'])} | "
+            f"{fmt_ms(r['t_memory_s'])} | {fmt_ms(r['t_collective_s'])} | "
+            f"{r['bottleneck']} | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']*100:.2f}% |")
+    return "\n".join(out)
+
+
+def skips():
+    from repro.configs import ARCH_NAMES, get_config
+    out = []
+    for a in ARCH_NAMES:
+        if not get_config(a).sub_quadratic:
+            out.append(f"| {a} | long_500k | SKIP — pure O(L^2) attention "
+                       f"(policy in DESIGN.md §Arch-applicability) |")
+    return "\n".join(["| arch | shape | status |", "|---|---|---|"] + out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print(f"## Roofline — mesh {args.mesh} ({len(rows)} artifacts)\n")
+    print(table(rows, args.mesh))
+    print("\n### Skipped cells\n")
+    print(skips())
+
+
+if __name__ == "__main__":
+    main()

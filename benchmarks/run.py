@@ -1,0 +1,234 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract), and
+a readable table per benchmark.  Modules:
+
+  fig3j_hp_errors      — HP twin: NODE vs recurrent ResNet across waveforms
+  fig3kl_hp_energy     — projected speed/energy scalability (HP twin)
+  fig4g_l96_errors     — Lorenz96: NODE vs LSTM/GRU/RNN interp/extrap
+  fig4hi_l96_energy    — projected time/energy scalability (Lorenz96)
+  fig4j_noise          — read/programming-noise robustness grid
+  kernels              — Pallas kernel vs jnp-reference checks + ref timing
+  roofline             — per-(arch x shape) roofline table from the dry-run
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig3j_hp_errors]
+        FAST=1 to cut training budgets ~4x.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+FAST = bool(int(os.environ.get("FAST", "0")))
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"CSV,{name},{us_per_call:.3f},{derived}")
+
+
+def _timeit(fn, *args, repeats=3):
+    fn(*args)  # warm
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args)
+    import jax
+    jax.block_until_ready(out)
+    return (time.time() - t0) / repeats * 1e6
+
+
+# ---------------------------------------------------------------------------
+
+def bench_fig3j_hp_errors():
+    import jax
+    from repro.train import recipes
+    scale = 0.4 if FAST else 1.0
+    twin, params, _ = recipes.train_hp_twin(
+        pretrain_steps=int(400 * scale), train_steps=int(600 * scale))
+    resnet, rparams, _ = recipes.train_hp_resnet(train_steps=int(800 * scale))
+    node_m = res_m = 0.0
+    for wf in ["sine", "triangular", "rectangular", "modulated_sine"]:
+        mn = recipes.eval_hp_twin(twin, params, wf)
+        mr = recipes.eval_hp_resnet(resnet, rparams, wf)
+        node_m += mn["mre"] / 4
+        res_m += mr["mre"] / 4
+        emit(f"fig3j/{wf}/node_mre", 0.0, f"{mn['mre']:.4f}")
+        emit(f"fig3j/{wf}/resnet_mre", 0.0, f"{mr['mre']:.4f}")
+    # paper: NODE 0.17 vs ResNet 0.61
+    emit("fig3j/mean/node_mre", 0.0, f"{node_m:.4f} (paper 0.17)")
+    emit("fig3j/mean/resnet_mre", 0.0, f"{res_m:.4f} (paper 0.61)")
+
+    # inference timing of the twin step (digital, CPU wall-time)
+    import jax.numpy as jnp
+    ts = jnp.linspace(0, 0.5, 501)
+    sim = jax.jit(lambda p: twin.simulate(p, jnp.array([0.1]), ts))
+    emit("fig3j/node_rollout_500steps", _timeit(sim, params), "wall_us")
+
+
+def bench_fig3kl_hp_energy():
+    from repro.core import energy
+    for row in energy.hp_projection():
+        h = row["hidden"]
+        emit(f"fig3kl/h{h}/analogue_energy_uj", row["analogue_time_us"],
+             f"{row['analogue_energy_uj']:.2f}")
+        emit(f"fig3kl/h{h}/node_gpu_speed_gain", row["node_gpu_time_us"],
+             f"{row['node_gpu_speed_gain']:.2f}")
+        emit(f"fig3kl/h{h}/node_gpu_energy_gain", 0.0,
+             f"{row['node_gpu_energy_gain']:.2f}")
+    r = energy.hp_projection()[-1]
+    emit("fig3kl/h64/check_vs_paper", 0.0,
+         f"speed {r['node_gpu_speed_gain']:.1f} (4.2) energy "
+         f"{r['node_gpu_energy_gain']:.1f} (41.4)")
+
+
+def bench_fig4g_l96_errors():
+    from repro.train import recipes
+    scale = 0.3 if FAST else 1.0
+    data = recipes.l96_data()
+    twin, params = recipes.train_l96_twin(
+        pretrain_steps=int(5000 * scale),
+        train_steps=((60, int(600 * scale), 1e-3),
+                     (200, int(600 * scale), 4e-4)), data=data)
+    m = recipes.eval_l96_twin(twin, params, data=data)
+    emit("fig4g/node/interp_l1", 0.0,
+         f"{m['interp_l1']:.3f} (paper 0.512)")
+    emit("fig4g/node/extrap_l1", 0.0,
+         f"{m['extrap_l1']:.3f} (paper 0.321)")
+    for cell in ["lstm", "gru", "rnn"]:
+        b = recipes.eval_l96_baseline(cell, train_steps=int(2500 * scale),
+                                      data=data)
+        emit(f"fig4g/{cell}/interp_l1", 0.0, f"{b['interp_l1']:.3f}")
+        emit(f"fig4g/{cell}/extrap_l1", 0.0, f"{b['extrap_l1']:.3f}")
+    return twin, params, data
+
+
+def bench_fig4hi_l96_energy():
+    from repro.core import energy
+    for row in energy.lorenz96_projection():
+        h = row["hidden"]
+        for sysname in ["node_gpu", "lstm_gpu", "gru_gpu", "rnn_gpu"]:
+            emit(f"fig4hi/h{h}/{sysname}", row[f"{sysname}_time_us"],
+                 f"speed x{row[f'{sysname}_speed_gain']:.1f} energy "
+                 f"x{row[f'{sysname}_energy_gain']:.1f}")
+    r = energy.lorenz96_projection()[-1]
+    emit("fig4hi/h512/check_vs_paper", r["analogue_time_us"],
+         f"analogue {r['analogue_time_us']:.1f}us (40.1) node speed "
+         f"x{r['node_gpu_speed_gain']:.1f} (12.6)")
+
+
+def bench_fig4j_noise(l96_state=None):
+    from repro.train import recipes
+    if l96_state is None:
+        scale = 0.3 if FAST else 0.6
+        data = recipes.l96_data()
+        twin, params = recipes.train_l96_twin(
+            pretrain_steps=int(5000 * scale),
+            train_steps=((60, int(600 * scale), 1e-3),), data=data)
+    else:
+        twin, params, data = l96_state
+    rows = recipes.noise_robustness_grid(
+        twin, params, read_noises=[0.0, 0.01, 0.02],
+        prog_noises=[0.0, 0.01], data=data, repeats=1 if FAST else 3)
+    for r in rows:
+        emit(f"fig4j/prog{r['prog_noise']:.2f}/read{r['read_noise']:.2f}",
+             0.0, f"extrap_l1 {r['extrap_l1']:.3f}")
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.analogue import AnalogueSpec, program_tensor
+    from repro.core.node import mlp_init
+    from repro.kernels import ops, ref
+
+    params = mlp_init(jax.random.PRNGKey(0), (2, 64, 64, 1))
+    y0 = jnp.zeros((64, 1))
+    T = 100
+    ts = jnp.linspace(0, 0.1, T + 1)
+    uh = ops.half_step_drive(lambda t: jnp.sin(20 * t), ts)
+    dt = float(ts[1] - ts[0])
+    out_k = ops.fused_node_rollout(params, y0, uh, dt)
+    out_r = ops.fused_node_rollout_ref(params, y0, uh, dt)
+    err = float(jnp.abs(out_k - out_r).max())
+    ref_fn = jax.jit(lambda: ops.fused_node_rollout_ref(params, y0, uh, dt))
+    emit("kernels/fused_node_mlp", _timeit(lambda: ref_fn()),
+         f"interpret_max_err {err:.2e}")
+
+    spec = AnalogueSpec(prog_noise=0.0436)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
+    prog = program_tensor(jax.random.PRNGKey(2), w, spec)
+    x = jax.random.normal(jax.random.PRNGKey(3), (128, 256))
+    yk = ops.crossbar_vmm(prog, x, spec)
+    yr = ref.crossbar_matmul_ref(x, prog["gp"], prog["gm"], 1.0,
+                                 spec.v_clamp) / prog["scale"]
+    err = float(jnp.abs(yk - yr).max())
+    ref_fn = jax.jit(lambda: ref.crossbar_matmul_ref(
+        x, prog["gp"], prog["gm"], 1.0, spec.v_clamp))
+    emit("kernels/crossbar_vmm", _timeit(lambda: ref_fn()),
+         f"interpret_max_err {err:.2e}")
+
+    a = jax.random.normal(jax.random.PRNGKey(4), (2, 128, 2))
+    b = jax.random.normal(jax.random.PRNGKey(5), (2, 160, 2))
+    sk = ops.soft_dtw(a, b, 0.5)
+    from repro.core.losses import soft_dtw as sj
+    sr = jax.vmap(lambda p, q: sj(p, q, 0.5))(a, b)
+    err = float(jnp.abs(sk - sr).max())
+    ref_fn = jax.jit(lambda: jax.vmap(lambda p, q: sj(p, q, 0.5))(a, b))
+    emit("kernels/softdtw", _timeit(lambda: ref_fn()),
+         f"interpret_max_err {err:.2e}")
+
+
+def bench_roofline():
+    import glob
+    import json
+    files = sorted(glob.glob("runs/dryrun/*.json"))
+    if not files:
+        print("  (no dry-run artifacts found; run repro.launch.dryrun)")
+        return
+    for f in files:
+        d = json.load(open(f))
+        name = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        t_step = max(d["t_compute_s"], d["t_memory_s"], d["t_collective_s"])
+        emit(name, t_step * 1e6,
+             f"{d['bottleneck']}-bound frac {d['roofline_fraction']:.4f}")
+
+
+BENCHES = {
+    "fig3j_hp_errors": bench_fig3j_hp_errors,
+    "fig3kl_hp_energy": bench_fig3kl_hp_energy,
+    "fig4g_l96_errors": None,   # chained with fig4j below
+    "fig4hi_l96_energy": bench_fig4hi_l96_energy,
+    "fig4j_noise": None,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    t0 = time.time()
+    names = [args.only] if args.only else list(BENCHES)
+    l96_state = None
+    for name in names:
+        print(f"\n=== {name} ===")
+        if name == "fig4g_l96_errors":
+            l96_state = bench_fig4g_l96_errors()
+        elif name == "fig4j_noise":
+            bench_fig4j_noise(l96_state)
+        else:
+            BENCHES[name]()
+    print(f"\nname,us_per_call,derived  ({len(ROWS)} rows, "
+          f"{time.time()-t0:.0f}s total)")
+    for r in ROWS:
+        print(f"{r[0]},{r[1]:.3f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke(name)``."""
+from repro.configs.base import (SHAPES, ArchConfig, ShapeConfig,
+                                active_param_count, param_count,
+                                runnable_shapes)
+
+_MODULES = {
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "llama3-8b": "llama3_8b",
+    "internlm2-20b": "internlm2_20b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "musicgen-medium": "musicgen_medium",
+    "xlstm-125m": "xlstm_125m",
+    "chameleon-34b": "chameleon_34b",
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def _module(name: str):
+    import importlib
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return _module(name).SMOKE

@@ -1,0 +1,20 @@
+"""The paper's own Lorenz96 twin configuration (Methods)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Lorenz96TwinConfig:
+    state_dim: int = 6
+    forcing: float = 8.0
+    hidden: int = 64              # three-layer net, 64 per hidden layer
+    n_hidden_layers: int = 2
+    num_points: int = 2400
+    train_points: int = 1800      # interpolation window
+    dt: float = 0.0025            # total span ~13 Lyapunov times
+    method: str = "rk4"
+    gradient: str = "adjoint"
+    loss: str = "l1+softdtw"
+    noise_regulariser: float = 0.02
+
+
+CONFIG = Lorenz96TwinConfig()

@@ -1,0 +1,46 @@
+"""Hillclimbed config variants (§Perf in EXPERIMENTS.md).
+
+``get_optimized(name)`` = the paper-faithful CONFIG plus the measured
+beyond-baseline optimisations.  Baseline artifacts stay reproducible from
+the unmodified configs (snapshot: runs/dryrun_baseline/).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+
+# applied to every arch (measured on the three hillclimb cells, then
+# rolled out — each is semantics-preserving up to bf16 score rounding)
+GLOBAL = dict(
+    attn_causal_skip=True,        # banded kv loop: ~2x fewer score tiles
+    attn_score_dtype="bfloat16",  # halves the dominant score-tile traffic
+    attn_q_chunk=1024,            # nq<=32 => static banding even at 32k
+    attn_kv_chunk=1024,
+)
+
+PER_ARCH = {
+    # heads % 16 != 0: pad heads to the next multiple of the TP axis.
+    # Zero-padded wo rows keep the function identical to the unpadded
+    # model; +33%/+20% attention FLOPs but clean Megatron TP instead of
+    # 16x attention replication (measured in §Perf iterations 1->2).
+    "musicgen-medium": dict(n_heads=32, n_kv=32),
+    "qwen1.5-32b": dict(n_heads=48, n_kv=48, kv_cache_quant=True),
+    # 4 heads on a 16-way axis: replicate attention-ish mixer weights,
+    # shard the wide projected dims instead (rules do this natively)
+    "xlstm-125m": dict(),
+    # jamba: bf16 scan tree (in-chunk contraction is already structural)
+    "jamba-v0.1-52b": dict(),
+}
+
+
+def get_optimized(name: str):
+    cfg = get_config(name)
+    over = dict(GLOBAL)
+    over.update(PER_ARCH.get(name, {}))
+    # NODE/MLA absorbed flash uses the same knobs; mamba scan dtype rides
+    # on the MambaConfig
+    if cfg.mamba is not None:
+        over["mamba"] = dataclasses.replace(cfg.mamba,
+                                            scan_dtype="bfloat16")
+    return dataclasses.replace(cfg, **over)

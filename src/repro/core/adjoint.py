@@ -1,0 +1,98 @@
+"""O(1)-memory adjoint-state gradients for the neural-ODE twin.
+
+The paper (Methods, "Training method of continuous-time digital twin")
+trains with the adjoint method of Chen et al. 2018: the gradient of the
+loss w.r.t. parameters is obtained by integrating the augmented ODE
+
+    da/dt      = -a(t)^T ∂f/∂y
+    dgrad_θ/dt = -a(t)^T ∂f/∂θ
+
+backwards in time, so no intermediate activation of the forward solve has
+to be stored.  ``odeint_adjoint`` exposes the same interface as
+:func:`repro.core.ode.odeint` but with a custom VJP implementing exactly
+this, making the solver O(1)-memory in trajectory length.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.ode import STEP_FNS, odeint
+
+Pytree = Any
+_tree_map = jax.tree_util.tree_map
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 4, 5))
+def odeint_adjoint(
+    f: Callable,
+    y0: Pytree,
+    ts: jax.Array,
+    params: Pytree,
+    method: str = "rk4",
+    steps_per_interval: int = 1,
+) -> Pytree:
+    """Like ``odeint(lambda t, y: f(t, y, params), y0, ts)`` with adjoint grads.
+
+    ``f(t, y, params) -> dy/dt``.  Differentiable in ``y0`` and ``params``;
+    ``ts`` is treated as non-differentiable observation times.
+    """
+    return odeint(f, y0, ts, params, method=method,
+                  steps_per_interval=steps_per_interval)
+
+
+def _fwd(f, y0, ts, params, method, steps_per_interval):
+    ys = odeint(f, y0, ts, params, method=method,
+                steps_per_interval=steps_per_interval)
+    return ys, (ys, ts, params)
+
+
+def _bwd(f, method, steps_per_interval, residuals, g):
+    ys, ts, params = residuals
+    n = ts.shape[0]
+    step = STEP_FNS[method]
+    sub = steps_per_interval
+
+    def aug_dynamics(t, aug, params):
+        """Augmented reverse dynamics on (y, a, grad_params)."""
+        y, a, _ = aug
+        dy, vjp_fn = jax.vjp(lambda y_, p_: f(t, y_, p_), y, params)
+        neg_a = _tree_map(lambda x: -x, a)
+        a_dot_y, a_dot_p = vjp_fn(neg_a)
+        # (dy/dt, da/dt, dgrad/dt); note a_dot_* already carry the minus sign.
+        return (dy, a_dot_y, a_dot_p)
+
+    zeros_p = _tree_map(jnp.zeros_like, params)
+    y_last = _tree_map(lambda x: x[-1], ys)
+    a_init = _tree_map(lambda x: x[-1], g)
+
+    def interval(carry, idx):
+        """Integrate the augmented system backwards over [ts[idx+1], ts[idx]]."""
+        a, grad_p = carry
+        t1 = ts[idx + 1]
+        t0 = ts[idx]
+        y1 = _tree_map(lambda x: x[idx + 1], ys)
+        aug = (y1, a, grad_p)
+        dt = (t0 - t1) / sub  # negative
+
+        def substep(i, aug):
+            return step(aug_dynamics, t1 + i * dt, aug, dt, params)
+
+        _, a, grad_p = lax.fori_loop(0, sub, substep, aug)
+        # pick up the cotangent injected at observation time ts[idx]
+        g_i = _tree_map(lambda x: x[idx], g)
+        a = _tree_map(lambda u, v: u + v, a, g_i)
+        return (a, grad_p), None
+
+    (a_final, grad_params), _ = lax.scan(
+        interval, (a_init, zeros_p), jnp.arange(n - 2, -1, -1))
+
+    del y_last
+    return a_final, None, grad_params
+
+
+odeint_adjoint.defvjp(_fwd, _bwd)

@@ -1,0 +1,174 @@
+"""Simulation of the paper's analogue memristor crossbar execution.
+
+Models, with the paper's measured device statistics:
+
+* differential-pair weight mapping  W -> (G+, G-), G in [20, 100] uS
+  (Fig. 2f; Fig. 3e reports 2.2% average relative error in that range);
+* 6-bit analogue conductance (>= 64 states, Fig. 2h) — uniform
+  quantisation of each conductance;
+* programming noise — multiplicative Gaussian with sigma = 4.36%
+  (Fig. 2k), frozen at programming time;
+* read noise — multiplicative Gaussian per VMM evaluation (Fig. 4j
+  sweeps 0-2%);
+* peripheral clamp — output voltage protection (Fig. 2d).
+
+Biases are folded into the crossbar as an extra row driven by a constant
+1-V line, the standard crossbar idiom.  ``analogue_mlp_apply`` mirrors
+:func:`repro.core.node.mlp_apply` so a trained digital twin can be
+"deployed" onto the simulated arrays unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogueSpec:
+    g_min: float = 20e-6          # S  (paper: 20 uS)
+    g_max: float = 100e-6         # S  (paper: 100 uS)
+    levels: int = 64              # 6-bit analogue conductance
+    prog_noise: float = 0.0436    # relative sigma, Fig. 2k
+    read_noise: float = 0.0       # relative sigma per read
+    v_clamp: Optional[float] = None  # output clamp (model units), None = off
+    quantize: bool = True
+
+
+def weight_scale(w: jax.Array, spec: AnalogueSpec) -> jax.Array:
+    """Per-tensor scale mapping max|w| to the full differential range."""
+    g_range = spec.g_max - spec.g_min
+    return g_range / jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+
+
+def conductance_pair(w: jax.Array, spec: AnalogueSpec):
+    """Map weights to a differential conductance pair.
+
+    w >= 0: G+ carries the value, G- parked at g_min (and vice versa), so
+    G+ - G- = scale * w exactly (before quantisation/noise).
+    """
+    scale = weight_scale(w, spec)
+    mag = jnp.abs(w) * scale
+    gp = jnp.where(w >= 0, spec.g_min + mag, spec.g_min)
+    gm = jnp.where(w >= 0, spec.g_min, spec.g_min + mag)
+    return gp, gm, scale
+
+
+def quantize_conductance(g: jax.Array, spec: AnalogueSpec) -> jax.Array:
+    """Snap to the device's discrete analogue levels (64 = 6-bit)."""
+    if not spec.quantize:
+        return g
+    step = (spec.g_max - spec.g_min) / (spec.levels - 1)
+    q = jnp.round((g - spec.g_min) / step)
+    return spec.g_min + jnp.clip(q, 0, spec.levels - 1) * step
+
+
+def program_tensor(key: jax.Array, w: jax.Array, spec: AnalogueSpec) -> dict:
+    """Program a weight tensor onto a (simulated) crossbar.
+
+    Quantisation then multiplicative programming noise, frozen — this is
+    the post-programming conductance of Fig. 2k.
+    """
+    gp, gm, scale = conductance_pair(w, spec)
+    gp = quantize_conductance(gp, spec)
+    gm = quantize_conductance(gm, spec)
+    if spec.prog_noise > 0:
+        kp, km = jax.random.split(key)
+        gp = gp * (1.0 + spec.prog_noise * jax.random.normal(kp, gp.shape))
+        gm = gm * (1.0 + spec.prog_noise * jax.random.normal(km, gm.shape))
+        gp = jnp.clip(gp, 0.0, spec.g_max * 1.5)
+        gm = jnp.clip(gm, 0.0, spec.g_max * 1.5)
+    return {"gp": gp, "gm": gm, "scale": scale}
+
+
+def programming_error(prog: dict, w: jax.Array, spec: AnalogueSpec):
+    """Relative error between target and realised differential conductance."""
+    target = w * prog["scale"]
+    realised = prog["gp"] - prog["gm"]
+    return jnp.abs(realised - target) / (spec.g_max - spec.g_min)
+
+
+def _read_key(key: jax.Array, t: jax.Array) -> jax.Array:
+    """Derive a per-read key from continuous time (read noise is i.i.d.
+    per evaluation; fold the time stamp in at 1 ns resolution)."""
+    tick = jnp.asarray(jnp.mod(jnp.abs(t) * 1e6, jnp.float32(2 ** 31 - 1)),
+                       jnp.uint32)
+    return jax.random.fold_in(key, tick)
+
+
+def analogue_matmul(prog: dict, x: jax.Array, spec: AnalogueSpec,
+                    key: Optional[jax.Array] = None) -> jax.Array:
+    """x @ W through the differential crossbar: I = V G+ - V G- (Ohm +
+    Kirchhoff), rescaled back to weight units."""
+    gp, gm = prog["gp"], prog["gm"]
+    if spec.read_noise > 0 and key is not None:
+        kp, km = jax.random.split(key)
+        gp = gp * (1.0 + spec.read_noise * jax.random.normal(kp, gp.shape))
+        gm = gm * (1.0 + spec.read_noise * jax.random.normal(km, gm.shape))
+    y = (x @ gp - x @ gm) / prog["scale"]
+    if spec.v_clamp is not None:
+        y = jnp.clip(y, -spec.v_clamp, spec.v_clamp)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Whole-MLP programming / execution (bias folded as constant-input row)
+# ---------------------------------------------------------------------------
+
+def _fold_bias(layer: dict) -> jax.Array:
+    return jnp.concatenate([layer["w"], layer["b"][None, :]], axis=0)
+
+
+def program_mlp(key: jax.Array, params: list[dict],
+                spec: AnalogueSpec) -> list[dict]:
+    keys = jax.random.split(key, len(params))
+    return [program_tensor(k, _fold_bias(layer), spec)
+            for k, layer in zip(keys, params)]
+
+
+def analogue_mlp_apply(progs: list[dict], x: jax.Array, spec: AnalogueSpec,
+                       key: Optional[jax.Array] = None,
+                       activation=jax.nn.relu) -> jax.Array:
+    """Forward through the programmed arrays; ReLU between layers is the
+    peripheral dual-diode circuit (Fig. 2d-e)."""
+    ones = jnp.ones(x.shape[:-1] + (1,), x.dtype)
+    for i, prog in enumerate(progs):
+        xa = jnp.concatenate([x, ones], axis=-1)
+        k = None
+        if key is not None:
+            key, k = jax.random.split(key)
+        x = analogue_matmul(prog, xa, spec, k)
+        if i < len(progs) - 1:
+            x = activation(x)
+        ones = jnp.ones(x.shape[:-1] + (1,), x.dtype)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogueMLPVectorField:
+    """Analogue-deployed counterpart of MLPVectorField.
+
+    Wraps programmed crossbars; read noise is re-sampled per f-evaluation,
+    keyed on (base key, time stamp) — matching i.i.d. read noise in the
+    closed analogue loop.
+    """
+    progs: tuple
+    spec: AnalogueSpec
+    drive: Optional[Any] = None
+    key: Optional[jax.Array] = None
+
+    def __call__(self, t, y, params=None):
+        del params  # weights live in the (frozen) crossbar programs
+        if self.drive is not None:
+            u = jnp.atleast_1d(jnp.asarray(self.drive(t), dtype=y.dtype))
+            inp = jnp.concatenate([u, y], axis=-1)
+        else:
+            inp = y
+        k = None
+        if self.key is not None and self.spec.read_noise > 0:
+            k = _read_key(self.key, t)
+        return analogue_mlp_apply(list(self.progs), inp, self.spec, k)

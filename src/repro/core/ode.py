@@ -1,0 +1,243 @@
+"""Explicit ODE integrators used by the neural-ODE digital twin.
+
+The paper's analogue system integrates continuously in physical time with a
+capacitor; the digital-twin-on-TPU equivalent is a high-order explicit
+integrator.  RK4 is the paper's own ODESolve choice for training (Methods,
+"Multivariate time series extrapolation"), so it is the default here.
+
+All integrators share one contract:
+
+    f(t, y, *f_args) -> dy/dt        (y is any pytree)
+
+and are pure-JAX (``lax.scan`` / ``lax.while_loop``) so they can be jitted,
+vmapped, differentiated, and lowered inside pjit programs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Pytree = Any
+VectorField = Callable[..., Pytree]
+
+_tree_map = jax.tree_util.tree_map
+
+
+def _axpy(a, xs, ys):
+    """ys + a * xs over pytrees."""
+    return _tree_map(lambda x, y: y + a * x, xs, ys)
+
+
+def _weighted_sum(coeffs: Sequence[float], trees: Sequence[Pytree]) -> Pytree:
+    acc = _tree_map(lambda x: coeffs[0] * x, trees[0])
+    for c, t in zip(coeffs[1:], trees[1:]):
+        acc = _tree_map(lambda a, x: a + c * x, acc, t)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Fixed-step Butcher tableaux steps
+# ---------------------------------------------------------------------------
+
+def euler_step(f: VectorField, t, y, dt, *f_args):
+    return _axpy(dt, f(t, y, *f_args), y)
+
+
+def heun_step(f: VectorField, t, y, dt, *f_args):
+    k1 = f(t, y, *f_args)
+    k2 = f(t + dt, _axpy(dt, k1, y), *f_args)
+    return _axpy(dt / 2.0, _tree_map(lambda a, b: a + b, k1, k2), y)
+
+
+def midpoint_step(f: VectorField, t, y, dt, *f_args):
+    k1 = f(t, y, *f_args)
+    k2 = f(t + dt / 2.0, _axpy(dt / 2.0, k1, y), *f_args)
+    return _axpy(dt, k2, y)
+
+
+def rk4_step(f: VectorField, t, y, dt, *f_args):
+    """Classic 4th-order Runge-Kutta — the paper's ODESolve."""
+    k1 = f(t, y, *f_args)
+    k2 = f(t + dt / 2.0, _axpy(dt / 2.0, k1, y), *f_args)
+    k3 = f(t + dt / 2.0, _axpy(dt / 2.0, k2, y), *f_args)
+    k4 = f(t + dt, _axpy(dt, k3, y), *f_args)
+    incr = _weighted_sum([1 / 6, 1 / 3, 1 / 3, 1 / 6], [k1, k2, k3, k4])
+    return _axpy(dt, incr, y)
+
+
+def rk38_step(f: VectorField, t, y, dt, *f_args):
+    """Kutta's 3/8 rule (4th order, slightly better error constant)."""
+    k1 = f(t, y, *f_args)
+    k2 = f(t + dt / 3.0, _axpy(dt / 3.0, k1, y), *f_args)
+    k3 = f(t + 2 * dt / 3.0,
+           _axpy(dt, _weighted_sum([-1 / 3, 1.0], [k1, k2]), y), *f_args)
+    k4 = f(t + dt,
+           _axpy(dt, _weighted_sum([1.0, -1.0, 1.0], [k1, k2, k3]), y), *f_args)
+    incr = _weighted_sum([1 / 8, 3 / 8, 3 / 8, 1 / 8], [k1, k2, k3, k4])
+    return _axpy(dt, incr, y)
+
+
+STEP_FNS = {
+    "euler": euler_step,
+    "heun": heun_step,
+    "midpoint": midpoint_step,
+    "rk4": rk4_step,
+    "rk38": rk38_step,
+}
+
+
+def odeint(
+    f: VectorField,
+    y0: Pytree,
+    ts: jax.Array,
+    *f_args,
+    method: str = "rk4",
+    steps_per_interval: int = 1,
+) -> Pytree:
+    """Integrate ``dy/dt = f(t, y)`` and return y at every ``ts``.
+
+    Returns a pytree whose leaves have a leading axis of ``len(ts)`` —
+    ``y[0] == y0`` (matching Eq. 9 of the paper / torchdiffeq convention).
+
+    ``steps_per_interval`` sub-divides each [t_i, t_{i+1}] for accuracy
+    without densifying the output grid.
+    """
+    if method not in STEP_FNS:
+        raise ValueError(f"unknown method {method!r}; have {sorted(STEP_FNS)}")
+    step = STEP_FNS[method]
+    sub = steps_per_interval
+
+    def interval(y, t_pair):
+        t0, t1 = t_pair
+        dt = (t1 - t0) / sub
+
+        def substep(i, y):
+            return step(f, t0 + i * dt, y, dt, *f_args)
+
+        y = lax.fori_loop(0, sub, substep, y)
+        return y, y
+
+    t_pairs = jnp.stack([ts[:-1], ts[1:]], axis=-1)
+    _, ys = lax.scan(interval, y0, t_pairs)
+    # prepend the initial condition
+    return _tree_map(
+        lambda first, rest: jnp.concatenate([first[None], rest], axis=0),
+        y0, ys)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive Dormand-Prince 5(4)
+# ---------------------------------------------------------------------------
+
+# Dopri5 tableau.
+_DP_C = jnp.array([0.0, 1 / 5, 3 / 10, 4 / 5, 8 / 9, 1.0, 1.0])
+_DP_A = [
+    [],
+    [1 / 5],
+    [3 / 40, 9 / 40],
+    [44 / 45, -56 / 15, 32 / 9],
+    [19372 / 6561, -25360 / 2187, 64448 / 6561, -212 / 729],
+    [9017 / 3168, -355 / 33, 46732 / 5247, 49 / 176, -5103 / 18656],
+    [35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84],
+]
+_DP_B5 = jnp.array([35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84, 0.0])
+_DP_B4 = jnp.array([5179 / 57600, 0.0, 7571 / 16695, 393 / 640,
+                    -92097 / 339200, 187 / 2100, 1 / 40])
+
+
+class _DopriState(NamedTuple):
+    t: jax.Array
+    y: Pytree
+    dt: jax.Array
+    nfe: jax.Array
+
+
+def _dopri5_step(f, t, y, dt, *f_args):
+    ks = []
+    for i in range(7):
+        yi = y
+        for j, a in enumerate(_DP_A[i]):
+            yi = _axpy(dt * a, ks[j], yi)
+        ks.append(f(t + _DP_C[i] * dt, yi, *f_args))
+    y5 = y
+    y4 = y
+    for i in range(7):
+        y5 = _axpy(dt * _DP_B5[i], ks[i], y5)
+        y4 = _axpy(dt * _DP_B4[i], ks[i], y4)
+    err = _tree_map(lambda a, b: a - b, y5, y4)
+    return y5, err
+
+
+def _error_norm(err, y0, y1, rtol, atol):
+    def leaf_norm(e, a, b):
+        scale = atol + rtol * jnp.maximum(jnp.abs(a), jnp.abs(b))
+        r = (e / scale) ** 2
+        return jnp.sum(r), r.size
+
+    leaves = jax.tree_util.tree_leaves(
+        _tree_map(leaf_norm, err, y0, y1), is_leaf=lambda x: isinstance(x, tuple))
+    total = sum(l[0] for l in leaves)
+    count = sum(l[1] for l in leaves)
+    return jnp.sqrt(total / count)
+
+
+def odeint_dopri5(
+    f: VectorField,
+    y0: Pytree,
+    ts: jax.Array,
+    *f_args,
+    rtol: float = 1e-5,
+    atol: float = 1e-6,
+    max_steps: int = 4096,
+    safety: float = 0.9,
+) -> Pytree:
+    """Adaptive Dormand-Prince 5(4) with PI step control (lax.while_loop).
+
+    Output convention matches :func:`odeint`.  Gradients flow by
+    backprop-through-the-solver only (use the adjoint wrapper for O(1)
+    memory); the while_loop makes reverse-mode unavailable, so this solver
+    is for inference/ground-truth generation.
+    """
+
+    def advance_to(y, t0, t1, dt0):
+        def cond(s: _DopriState):
+            return (s.t < t1) & (s.nfe < max_steps)
+
+        def body(s: _DopriState):
+            dt = jnp.minimum(s.dt, t1 - s.t)
+            y_new, err = _dopri5_step(f, s.t, s.y, dt, *f_args)
+            en = _error_norm(err, s.y, y_new, rtol, atol)
+            accept = en <= 1.0
+            factor = jnp.clip(safety * (en + 1e-12) ** -0.2, 0.2, 5.0)
+            new_dt = jnp.maximum(dt * factor, 1e-12)
+            t_next = jnp.where(accept, s.t + dt, s.t)
+            y_next = _tree_map(lambda a, b: jnp.where(accept, a, b), y_new, s.y)
+            return _DopriState(t_next, y_next, new_dt, s.nfe + 1)
+
+        init = _DopriState(t0, y, dt0, jnp.array(0, jnp.int32))
+        out = lax.while_loop(cond, body, init)
+        return out.y, out.dt
+
+    def interval(carry, t_pair):
+        y, dt = carry
+        t0, t1 = t_pair
+        y, dt = advance_to(y, t0, t1, dt)
+        return (y, dt), y
+
+    dt0 = (ts[1] - ts[0]) / 8.0
+    t_pairs = jnp.stack([ts[:-1], ts[1:]], axis=-1)
+    (_, _), ys = lax.scan(interval, (y0, dt0), t_pairs)
+    return _tree_map(
+        lambda first, rest: jnp.concatenate([first[None], rest], axis=0),
+        y0, ys)
+
+
+def make_odeint(method: str = "rk4", **kwargs) -> Callable:
+    """Factory returning an odeint with the method baked in."""
+    if method == "dopri5":
+        return functools.partial(odeint_dopri5, **kwargs)
+    return functools.partial(odeint, method=method, **kwargs)

@@ -1,0 +1,82 @@
+"""Digital-twin façade: driven and autonomous continuous-time twins.
+
+A twin = (vector field, integrator, gradient mode) + an optional analogue
+deployment.  This is the public API the examples and benchmarks use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analogue import (AnalogueMLPVectorField, AnalogueSpec,
+                                 program_mlp)
+from repro.core.node import MLPVectorField, NeuralODE
+from repro.core.ode import odeint
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DigitalTwin:
+    """Continuous-time digital twin of a physical asset."""
+    field: Any                       # f(t, y, params)
+    node: NeuralODE
+    state_dim: int
+
+    def init(self, key: jax.Array) -> Pytree:
+        return self.field.init(key)
+
+    def simulate(self, params: Pytree, y0: jax.Array, ts: jax.Array):
+        return self.node.trajectory(params, y0, ts)
+
+    def deploy_analogue(self, key: jax.Array, params: Pytree,
+                        spec: AnalogueSpec,
+                        read_key: Optional[jax.Array] = None) -> "DigitalTwin":
+        """Program the trained weights onto simulated crossbars and return a
+        twin that runs fully through the analogue path."""
+        progs = tuple(program_mlp(key, params, spec))
+        a_field = AnalogueMLPVectorField(
+            progs=progs, spec=spec,
+            drive=getattr(self.field, "drive", None),
+            key=read_key)
+        a_node = dataclasses.replace(self.node, field=a_field,
+                                     gradient="direct")
+        return dataclasses.replace(self, field=a_field, node=a_node)
+
+
+def make_driven_twin(state_dim: int, drive: Callable, hidden: int = 14,
+                     n_hidden_layers: int = 2, method: str = "rk4",
+                     gradient: str = "adjoint",
+                     steps_per_interval: int = 1) -> DigitalTwin:
+    """HP-memristor-style twin: dy/dt = MLP([u(t), y]).
+
+    Default sizes (2 -> 14 -> 14 -> 1) are the paper's three crossbar
+    arrays (2x14, 14x14, 14x1) for state_dim=1.
+    """
+    sizes = (1 + state_dim,) + (hidden,) * n_hidden_layers + (state_dim,)
+    field = MLPVectorField(sizes=sizes, drive=drive)
+    node = NeuralODE(field=field, method=method, gradient=gradient,
+                     steps_per_interval=steps_per_interval)
+    return DigitalTwin(field=field, node=node, state_dim=state_dim)
+
+
+def make_autonomous_twin(state_dim: int, hidden: int = 64,
+                         n_hidden_layers: int = 2, method: str = "rk4",
+                         gradient: str = "adjoint",
+                         steps_per_interval: int = 1) -> DigitalTwin:
+    """Lorenz96-style twin: dy/dt = MLP(y) (no external stimulation)."""
+    sizes = (state_dim,) + (hidden,) * n_hidden_layers + (state_dim,)
+    field = MLPVectorField(sizes=sizes, drive=None)
+    node = NeuralODE(field=field, method=method, gradient=gradient,
+                     steps_per_interval=steps_per_interval)
+    return DigitalTwin(field=field, node=node, state_dim=state_dim)
+
+
+def reference_trajectory(f: Callable, y0: jax.Array, ts: jax.Array, *args,
+                         steps_per_interval: int = 16) -> jax.Array:
+    """High-accuracy ground-truth solve (dense RK4) for data generation."""
+    return odeint(f, y0, ts, *args, method="rk4",
+                  steps_per_interval=steps_per_interval)

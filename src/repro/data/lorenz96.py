@@ -1,0 +1,48 @@
+"""Lorenz96 dynamics (paper Eq. 4) — ground truth for the autonomous twin.
+
+    dx_i/dt = (x_{i+1} - x_{i-2}) x_{i-1} - x_i + F,  periodic in i.
+
+Paper setup (Methods): n = 6 variables, initial condition
+[-1.2061, 0.0617, 1.1632, -1.5008, -1.5944, -0.0187], 2400 points,
+first 1800 interpolation (training) / remainder extrapolation (test).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.twin import reference_trajectory
+
+PAPER_Y0 = jnp.array([-1.2061, 0.0617, 1.1632, -1.5008, -1.5944, -0.0187])
+
+
+def lorenz96_field(forcing: float = 8.0):
+    def f(t, x, _params=None):
+        del t
+        xp1 = jnp.roll(x, -1)
+        xm1 = jnp.roll(x, 1)
+        xm2 = jnp.roll(x, 2)
+        return (xp1 - xm2) * xm1 - x + forcing
+    return f
+
+
+def generate(num_points: int = 2400, dt: float = 0.02,
+             y0: jax.Array = PAPER_Y0, forcing: float = 8.0,
+             train_points: int | None = None):
+    """Returns (ts, ys, split) with ys of shape (num_points, n).
+
+    ``train_points`` defaults to the paper's 3/4 split (1800 of 2400).
+    """
+    if train_points is None:
+        train_points = int(num_points * 0.75)
+    ts = jnp.arange(num_points) * dt
+    f = lorenz96_field(forcing)
+    ys = reference_trajectory(f, y0, ts, steps_per_interval=8)
+    return ts, ys, train_points
+
+
+def normalize(ys: jax.Array):
+    """Per-dim standardisation; returns (normed, mean, std)."""
+    mean = ys.mean(axis=0)
+    std = ys.std(axis=0) + 1e-8
+    return (ys - mean) / std, mean, std

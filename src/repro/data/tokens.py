@@ -1,0 +1,78 @@
+"""Synthetic token pipeline: deterministic, stateless, shardable.
+
+Every batch is a pure function of (seed, step) — so training resumes
+exactly after preemption by replaying the step counter (no iterator state
+to checkpoint), and any data shard can be regenerated on any host
+(straggler/failure recovery).  Two generators:
+
+* ``random``  — i.i.d. uniform tokens (throughput benchmarking).
+* ``markov``  — a fixed random first-order Markov chain over the vocab,
+  giving a learnable bigram structure so example training shows a real
+  loss curve (the "dataset" for the modality-frontend stubs: codec/VQ
+  token streams are exactly such discrete sequences).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab: int
+    seq_len: int
+    batch: int                  # per-host/global depending on caller
+    seed: int = 0
+    mode: str = "markov"        # markov | random
+    markov_states: int = 64     # transition structure rank (<= vocab)
+
+    def batch_at(self, step: int) -> dict:
+        """Pure function of step -> {'tokens': (B,S+1) int32}."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        if self.mode == "random":
+            toks = jax.random.randint(key, (self.batch, self.seq_len + 1),
+                                      0, self.vocab, jnp.int32)
+            return {"tokens": toks}
+        # markov: cheap deterministic chain via hashed transitions
+        k1, k2 = jax.random.split(key)
+        m = min(self.markov_states, self.vocab)
+        start = jax.random.randint(k1, (self.batch,), 0, self.vocab,
+                                   jnp.int32)
+        noise = jax.random.randint(k2, (self.batch, self.seq_len + 1),
+                                   0, 7919, jnp.int32)
+
+        def step_fn(tok, eps):
+            # fixed pseudo-random transition: LCG hash of the current token
+            nxt = (tok * 1103515245 + 12345) % m
+            nxt = (nxt + (eps % 3)) % self.vocab
+            return nxt.astype(jnp.int32), nxt.astype(jnp.int32)
+
+        _, seq = jax.lax.scan(
+            lambda c, e: step_fn(c, e), start, noise.swapaxes(0, 1))
+        return {"tokens": seq.swapaxes(0, 1)}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def split_batch(batch: dict) -> tuple[jax.Array, jax.Array]:
+    """(B, S+1) tokens -> (inputs (B,S), labels (B,S))."""
+    toks = batch["tokens"]
+    return toks[:, :-1], toks[:, 1:]
+
+
+def input_specs(cfg, shape, mesh_axes=None):
+    """ShapeDtypeStructs for the dry-run (never allocated).
+
+    train/prefill: {'tokens': (B, S+1)}; decode: single-token step inputs.
+    """
+    import jax
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        return {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}

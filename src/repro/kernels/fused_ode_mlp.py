@@ -1,0 +1,136 @@
+"""Weights-stationary fused neural-ODE solve — the paper's in-memory insight
+on TPU.
+
+The analogue system's whole advantage is that weights never move: they sit
+in the crossbar while the state circulates through the closed loop.  The
+TPU transposition: pin the MLP weights in VMEM once and run the ENTIRE RK4
+trajectory (T steps x 4 f-evals) inside a single ``pallas_call`` —
+activations live in VREGs/VMEM, the only HBM traffic is y0/drive in and
+the trajectory out.  A step-by-step XLA implementation would re-read the
+weights from HBM every f-eval and write every intermediate state back; at
+the paper's sizes that makes the solve HBM-latency-bound.
+
+Grid: one cell per batch tile (weights broadcast to every cell).
+Block layout:
+  y0      (bt, D)          per-tile
+  u_half  (2T+1, Du)       full, broadcast  (drive at half-steps for RK4)
+  w_i/b_i (full)           broadcast — the "crossbar residency"
+  out     (T+1, bt, D)     per-tile trajectory
+
+VMEM budget per cell ~= (T+1)*bt*D*4  +  sum(w)  +  (2T+1)*Du*4 bytes;
+the wrapper asserts it fits the ~16 MB/core budget before lowering.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(num_layers: int, T: int, dt: float, drive_dim: int,
+                 bt: int):
+    def kernel(*refs):
+        y0_ref = refs[0]
+        u_ref = refs[1]
+        w_refs = refs[2:2 + num_layers]
+        b_refs = refs[2 + num_layers:2 + 2 * num_layers]
+        out_ref = refs[2 + 2 * num_layers]
+
+        # Load weights ONCE — they stay register/VMEM-resident for the
+        # whole trajectory (the crossbar analogy).
+        ws = [w_ref[...] for w_ref in w_refs]
+        bs = [b_ref[...] for b_ref in b_refs]
+
+        def mlp(x):
+            for i in range(num_layers):
+                x = jnp.dot(x, ws[i], preferred_element_type=jnp.float32)
+                x = x + bs[i][None, :]
+                if i < num_layers - 1:
+                    x = jnp.maximum(x, 0.0)
+            return x
+
+        def f(u_row, y):
+            if drive_dim > 0:
+                u = jnp.broadcast_to(u_row, (bt, drive_dim))
+                inp = jnp.concatenate([u, y], axis=-1)
+            else:
+                inp = y
+            return mlp(inp)
+
+        y = y0_ref[...]
+        out_ref[0] = y
+
+        def body(t, y):
+            u0 = u_ref[2 * t]
+            um = u_ref[2 * t + 1]
+            u1 = u_ref[2 * t + 2]
+            k1 = f(u0, y)
+            k2 = f(um, y + (dt / 2) * k1)
+            k3 = f(um, y + (dt / 2) * k2)
+            k4 = f(u1, y + dt * k3)
+            y = y + (dt / 6) * (k1 + 2 * k2 + 2 * k3 + k4)
+            out_ref[t + 1] = y
+            return y
+
+        lax.fori_loop(0, T, body, y)
+
+    return kernel
+
+
+def fused_node_rollout(
+    y0: jax.Array,                    # (B, D) f32
+    u_half: jax.Array,                # (2T+1, Du) f32; Du may be 0
+    weights: Sequence[jax.Array],
+    biases: Sequence[jax.Array],
+    dt: float,
+    *,
+    batch_tile: int = 64,
+    interpret: bool = True,
+    vmem_budget_bytes: int = 14 * 1024 * 1024,
+) -> jax.Array:
+    """Full-trajectory RK4 solve; returns (T+1, B, D).  See module doc."""
+    B, D = y0.shape
+    T = (u_half.shape[0] - 1) // 2
+    du = u_half.shape[1]
+    L = len(weights)
+    bt = min(batch_tile, B)
+    if B % bt:
+        raise ValueError(f"batch {B} not divisible by tile {bt}")
+
+    wbytes = sum(4 * w.size for w in weights) + sum(4 * b.size for b in biases)
+    traj_bytes = 4 * (T + 1) * bt * D
+    u_bytes = 4 * u_half.size
+    need = wbytes + traj_bytes + u_bytes + 4 * bt * max(
+        du + D, max(w.shape[1] for w in weights))
+    if need > vmem_budget_bytes:
+        raise ValueError(
+            f"fused trajectory needs ~{need/2**20:.1f} MiB VMEM "
+            f"(budget {vmem_budget_bytes/2**20:.1f}); shrink batch_tile or T")
+
+    kernel = _make_kernel(L, T, float(dt), du, bt)
+
+    grid = (B // bt,)
+    in_specs = [
+        pl.BlockSpec((bt, D), lambda i: (i, 0)),          # y0
+        pl.BlockSpec((2 * T + 1, max(du, 1)), lambda i: (0, 0)),  # u_half
+    ]
+    for w in weights:
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+    for b in biases:
+        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+    out_spec = pl.BlockSpec((T + 1, bt, D), lambda i: (0, i, 0))
+
+    u_in = u_half if du > 0 else jnp.zeros((2 * T + 1, 1), y0.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((T + 1, B, D), y0.dtype),
+        interpret=interpret,
+    )(y0, u_in, *weights, *biases)

@@ -1,0 +1,148 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op pairs a TPU-target kernel (validated in interpret mode on CPU)
+with its pure-jnp oracle in :mod:`repro.kernels.ref`.  Gradient support:
+soft-DTW gets a custom VJP whose backward pass is the autodiff of the
+reference DP (the forward kernel is the perf-critical path; the loss
+backward reuses XLA).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analogue import AnalogueSpec
+from repro.core.losses import BIG, _pairwise_dist, soft_dtw as _soft_dtw_jnp
+from repro.kernels import ref
+from repro.kernels.crossbar_vmm import crossbar_matmul as _crossbar_pallas
+from repro.kernels.fused_ode_mlp import fused_node_rollout as _fused_pallas
+from repro.kernels.softdtw import softdtw_pallas as _softdtw_pallas
+
+
+# ---------------------------------------------------------------------------
+# Fused neural-ODE rollout
+# ---------------------------------------------------------------------------
+
+def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
+                       u_half: jax.Array, dt: float,
+                       *, batch_tile: int = 64,
+                       interpret: bool = True) -> jax.Array:
+    """Solve the twin's neural ODE with the weights-stationary kernel.
+
+    ``params``: the core MLP param list [{'w','b'}, ...]; ``y0``: (B, D);
+    ``u_half``: drive at half-steps (2T+1, Du) (pass (2T+1, 0) when
+    autonomous).  Returns the (T+1, B, D) trajectory.
+    """
+    weights = [p["w"].astype(jnp.float32) for p in params]
+    biases = [p["b"].astype(jnp.float32) for p in params]
+    return _fused_pallas(y0.astype(jnp.float32), u_half.astype(jnp.float32),
+                         weights, biases, float(dt),
+                         batch_tile=batch_tile, interpret=interpret)
+
+
+def fused_node_rollout_ref(params, y0, u_half, dt):
+    weights = [p["w"].astype(jnp.float32) for p in params]
+    biases = [p["b"].astype(jnp.float32) for p in params]
+    return ref.fused_node_rollout_ref(y0.astype(jnp.float32),
+                                      u_half.astype(jnp.float32),
+                                      weights, biases, float(dt))
+
+
+def half_step_drive(drive, ts: jax.Array) -> jax.Array:
+    """Sample a continuous drive u(t) at the RK4 half-step grid (2T+1, 1)."""
+    t0, t1 = ts[0], ts[-1]
+    T = ts.shape[0] - 1
+    th = jnp.linspace(t0, t1, 2 * T + 1)
+    u = jax.vmap(drive)(th)
+    return u[:, None] if u.ndim == 1 else u
+
+
+# ---------------------------------------------------------------------------
+# Crossbar VMM
+# ---------------------------------------------------------------------------
+
+def crossbar_vmm(prog: dict, x: jax.Array, spec: AnalogueSpec,
+                 *, interpret: bool = True) -> jax.Array:
+    """Analogue crossbar read through the fused kernel (float mode)."""
+    return _crossbar_pallas(
+        x, prog["gp"], prog["gm"],
+        inv_scale=1.0, g_step=None, clamp=spec.v_clamp,
+        interpret=interpret) / prog["scale"]
+
+
+def crossbar_vmm_quantized(x: jax.Array, gp_idx: jax.Array,
+                           gm_idx: jax.Array, spec: AnalogueSpec,
+                           scale: jax.Array | float,
+                           *, interpret: bool = True) -> jax.Array:
+    """Quantised-storage read: uint8 level indices, dequant fused in-kernel."""
+    g_step = (spec.g_max - spec.g_min) / (spec.levels - 1)
+    y = _crossbar_pallas(x, gp_idx, gm_idx, inv_scale=1.0,
+                         g_step=float(g_step), clamp=spec.v_clamp,
+                         interpret=interpret)
+    return y / scale
+
+
+def quantize_to_levels(w: jax.Array, spec: AnalogueSpec):
+    """Map weights to (gp_idx, gm_idx, scale) uint8 level tensors."""
+    from repro.core.analogue import conductance_pair
+    gp, gm, scale = conductance_pair(w, spec)
+    step = (spec.g_max - spec.g_min) / (spec.levels - 1)
+    to_idx = lambda g: jnp.clip(jnp.round((g - spec.g_min) / step),
+                                0, spec.levels - 1).astype(jnp.uint8)
+    return to_idx(gp), to_idx(gm), scale
+
+
+# ---------------------------------------------------------------------------
+# soft-DTW (kernel forward, reference-grad backward)
+# ---------------------------------------------------------------------------
+
+def _diag_layout_batch(D: jax.Array, chunk: int) -> jax.Array:
+    dd = jax.vmap(ref.diag_layout)(D)
+    kd = dd.shape[1]
+    pad = (-kd) % chunk
+    if pad:
+        dd = jnp.pad(dd, ((0, 0), (0, pad), (0, 0)), constant_values=BIG)
+    return dd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def soft_dtw(x: jax.Array, y: jax.Array, gamma: float = 1.0,
+             interpret: bool = True) -> jax.Array:
+    """Batched soft-DTW((B,n,d),(B,m,d)) -> (B,) via the wavefront kernel."""
+    D = jax.vmap(_pairwise_dist)(x, y)
+    n, m = D.shape[1], D.shape[2]
+    chunk = min(256, n + m - 1)
+    dd = _diag_layout_batch(D, chunk)
+    return _softdtw_pallas(dd, n, m, gamma=gamma, hard=False, chunk=chunk,
+                           interpret=interpret)
+
+
+def _sdtw_fwd(x, y, gamma, interpret):
+    return soft_dtw(x, y, gamma, interpret), (x, y)
+
+
+def _sdtw_bwd(gamma, interpret, res, g):
+    x, y = res
+    # backward through the reference DP (autodiff); forward stays kernel.
+    def batched(x, y):
+        return jax.vmap(lambda a, b: _soft_dtw_jnp(a, b, gamma))(x, y)
+    _, vjp = jax.vjp(batched, x, y)
+    gx, gy = vjp(g)
+    return gx, gy
+
+
+soft_dtw.defvjp(_sdtw_fwd, _sdtw_bwd)
+
+
+def dtw_distance(x: jax.Array, y: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    """Batched hard-DTW metric via the same wavefront kernel."""
+    D = jax.vmap(_pairwise_dist)(x, y)
+    n, m = D.shape[1], D.shape[2]
+    chunk = min(256, n + m - 1)
+    dd = _diag_layout_batch(D, chunk)
+    return _softdtw_pallas(dd, n, m, gamma=1.0, hard=True, chunk=chunk,
+                           interpret=interpret)

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.losses import BIG, _dtw_scan, _hardmin, _softmin
+
+
+# ---------------------------------------------------------------------------
+# fused ODE-MLP trajectory solve
+# ---------------------------------------------------------------------------
+
+def mlp_fwd(weights: list[jax.Array], biases: list[jax.Array],
+            x: jax.Array) -> jax.Array:
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        x = x @ w + b
+        if i < len(weights) - 1:
+            x = jnp.maximum(x, 0.0)
+    return x
+
+
+def fused_node_rollout_ref(y0: jax.Array, u_half: jax.Array,
+                           weights: list[jax.Array], biases: list[jax.Array],
+                           dt: float) -> jax.Array:
+    """RK4 rollout of dy/dt = MLP([u(t), y]) (drive optional).
+
+    y0: (B, D); u_half: (2T+1, Du) drive sampled at half-steps (Du may be 0);
+    returns (T+1, B, D).
+    """
+    T = (u_half.shape[0] - 1) // 2
+    du = u_half.shape[1]
+    B = y0.shape[0]
+
+    def f(u, y):
+        if du > 0:
+            inp = jnp.concatenate(
+                [jnp.broadcast_to(u[None, :], (B, du)), y], axis=-1)
+        else:
+            inp = y
+        return mlp_fwd(weights, biases, inp)
+
+    def step(y, t):
+        u0 = u_half[2 * t]
+        um = u_half[2 * t + 1]
+        u1 = u_half[2 * t + 2]
+        k1 = f(u0, y)
+        k2 = f(um, y + dt / 2 * k1)
+        k3 = f(um, y + dt / 2 * k2)
+        k4 = f(u1, y + dt * k3)
+        y = y + dt / 6 * (k1 + 2 * k2 + 2 * k3 + k4)
+        return y, y
+
+    _, ys = lax.scan(step, y0, jnp.arange(T))
+    return jnp.concatenate([y0[None], ys], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# crossbar differential-pair VMM
+# ---------------------------------------------------------------------------
+
+def crossbar_matmul_ref(x: jax.Array, gp: jax.Array, gm: jax.Array,
+                        inv_scale: float, clamp: float | None) -> jax.Array:
+    """y = x @ (gp - gm) / scale, clamped (float-programmed arrays)."""
+    y = (x.astype(jnp.float32) @
+         (gp.astype(jnp.float32) - gm.astype(jnp.float32))) * inv_scale
+    if clamp is not None:
+        y = jnp.clip(y, -clamp, clamp)
+    return y
+
+
+def crossbar_matmul_q_ref(x: jax.Array, gp_idx: jax.Array, gm_idx: jax.Array,
+                          g_step: float, inv_scale: float,
+                          clamp: float | None) -> jax.Array:
+    """Quantised-storage variant: uint8 level indices dequantised on the fly.
+
+    gp - gm = (idx_p - idx_m) * g_step  (G_min offsets cancel in the pair).
+    """
+    g = (gp_idx.astype(jnp.float32) - gm_idx.astype(jnp.float32)) * g_step
+    y = (x.astype(jnp.float32) @ g) * inv_scale
+    if clamp is not None:
+        y = jnp.clip(y, -clamp, clamp)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# soft-DTW wavefront DP
+# ---------------------------------------------------------------------------
+
+def diag_layout(D: jax.Array) -> jax.Array:
+    """(n, m) cost matrix -> (n+m-1, n) anti-diagonal layout, BIG-padded."""
+    n, m = D.shape
+    rows = jnp.arange(n)
+    ks = jnp.arange(n + m - 1)
+    j = ks[:, None] - rows[None, :]
+    valid = (j >= 0) & (j < m)
+    return jnp.where(valid, D[rows[None, :], jnp.clip(j, 0, m - 1)], BIG)
+
+
+def softdtw_ref(D: jax.Array, gamma: float, hard: bool = False) -> jax.Array:
+    """Accumulated (soft-)DTW cost of a (n, m) distance matrix."""
+    return _dtw_scan(D, gamma, _hardmin if hard else _softmin)
+
+
+def softdtw_batch_ref(D: jax.Array, gamma: float,
+                      hard: bool = False) -> jax.Array:
+    return jax.vmap(lambda d: softdtw_ref(d, gamma, hard))(D)

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds shape-only params/opt-state/caches
+(jax.eval_shape — nothing is allocated), resolves shardings through the
+divisibility-aware logical-axis rules, lowers the jitted step under the
+production mesh, compiles it, and records memory analysis, cost analysis
+and the per-device collective traffic parsed from the optimised HLO —
+the inputs to EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out runs/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, runnable_shapes
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   opt_state_shardings, param_shardings)
+from repro.models.model import init_cache, init_params
+from repro.roofline.analysis import Roofline, model_flops
+from repro.roofline.hlo_parse import analyze as hlo_analyze
+from repro.train.lm_trainer import make_prefill_step, make_serve_step, \
+    make_train_step
+from repro.train.optimizer import adam
+
+
+def _cost_number(cost, key):
+    if cost is None:
+        return 0.0
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return float(cost.get(key, 0.0))
+
+
+def _bytes_accessed(cost) -> float:
+    if cost is None:
+        return 0.0
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    total = 0.0
+    for k, v in cost.items():
+        if k == "bytes accessed" or k.startswith("bytes accessed"):
+            # avoid double counting: prefer the plain key if present
+            pass
+    if "bytes accessed" in cost:
+        return float(cost["bytes accessed"])
+    return float(sum(v for k, v in cost.items()
+                     if k.startswith("bytes accessed")))
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str | None = None, verbose: bool = True,
+             variant: str = "baseline") -> dict:
+    if variant == "opt":
+        from repro.configs.optimized import get_optimized
+        cfg = get_optimized(arch)
+    else:
+        cfg = get_config(arch)
+    shape: ShapeConfig = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    from repro.models import model as model_lib
+    model_lib.set_batch_axes(batch_axes(mesh))
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+
+    key = jax.random.PRNGKey(0)
+    no_attn_tp = cfg.shard_profile == "no_attn_tp"
+    params_sds = jax.eval_shape(lambda k: init_params(cfg, k), key)
+    pshard = param_shardings(mesh, params_sds, no_attn_tp=no_attn_tp)
+
+    batch_sds = {"tokens": jax.ShapeDtypeStruct(
+        (shape.global_batch,
+         (shape.seq_len + 1) if shape.kind in ("train", "prefill") else 1),
+        jnp.int32)}
+    bshard = batch_shardings(mesh, batch_sds)
+
+    if shape.kind == "train":
+        opt = adam(3e-4, grad_clip=1.0, mu_dtype=cfg.jdtype)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        oshard = opt_state_shardings(mesh, opt_sds, no_attn_tp=no_attn_tp)
+        step_fn = make_train_step(cfg, opt)
+        with mesh:
+            jitted = jax.jit(step_fn,
+                             in_shardings=(pshard, oshard, bshard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+            compiled = lowered.compile()
+    elif shape.kind == "prefill":
+        step_fn = make_prefill_step(cfg)
+        with mesh:
+            jitted = jax.jit(step_fn, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(params_sds, batch_sds)
+            compiled = lowered.compile()
+    else:  # decode
+        cache_sds = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        cshard = cache_shardings(mesh, cache_sds, shape.global_batch)
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        step_fn = make_serve_step(cfg)
+        with mesh:
+            jitted = jax.jit(step_fn,
+                             in_shardings=(pshard, bshard,
+                                           NamedSharding(mesh, P()), cshard),
+                             donate_argnums=(3,))
+            lowered = jitted.lower(params_sds, batch_sds, pos_sds, cache_sds)
+            compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    cost = compiled.cost_analysis()
+    flat_flops = _cost_number(cost, "flops")
+    flat_bytes = _bytes_accessed(cost)
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+
+    # loop-aware analysis of the optimised HLO (cost_analysis counts
+    # while bodies once; see roofline/hlo_parse.py)
+    hlo = compiled.as_text()
+    parsed = hlo_analyze(hlo)
+
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops_per_chip=parsed["flops"],
+        hlo_bytes_per_chip=parsed["traffic_bytes"],
+        coll_bytes_per_chip=parsed["collective_bytes"],
+        model_flops_global=model_flops(cfg, shape),
+        coll_breakdown=parsed["coll_breakdown"],
+    )
+    record = {**rl.row(), "compile_s": compile_s, "memory": mem_info,
+              "coll_breakdown": rl.coll_breakdown,
+              "coll_counts": parsed["coll_counts"],
+              "flat_cost_analysis": {"flops": flat_flops,
+                                     "bytes": flat_bytes},
+              "n_while": parsed["n_while"], "status": "ok"}
+
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] compiled in "
+              f"{compile_s:.1f}s")
+        print(f"  flops/chip {parsed['flops']:.3e}  traffic/chip "
+              f"{parsed['traffic_bytes']:.3e}  coll bytes/chip "
+              f"{parsed['collective_bytes']:.3e}")
+        print(f"  terms: compute {rl.t_compute*1e3:.2f} ms | memory "
+              f"{rl.t_memory*1e3:.2f} ms | collective "
+              f"{rl.t_collective*1e3:.2f} ms -> {rl.bottleneck}-bound; "
+              f"useful-flops ratio {rl.useful_flops_ratio:.2f}; "
+              f"roofline fraction {rl.roofline_fraction:.2%}")
+        print(f"  memory: {mem_info}")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}.json".replace("/", "_")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "opt"])
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_NAMES
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = runnable_shapes(cfg) if (args.all or args.shape is None) \
+            else [args.shape]
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                             variant=args.variant)
+                except Exception:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp))
+    if failures:
+        print(f"\nFAILED cells: {failures}")
+        raise SystemExit(1)
+    print("\nall requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialisation).
+
+Single pod:  (16, 16)  ("data", "model")   = 256 chips (one v5e pod)
+Multi-pod:   (2, 16, 16) ("pod", "data", "model") = 512 chips.
+
+"pod" composes with "data" for batch/grad-sync (pure DP across pods —
+the DCI-friendly axis); "model" carries TP/EP within a pod (ICI).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """The mesh axes that jointly shard the batch dimension."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_size(mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

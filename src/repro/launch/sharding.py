@@ -1,0 +1,200 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Every parameter leaf is matched by (leaf-name, rank) to an ordered list of
+tensor-parallel candidate dims; the first dim divisible by the mesh's
+"model" axis wins (so qwen1.5's 40 heads fall back to head_dim, xlstm's
+4 heads fall back to the projected dim, etc.).  A second pass assigns the
+"data" axis FSDP-style to the largest remaining dim >= the threshold —
+that is what makes 236B parameters + Adam state fit 16 GB/chip; GSPMD
+re-gathers weights per scan step (costed in the roofline's collective
+term).  The "pod" axis stays pure-DP (params replicated across pods, the
+gradient all-reduce crosses DCI once per step).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, batch_axes
+
+Pytree = Any
+
+# (leaf name, rank) -> ordered TP candidate dims (stack axis not counted)
+MODEL_DIM_PREFS = {
+    ("embed", 2): [0], ("head", 2): [0],
+    # canonical Megatron flow: shard q heads; kv heads replicate when they
+    # don't divide (NO head_dim fallback — contracting a sharded head_dim
+    # turns every flash score tile into a partial-sum all-reduce)
+    ("wq", 3): [1], ("wk", 3): [1], ("wv", 3): [1],
+    ("wo", 3): [0],
+    ("bq", 2): [0], ("bk", 2): [0], ("bv", 2): [0],
+    # MLA
+    ("w_dkv", 2): [0], ("w_uk", 3): [1], ("w_uv", 3): [1],
+    ("w_kr", 2): [], ("w_dq", 2): [0], ("w_uq", 3): [1],
+    # dense MLP
+    ("w_up", 2): [1], ("w_gate", 2): [1], ("w_down", 2): [0],
+    # MoE (expert parallelism on the expert axis)
+    ("router", 2): [1],
+    ("w_up", 3): [0], ("w_gate", 3): [0], ("w_down", 3): [0],
+    ("sh_up", 2): [1], ("sh_gate", 2): [1], ("sh_down", 2): [0],
+    # Mamba
+    ("in_proj", 2): [1], ("conv_w", 2): [1], ("conv_b", 1): [0],
+    ("x_proj", 2): [0], ("dt_proj", 2): [1], ("dt_bias", 1): [0],
+    ("A_log", 2): [0], ("D", 1): [0], ("out_proj", 2): [0],
+    # xLSTM
+    ("up", 2): [1], ("down", 2): [0], ("up_gate", 2): [1],
+    ("wi", 2): [0], ("wf", 2): [0], ("gn", 1): [], ("r", 3): [1, 2],
+    ("wx", 2): [1], ("b", 1): [],
+    # norms / misc (replicated)
+    ("scale", 1): [], ("bias", 1): [], ("q_norm", 1): [], ("k_norm", 1): [],
+    ("dt_norm", 1): [], ("b_norm", 1): [], ("c_norm", 1): [],
+}
+
+# KV / state cache leaves: TP candidates per name
+CACHE_MODEL_PREFS = {
+    "k": [2, 3], "v": [2, 3],        # (B, S, kv_heads, hd)
+    "k_scale": [2], "v_scale": [2],  # int8-cache scales (B, S, kv, 1)
+    "ckv": [2], "k_rope": [2],       # (B, S, lora/rope)
+    "ssm": [1], "conv": [2],         # (B, di, N) / (B, k-1, di)
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return ""
+
+
+def _is_stacked(path) -> bool:
+    return any(isinstance(e, jax.tree_util.DictKey) and e.key == "stack"
+               for e in path)
+
+
+_ATTN_LEAVES = {"wq", "wk", "wv", "wo", "bq", "bk", "bv", "w_dkv", "w_uk",
+                "w_uv", "w_kr", "w_dq", "w_uq", "q_norm", "k_norm"}
+
+
+def param_spec(path, shape, mesh, *, fsdp_threshold: int = 2048,
+               no_attn_tp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf."""
+    name = _leaf_name(path)
+    stacked = _is_stacked(path)
+    off = 1 if stacked else 0
+    rank = len(shape) - off
+    model = axis_size(mesh, "model")
+    data = axis_size(mesh, "data")
+
+    spec = [None] * len(shape)
+    prefs = MODEL_DIM_PREFS.get((name, rank))
+    if prefs is None:
+        prefs = []                       # unknown leaf -> replicate TP
+    if no_attn_tp and name in _ATTN_LEAVES:
+        prefs = []                       # replicate attn over the TP axis
+    model_dim = None
+    for d in prefs:
+        dd = d + off
+        if shape[dd] % model == 0 and shape[dd] >= model:
+            spec[dd] = "model"
+            model_dim = dd
+            break
+
+    # FSDP: largest remaining dim divisible by `data` and big enough
+    if data > 1:
+        cands = [d for d in range(off, len(shape))
+                 if d != model_dim and shape[d] % data == 0
+                 and shape[d] >= fsdp_threshold]
+        if cands:
+            best = max(cands, key=lambda d: shape[d])
+            spec[best] = "data"
+    return P(*spec)
+
+
+def param_shardings(mesh, params_tree: Pytree,
+                    fsdp_threshold: int = 2048,
+                    no_attn_tp: bool = False) -> Pytree:
+    """NamedSharding tree matching a (shape-only or concrete) params tree."""
+    def leaf(path, x):
+        return NamedSharding(mesh, param_spec(
+            path, x.shape, mesh, fsdp_threshold=fsdp_threshold,
+            no_attn_tp=no_attn_tp))
+    return jax.tree_util.tree_map_with_path(leaf, params_tree)
+
+
+def opt_state_shardings(mesh, opt_shapes,
+                        no_attn_tp: bool = False) -> Pytree:
+    """Optimizer state: mu/nu leaves mirror the param specs (their leaf
+    names are the param names), scalars (step) replicate."""
+    def leaf(path, x):
+        if len(x.shape) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_spec(path, x.shape, mesh,
+                                              no_attn_tp=no_attn_tp))
+    return jax.tree_util.tree_map_with_path(leaf, opt_shapes)
+
+
+def cache_spec(path, shape, mesh, *, global_batch: int) -> P:
+    name = _leaf_name(path)
+    stacked = _is_stacked(path)
+    off = 1 if stacked else 0
+    model = axis_size(mesh, "model")
+    dp = 1
+    for a in batch_axes(mesh):
+        dp *= axis_size(mesh, a)
+
+    spec = [None] * len(shape)
+    # batch dim
+    if shape[off] % dp == 0 and shape[off] >= dp:
+        spec[off] = batch_axes(mesh)
+        batch_sharded = True
+    else:
+        batch_sharded = False
+
+    prefs = CACHE_MODEL_PREFS.get(name)
+    if prefs is None:
+        # tuple states (mLSTM c/n/m, sLSTM): try dims after batch
+        prefs = list(range(1, len(shape) - off))
+    for d in prefs:
+        dd = d + off
+        if dd < len(shape) and shape[dd] % model == 0 and shape[dd] >= model:
+            spec[dd] = "model"
+            break
+
+    # unshardable batch (e.g. long_500k batch=1): shard the seq dim on data
+    if not batch_sharded and name in ("k", "v", "ckv", "k_rope"):
+        seq_dim = off + 1
+        data = axis_size(mesh, "data")
+        if spec[seq_dim] is None and shape[seq_dim] % data == 0:
+            spec[seq_dim] = "data"
+    return P(*spec)
+
+
+def cache_shardings(mesh, cache_tree: Pytree, global_batch: int) -> Pytree:
+    def leaf(path, x):
+        return NamedSharding(mesh, cache_spec(path, x.shape, mesh,
+                                              global_batch=global_batch))
+    return jax.tree_util.tree_map_with_path(leaf, cache_tree)
+
+
+def batch_shardings(mesh, batch_tree: Pytree) -> Pytree:
+    """Token batches: shard dim0 on (pod, data) when divisible."""
+    dp = 1
+    for a in batch_axes(mesh):
+        dp *= axis_size(mesh, a)
+
+    def leaf(x):
+        if x.shape and x.shape[0] % dp == 0 and x.shape[0] >= dp:
+            return NamedSharding(mesh, P(batch_axes(mesh),
+                                         *([None] * (len(x.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(x.shape))))
+    return jax.tree_util.tree_map(leaf, batch_tree)
+
+
+def replicated(mesh, tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P(*([None] * len(x.shape)))), tree)

@@ -1,0 +1,141 @@
+"""LM training driver — the end-to-end "train a ~100M model for a few
+hundred steps" entry point, with the production fault-tolerance loop:
+
+* checkpoint/restart: atomic async checkpoints every --ckpt-every steps,
+  automatic resume from the newest one (exact data replay via the
+  stateless pipeline);
+* preemption handling: SIGTERM/SIGINT trigger a final checkpoint before
+  exit (the cluster scheduler contract);
+* optional int8 gradient compression with error feedback;
+* microbatch gradient accumulation;
+* XLA latency-hiding-scheduler flags recorded below are what a real TPU
+  launch would set for compute/collective overlap (no-ops on CPU):
+    --xla_tpu_enable_latency_hiding_scheduler=true
+    --xla_tpu_overlap_compute_collective_tc=true
+
+Usage (CPU demo, ~100M model):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --d-model 512 --layers 8 --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke
+from repro.data.tokens import TokenPipeline
+from repro.train import checkpoint as ckpt_lib
+from repro.train.compression import compressed
+from repro.train.lm_trainer import make_train_step
+from repro.train.optimizer import adam, warmup_cosine_schedule
+
+
+def build_config(args):
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    overrides = {}
+    if args.d_model:
+        overrides["d_model"] = args.d_model
+    if args.layers:
+        overrides["n_layers"] = args.layers
+    if args.vocab:
+        overrides["vocab"] = args.vocab
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress-bits", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = build_config(args)
+    from repro.configs.base import param_count
+    print(f"arch={cfg.name}  params~{param_count(cfg)/1e6:.1f}M  "
+          f"batch={args.batch}x{args.seq}")
+
+    opt = adam(warmup_cosine_schedule(args.lr, 20, args.steps),
+               grad_clip=1.0)
+    if args.compress_bits:
+        opt = compressed(opt, bits=args.compress_bits)
+        print(f"int{args.compress_bits} gradient compression "
+              f"(error feedback) enabled")
+    step_fn = jax.jit(make_train_step(cfg, opt, accum_steps=args.accum))
+
+    from repro.models.model import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    start_step = 0
+
+    if args.ckpt_dir:
+        latest = ckpt_lib.latest_step(args.ckpt_dir)
+        if latest is not None:
+            print(f"resuming from checkpoint step {latest}")
+            state = ckpt_lib.restore(args.ckpt_dir, latest,
+                                     {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start_step = latest
+
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         batch=args.batch, mode="markov")
+
+    stop = {"flag": False}
+
+    def _preempt(signum, frame):
+        print(f"\n[preemption] signal {signum}: checkpointing and exiting")
+        stop["flag"] = True
+
+    signal.signal(signal.SIGTERM, _preempt)
+    signal.signal(signal.SIGINT, _preempt)
+
+    t0 = time.time()
+    losses = []
+    step = start_step
+    for step in range(start_step, args.steps):
+        batch = pipe.batch_at(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            tok_s = args.batch * args.seq * (step - start_step + 1) / \
+                max(time.time() - t0, 1e-9)
+            print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                  f"({tok_s:,.0f} tok/s)")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt_lib.save(args.ckpt_dir, step + 1,
+                          {"params": params, "opt": opt_state},
+                          blocking=False)
+        if stop["flag"]:
+            break
+
+    if args.ckpt_dir and losses:
+        ckpt_lib.save(args.ckpt_dir, step + 1,
+                      {"params": params, "opt": opt_state}, blocking=True)
+        ckpt_lib.wait_for_async()
+    if losses:
+        print(f"done: first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+    else:
+        print("nothing to do (already at target step)")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""Attention variants: GQA (llama/qwen/internlm/musicgen/chameleon/jamba)
+and MLA (DeepSeek-V2 multi-head latent attention, compressed KV cache).
+
+Both expose the same three entry points:
+    init(key, cfg)                    -> params
+    prefill(params, cfg, x, pos)      -> (out, cache)
+    decode(params, cfg, x, pos, cache)-> (out, cache)
+
+Cache layouts:
+    GQA: {"k": (B, S_max, n_kv, hd), "v": same}
+    MLA: {"ckv": (B, S_max, kv_lora), "k_rope": (B, S_max, rope_dim)}
+    (the MLA cache is the paper-faithful compressed latent — ~1/serveral
+    of the GQA cache at 128 heads)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flash import flash_attention
+from repro.models.layers import apply_rope, dense_init, head_rmsnorm
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False           # qwen3
+    qkv_bias: bool = False          # qwen1.5
+    # MLA-specific
+    kv_lora: int = 0                # >0 selects MLA
+    q_lora: int = 0                 # 0 = direct q projection
+    rope_dim: int = 64
+    v_head_dim: int = 0             # defaults to head_dim
+    # memory-bounded attention (flash schedule) for long sequences
+    flash_threshold: int = 1024
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    causal_skip: bool = False
+    score_dtype: str = "float32"   # bfloat16 halves score-tile traffic
+    kv_cache_quant: bool = False   # int8 KV cache (per-token-head scales)
+
+
+def _causal_mask(sq: int, skv: int, offset) -> jax.Array:
+    """(sq, skv) boolean mask; query i attends kv j where j <= i + offset."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    return kj <= qi
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,Hq,hd) k/v: (B,Skv,Hkv,hd) grouped; fp32 softmax."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    q = q.reshape(b, sq, hkv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), dtype),
+        "wk": dense_init(ks[1], (d, kvh, hd), dtype),
+        "wv": dense_init(ks[2], (d, kvh, hd), dtype),
+        "wo": dense_init(ks[3], (h, hd, d), dtype, scale=(h * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kvh, hd), dtype)
+        p["bv"] = jnp.zeros((kvh, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _gqa_qkv(params, cfg: AttnConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = head_rmsnorm(params["q_norm"], q)
+        k = head_rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_prefill(params, cfg: AttnConfig, x, *, pos0: int = 0):
+    b, s, _ = x.shape
+    positions = pos0 + jnp.arange(s)[None, :]
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    scale = cfg.head_dim ** -0.5
+    if s > cfg.flash_threshold:
+        out = flash_attention([q], [k], v, scale=scale, q_pos0=pos0,
+                              kv_pos0=pos0, q_chunk=cfg.q_chunk,
+                              kv_chunk=cfg.kv_chunk,
+                              causal_skip=cfg.causal_skip,
+                              score_dtype=jnp.dtype(cfg.score_dtype).type)
+    else:
+        mask = _causal_mask(s, s, 0)
+        out = _sdpa(q, k, v, mask, scale)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, {"k": k, "v": v}
+
+
+def _quant_kv(t):
+    """(B,1,H,hd) -> (int8 values, f32 per-(B,1,H,1) scales)."""
+    scale = jnp.max(jnp.abs(t), axis=-1, keepdims=True).astype(
+        jnp.float32) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127,
+                 127).astype(jnp.int8)
+    return q, scale
+
+
+def gqa_decode(params, cfg: AttnConfig, x, pos, cache):
+    """x: (B, 1, d); pos: scalar int32 (current index); cache pre-allocated
+    to S_max.  Returns (out, cache').
+
+    With ``kv_cache_quant`` the cache stores int8 values + per-token-head
+    scales (KIVI-style): 2x less HBM footprint and read traffic — the fix
+    that puts qwen1.5's 40-head MHA 32k cache under the 16 GB/chip budget.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _gqa_qkv(params, cfg, x, positions)
+    upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+        buf, val, pos, axis=1)
+    if cfg.kv_cache_quant:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        cache = {"k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
+                 "k_scale": upd(cache["k_scale"], ks),
+                 "v_scale": upd(cache["v_scale"], vs)}
+        ck = cache["k"].astype(q.dtype) * cache["k_scale"].astype(q.dtype)
+        cv = cache["v"].astype(q.dtype) * cache["v_scale"].astype(q.dtype)
+    else:
+        cache = {"k": upd(cache["k"], k), "v": upd(cache["v"], v)}
+        ck, cv = cache["k"], cache["v"]
+    skv = ck.shape[1]
+    mask = jnp.arange(skv)[None, :] <= pos          # (1, skv)
+    out = _sdpa(q, ck, cv, mask, cfg.head_dim ** -0.5)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    vd = cfg.v_head_dim or hd
+    p = {
+        # KV compression path
+        "w_dkv": dense_init(ks[0], (d, cfg.kv_lora), dtype),
+        "w_uk": dense_init(ks[1], (cfg.kv_lora, h, hd), dtype),
+        "w_uv": dense_init(ks[2], (cfg.kv_lora, h, vd), dtype),
+        "w_kr": dense_init(ks[3], (d, cfg.rope_dim), dtype),
+        "wo": dense_init(ks[4], (h, vd, d), dtype, scale=(h * vd) ** -0.5),
+    }
+    if cfg.q_lora:
+        p["w_dq"] = dense_init(ks[5], (d, cfg.q_lora), dtype)
+        p["w_uq"] = dense_init(ks[6], (cfg.q_lora, h, hd + cfg.rope_dim),
+                               dtype)
+    else:
+        p["wq"] = dense_init(ks[5], (d, h, hd + cfg.rope_dim), dtype)
+    return p
+
+
+def _mla_q(params, cfg: AttnConfig, x, positions):
+    if cfg.q_lora:
+        cq = x @ params["w_dq"]
+        q = jnp.einsum("bsl,lhk->bshk", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = q[..., :cfg.head_dim], q[..., cfg.head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_attend(params, cfg, q_nope, q_rope, ckv, k_rope, mask):
+    """Absorbed-matrix MLA attention: scores computed against the latent
+    cache directly (q_nope absorbed through w_uk), so the per-token cache
+    is kv_lora + rope_dim — the paper-faithful compressed KV."""
+    vd = cfg.v_head_dim or cfg.head_dim
+    scale = (cfg.head_dim + cfg.rope_dim) ** -0.5
+    # absorb W_uk into the query:  (B,S,H,hd) x (lora,H,hd) -> (B,S,H,lora)
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, params["w_uk"])
+    s_lat = jnp.einsum("bshl,btl->bhst", q_lat, ckv,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+    scores = (s_lat + s_rope) * scale
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    o_lat = jnp.einsum("bhst,btl->bshl", probs, ckv)
+    out = jnp.einsum("bshl,lhv->bshv", o_lat, params["w_uv"])
+    return jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+
+
+def mla_prefill(params, cfg: AttnConfig, x, *, pos0: int = 0):
+    b, s, _ = x.shape
+    positions = pos0 + jnp.arange(s)[None, :]
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    ckv = x @ params["w_dkv"]                              # (B,S,lora)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]        # (B,S,rope)
+    if s > cfg.flash_threshold:
+        # absorbed flash: latent + rope additive scores, latent values
+        q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, params["w_uk"])
+        scale = (cfg.head_dim + cfg.rope_dim) ** -0.5
+        o_lat = flash_attention(
+            [q_lat, q_rope], [ckv[:, :, None, :], k_rope[:, :, None, :]],
+            ckv[:, :, None, :], scale=scale, q_pos0=pos0, kv_pos0=pos0,
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            causal_skip=cfg.causal_skip,
+            score_dtype=jnp.dtype(cfg.score_dtype).type)
+        out = jnp.einsum("bshl,lhv->bshv", o_lat, params["w_uv"])
+        out = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+    else:
+        mask = _causal_mask(s, s, 0)
+        out = _mla_attend(params, cfg, q_nope, q_rope, ckv, k_rope, mask)
+    return out, {"ckv": ckv, "k_rope": k_rope}
+
+
+def mla_decode(params, cfg: AttnConfig, x, pos, cache):
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    ckv_new = x @ params["w_dkv"]
+    kr_new = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos,
+                                              axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new,
+                                                 pos, axis=1)
+    mask = (jnp.arange(ckv.shape[1])[None, :] <= pos)
+    out = _mla_attend(params, cfg, q_nope, q_rope, ckv, k_rope, mask)
+    return out, {"ckv": ckv, "k_rope": k_rope}

@@ -1,0 +1,157 @@
+"""Digital baselines the paper compares against: recurrent ResNet (HP twin,
+Fig. 3j) and LSTM / GRU / RNN (Lorenz96, Fig. 4g-i).  From-scratch cells.
+
+All models share one contract for the twin tasks:
+  * driven (HP):    carry -> carry', given input u_t; observable via head.
+  * autonomous (L96): next-state predictor y_t -> y_{t+1}; teacher-forced
+    training, closed-loop rollout at evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.node import dense_linear, mlp_apply, mlp_init
+
+
+# ---------------------------------------------------------------------------
+# Recurrent ResNet (paper Eq. 8): h_{t+1} = h_t + f([u_t, h_t])
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentResNet:
+    """Finite-depth discrete-transition model — the paper's digital twin
+    baseline.  Same MLP sizes as the neural ODE for parameter parity."""
+    sizes: tuple          # (u_dim + state_dim, hidden..., state_dim)
+    state_dim: int
+
+    def init(self, key):
+        return mlp_init(key, self.sizes)
+
+    def rollout(self, params, y0: jax.Array, us: jax.Array) -> jax.Array:
+        """y0: (state,); us: (T, u_dim) drive samples. Returns (T+1, state)."""
+        def step(y, u):
+            inp = jnp.concatenate([u, y], axis=-1)
+            y = y + mlp_apply(params, inp)
+            return y, y
+
+        _, ys = lax.scan(step, y0, us)
+        return jnp.concatenate([y0[None], ys], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Gated recurrent cells (from scratch)
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, din, dout, scale=None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(din)
+    kw, _ = jax.random.split(key)
+    return {"w": scale * jax.random.normal(kw, (din, dout)),
+            "b": jnp.zeros((dout,))}
+
+
+def lstm_init(key, in_dim, hidden):
+    ks = jax.random.split(key, 2)
+    return {"wx": _dense_init(ks[0], in_dim, 4 * hidden),
+            "wh": _dense_init(ks[1], hidden, 4 * hidden)}
+
+
+def lstm_step(params, carry, x):
+    h, c = carry
+    z = (dense_linear(params["wx"]["w"], params["wx"]["b"], x)
+         + dense_linear(params["wh"]["w"], params["wh"]["b"], h))
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def gru_init(key, in_dim, hidden):
+    ks = jax.random.split(key, 2)
+    return {"wx": _dense_init(ks[0], in_dim, 3 * hidden),
+            "wh": _dense_init(ks[1], hidden, 3 * hidden)}
+
+
+def gru_step(params, carry, x):
+    h = carry
+    zx = dense_linear(params["wx"]["w"], params["wx"]["b"], x)
+    zh = dense_linear(params["wh"]["w"], params["wh"]["b"], h)
+    rx, ux, cx = jnp.split(zx, 3, axis=-1)
+    rh, uh, ch = jnp.split(zh, 3, axis=-1)
+    r = jax.nn.sigmoid(rx + rh)
+    u = jax.nn.sigmoid(ux + uh)
+    c = jnp.tanh(cx + r * ch)
+    h = u * h + (1 - u) * c
+    return h, h
+
+
+def rnn_init(key, in_dim, hidden):
+    ks = jax.random.split(key, 2)
+    return {"wx": _dense_init(ks[0], in_dim, hidden),
+            "wh": _dense_init(ks[1], hidden, hidden)}
+
+
+def rnn_step(params, carry, x):
+    h = carry
+    h = jnp.tanh(dense_linear(params["wx"]["w"], params["wx"]["b"], x)
+                 + dense_linear(params["wh"]["w"], params["wh"]["b"], h))
+    return h, h
+
+
+CELLS = {
+    "lstm": (lstm_init, lstm_step,
+             lambda h: (jnp.zeros((h,)), jnp.zeros((h,)))),
+    "gru": (gru_init, gru_step, lambda h: jnp.zeros((h,))),
+    "rnn": (rnn_init, rnn_step, lambda h: jnp.zeros((h,))),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RecurrentForecaster:
+    """cell + linear head; next-step prediction of a multivariate series."""
+    cell: str
+    in_dim: int
+    hidden: int
+    out_dim: int
+
+    def init(self, key):
+        cinit, _, _ = CELLS[self.cell]
+        k1, k2 = jax.random.split(key)
+        return {"cell": cinit(k1, self.in_dim, self.hidden),
+                "head": _dense_init(k2, self.hidden, self.out_dim)}
+
+    def _step(self, params, carry, x):
+        _, cstep, _ = CELLS[self.cell]
+        carry, h = cstep(params["cell"], carry, x)
+        y = dense_linear(params["head"]["w"], params["head"]["b"], h)
+        return carry, y
+
+    def teacher_forced(self, params, ys: jax.Array) -> jax.Array:
+        """Predict ys[1:] from ys[:-1]; returns (T-1, out_dim)."""
+        _, _, c0 = CELLS[self.cell]
+        carry = c0(self.hidden)
+        step = lambda c, x: self._step(params, c, x)
+        _, preds = lax.scan(step, carry, ys[:-1])
+        return preds
+
+    def closed_loop(self, params, y0: jax.Array, num_steps: int,
+                    warmup: jax.Array | None = None) -> jax.Array:
+        """Autoregressive rollout from y0 (optionally after a warmup prefix);
+        returns (num_steps+1, out_dim) including y0."""
+        _, _, c0 = CELLS[self.cell]
+        carry = c0(self.hidden)
+        if warmup is not None:
+            step = lambda c, x: (self._step(params, c, x)[0], None)
+            carry, _ = lax.scan(step, carry, warmup)
+
+        def step(state, _):
+            carry, y = state
+            carry, y = self._step(params, carry, y)
+            return (carry, y), y
+
+        (_, _), ys = lax.scan(step, (carry, y0), None, length=num_steps)
+        return jnp.concatenate([y0[None], ys], axis=0)

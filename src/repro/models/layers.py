@@ -1,0 +1,124 @@
+"""Shared transformer layers: norms, RoPE, embeddings, MLPs.
+
+Conventions used across the model zoo:
+* params are nested dicts of jnp arrays; repeated layers are stacked on a
+  leading "layers" axis and driven by ``lax.scan``;
+* every initializer takes an explicit key; shapes follow (in, out) for
+  matmuls so ``x @ w`` applies them;
+* computation dtype = param dtype (bf16 for at-scale configs) with fp32
+  softmax/norm accumulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rmsnorm(scale: jax.Array, x: jax.Array,
+                 eps: float = 1e-6) -> jax.Array:
+    """Per-head qk-norm (qwen3): normalise over head_dim."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embedding initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype=jnp.float32, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else fan_in ** -0.5
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * dim ** -0.5).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN): SwiGLU / GELU / ReLU
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str = "swiglu",
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+         "w_down": dense_init(ks[1], (d_ff, d_model), dtype)}
+    if mlp_type == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, mlp_type: str = "swiglu"):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+    elif mlp_type == "relu":
+        h = jax.nn.relu(x @ params["w_up"])
+    else:
+        raise ValueError(mlp_type)
+    return h @ params["w_down"]
+
+
+def mlp_flops(d_model: int, d_ff: int, mlp_type: str = "swiglu") -> int:
+    mats = 3 if mlp_type == "swiglu" else 2
+    return 2 * mats * d_model * d_ff
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """(B,S,d) @ (V,d)^T in fp32 accumulation."""
+    return jnp.einsum("bsd,vd->bsv", x, table,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,161 @@
+"""Mamba selective-SSM block (Jamba's sequence mixer).
+
+Training path: chunked linear-recurrence scan — ``lax.scan`` across
+chunks carrying the (d_inner, d_state) SSM state, ``associative_scan``
+within each chunk.  This bounds the materialised (B, chunk, d_in, N)
+tensor (the TPU VMEM-friendly adaptation of Mamba's fused CUDA scan) while
+keeping wall-clock parallelism inside chunks.
+
+Decode path: O(1) recurrent update carrying (ssm_state, conv_state) —
+this is what makes the hybrid run the 500k-context cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0          # 0 -> ceil(d_model / 16)
+    chunk: int = 128
+    scan_dtype: str = "float32"   # bfloat16 halves scan-tree traffic
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def mamba_init(key, cfg: MambaConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank_
+    # S4D-real initialisation for A; dt bias for softplus in [1e-3, 1e-1]
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt = jnp.exp(jax.random.uniform(ks[0], (di,)) *
+                 (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "in_proj": dense_init(ks[1], (d, 2 * di), dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.d_conv, di)) *
+                   cfg.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[3], (di, r + 2 * n), dtype),
+        "dt_proj": dense_init(ks[4], (r, di), dtype, scale=r ** -0.5),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dtype),
+        "dt_norm": jnp.ones((r,), dtype),       # Jamba's dt/B/C RMSNorms
+        "b_norm": jnp.ones((n,), dtype),
+        "c_norm": jnp.ones((n,), dtype),
+    }
+
+
+def _dbc(params, cfg: MambaConfig, xc):
+    """Project conv output to (dt, B, C) with Jamba's RMS norms."""
+    n, r = cfg.d_state, cfg.dt_rank_
+    dbc = xc @ params["x_proj"]
+    dt, b_, c_ = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = rmsnorm({"scale": params["dt_norm"]}, dt)
+    b_ = rmsnorm({"scale": params["b_norm"]}, b_)
+    c_ = rmsnorm({"scale": params["c_norm"]}, c_)
+    dt = jax.nn.softplus(dt @ params["dt_proj"] +
+                         params["dt_bias"]).astype(jnp.float32)
+    return dt, b_.astype(jnp.float32), c_.astype(jnp.float32)
+
+
+def _causal_conv(params, cfg: MambaConfig, x):
+    """Depthwise causal conv over time: x (B, S, di)."""
+    k = cfg.d_conv
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * params["conv_w"][i]
+              for i in range(k))
+    return out + params["conv_b"]
+
+
+def mamba_prefill(params, cfg: MambaConfig, u: jax.Array):
+    """u: (B, S, d) -> (y, state) with state for continued decode."""
+    b, s, d = u.shape
+    di, n = cfg.d_inner, cfg.d_state
+    xz = u @ params["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(params, cfg, x))
+    dt, b_, c_ = _dbc(params, cfg, xc)
+
+    a = -jnp.exp(params["A_log"])                          # (di, N)
+
+    chunk = min(cfg.chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by mamba chunk {chunk}")
+    nc = s // chunk
+    sdt = jnp.dtype(cfg.scan_dtype)
+
+    def to_chunks(t):                                      # (B,S,...)->(nc,B,chunk,...)
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    dt_c, b_c, c_c = to_chunks(dt), to_chunks(b_), to_chunks(c_)
+    xc_c = to_chunks(xc.astype(jnp.float32))
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        dt_k, b_k, c_k, xc_k = inp
+        # build decay/input only for this chunk (the (B,chunk,di,N) state
+        # never materialises globally — contraction with C happens here)
+        da_k = jnp.exp(dt_k[..., None] * a).astype(sdt)
+        dbx_k = (dt_k[..., None] * b_k[:, :, None, :] *
+                 xc_k[..., None]).astype(sdt)
+        pa, pb = lax.associative_scan(assoc, (da_k, dbx_k), axis=1)
+        hs = pa.astype(jnp.float32) * h[:, None] + pb.astype(jnp.float32)
+        y_k = jnp.einsum("bsdn,bsn->bsd", hs, c_k)         # (B,chunk,di)
+        return hs[:, -1], y_k
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    h_last, ys = lax.scan(chunk_step, h0, (dt_c, b_c, c_c, xc_c))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y.astype(u.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    state = {"ssm": h_last.astype(jnp.float32),
+             "conv": x[:, -(cfg.d_conv - 1):, :]}
+    return out, state
+
+
+def mamba_decode(params, cfg: MambaConfig, u: jax.Array, state: dict):
+    """u: (B, 1, d); state {'ssm': (B,di,N), 'conv': (B,k-1,di)}."""
+    b = u.shape[0]
+    xz = u @ params["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)                       # (B,1,di)
+    conv_in = jnp.concatenate([state["conv"], x], axis=1)  # (B,k,di)
+    xc = sum(conv_in[:, i, :] * params["conv_w"][i]
+             for i in range(cfg.d_conv)) + params["conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :]                       # (B,1,di)
+    dt, b_, c_ = _dbc(params, cfg, xc)
+
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt[:, 0, :, None] * a)                    # (B,di,N)
+    dbx = (dt[:, 0, :, None] * b_[:, 0, None, :] *
+           xc.astype(jnp.float32)[:, 0, :, None])
+    h = da * state["ssm"] + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_[:, 0])
+    y = y + params["D"] * xc.astype(jnp.float32)[:, 0]
+    y = y.astype(u.dtype)[:, None, :] * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, {"ssm": h, "conv": conv_in[:, 1:, :]}

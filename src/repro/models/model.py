@@ -1,0 +1,355 @@
+"""Model assembly: config -> init / forward / decode for every arch family.
+
+Layer-stacking strategy: each architecture is decomposed into an optional
+*prelude* (unstacked, e.g. DeepSeek's first dense layer) plus N identical
+*periods* (e.g. Jamba's 8-layer Mamba/attn/MoE group, xLSTM's 6-block
+mLSTM/sLSTM group, or a single dense block).  Period parameters are
+stacked on a leading axis and driven by ``lax.scan`` — keeping the HLO a
+constant size in depth, which is what makes the 60-layer/236B dry-runs
+compile quickly and remat-cheaply.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.attention import AttnConfig
+from repro.models.layers import (dense_init, embed_init, mlp_apply, mlp_init,
+                                 rmsnorm, rmsnorm_init, unembed)
+
+Pytree = Any
+
+# Ambient batch mesh axes for activation sharding constraints.  Set by the
+# launcher (dryrun/train) before lowering; None on single-device CPU runs.
+_BATCH_AXES: tuple | None = None
+
+
+def set_batch_axes(axes):
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes) if axes else None
+
+
+def _constrain_tokens_batch(h):
+    """Pin (B, S, d) activations to batch-sharded/replicated layout at
+    block boundaries — prevents GSPMD from drifting into exotic layouts
+    inside the scanned body (observed as 'involuntary full remat')."""
+    if _BATCH_AXES is None or h.ndim != 3:
+        return h
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            h, P(_BATCH_AXES, *([None] * (h.ndim - 1))))
+    except Exception:
+        return h
+
+
+# ---------------------------------------------------------------------------
+# Block program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    mixer: str                    # gqa | mla | mamba | mlstm | slstm
+    ffn: Optional[tuple] = None   # ('mlp', width) | ('moe',) | None
+
+
+def block_program(cfg: ArchConfig):
+    """Returns (prelude: list[BlockSpec], period: list[BlockSpec], n_periods)."""
+    if cfg.pattern == "dense":
+        mixer = cfg.attn
+        if cfg.moe is None:
+            return [], [BlockSpec(mixer, ("mlp", cfg.d_ff))], cfg.n_layers
+        prelude = [BlockSpec(mixer, ("mlp", cfg.d_ff_dense_))
+                   ] * cfg.first_k_dense
+        rem = cfg.n_layers - cfg.first_k_dense
+        if cfg.moe_every == 1:
+            return prelude, [BlockSpec(mixer, ("moe",))], rem
+        period = [BlockSpec(mixer, ("moe",) if i == cfg.moe_offset
+                            else ("mlp", cfg.d_ff))
+                  for i in range(cfg.moe_every)]
+        assert rem % cfg.moe_every == 0
+        return prelude, period, rem // cfg.moe_every
+    if cfg.pattern == "jamba":
+        assert cfg.n_layers % cfg.jamba_period == 0
+        period = []
+        for pos in range(cfg.jamba_period):
+            mixer = "gqa" if pos == cfg.jamba_attn_pos else "mamba"
+            ffn = ("moe",) if (pos % 2 == 1 and cfg.moe is not None) \
+                else ("mlp", cfg.d_ff)
+            period.append(BlockSpec(mixer, ffn))
+        return [], period, cfg.n_layers // cfg.jamba_period
+    if cfg.pattern == "xlstm":
+        assert cfg.n_layers % cfg.xlstm_period == 0
+        period = [BlockSpec("mlstm")] * (cfg.xlstm_period - 1) + \
+            [BlockSpec("slstm")]
+        return [], period, cfg.n_layers // cfg.xlstm_period
+    raise ValueError(cfg.pattern)
+
+
+def attn_config(cfg: ArchConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        head_dim=cfg.hd, rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+        qkv_bias=cfg.qkv_bias, kv_lora=cfg.mla_kv_lora,
+        q_lora=cfg.mla_q_lora, rope_dim=cfg.mla_rope_dim,
+        v_head_dim=cfg.hd, flash_threshold=cfg.flash_threshold,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        causal_skip=cfg.attn_causal_skip,
+        score_dtype=cfg.attn_score_dtype,
+        kv_cache_quant=cfg.kv_cache_quant)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, spec: BlockSpec) -> dict:
+    dtype = cfg.jdtype
+    ks = jax.random.split(key, 4)
+    p = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if spec.mixer == "gqa":
+        p["mixer"] = attn_lib.gqa_init(ks[0], attn_config(cfg), dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = attn_lib.mla_init(ks[0], attn_config(cfg), dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_lib.mamba_init(ks[0], cfg.mamba, dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm_lib.mlstm_init(ks[0], cfg.xlstm_cfg(), dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm_lib.slstm_init(ks[0], cfg.xlstm_cfg(), dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn is not None:
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        if spec.ffn[0] == "mlp":
+            p["ffn"] = mlp_init(ks[1], cfg.d_model, spec.ffn[1],
+                                cfg.mlp_type, dtype)
+        else:
+            p["ffn"] = moe_lib.moe_init(ks[1], cfg.moe, cfg.d_model, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Pytree:
+    prelude, period, n_periods = block_program(cfg)
+    if cfg.ode_depth:
+        n_periods = 1              # weight-tied continuous-depth stack
+    ks = jax.random.split(key, 4 + len(prelude))
+    dtype = cfg.jdtype
+    params = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(ks[1], cfg.vocab, cfg.d_model, dtype)
+    params["prelude"] = [
+        _init_block(ks[4 + i], cfg, spec) for i, spec in enumerate(prelude)]
+
+    def init_period(k):
+        kks = jax.random.split(k, len(period))
+        return {f"b{i}": _init_block(kks[i], cfg, spec)
+                for i, spec in enumerate(period)}
+
+    params["stack"] = jax.vmap(init_period)(
+        jax.random.split(ks[2], n_periods))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, cfg: ArchConfig, spec: BlockSpec, h, *, pos0=0,
+                 want_cache=False):
+    acfg = attn_config(cfg)
+    cache = None
+    x = rmsnorm(p["norm1"], h, cfg.norm_eps)
+    if spec.mixer == "gqa":
+        out, cache = attn_lib.gqa_prefill(p["mixer"], acfg, x, pos0=pos0)
+    elif spec.mixer == "mla":
+        out, cache = attn_lib.mla_prefill(p["mixer"], acfg, x, pos0=pos0)
+    elif spec.mixer == "mamba":
+        out, cache = mamba_lib.mamba_prefill(p["mixer"], cfg.mamba, x)
+    elif spec.mixer == "mlstm":
+        out, cache = xlstm_lib.mlstm_prefill(p["mixer"], cfg.xlstm_cfg(), x)
+    elif spec.mixer == "slstm":
+        out, cache = xlstm_lib.slstm_prefill(p["mixer"], cfg.xlstm_cfg(), x)
+    h = _constrain_tokens_batch(h + out)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn is not None:
+        x = rmsnorm(p["norm2"], h, cfg.norm_eps)
+        if spec.ffn[0] == "mlp":
+            h = h + mlp_apply(p["ffn"], x, cfg.mlp_type)
+        else:
+            y, aux = moe_lib.moe_apply(p["ffn"], cfg.moe, x)
+            h = h + y
+        h = _constrain_tokens_batch(h)
+    if not want_cache:
+        cache = None
+    return h, aux, cache
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)      # full remat
+
+
+def forward(params: Pytree, cfg: ArchConfig, tokens: jax.Array,
+            *, return_cache: bool = False):
+    """tokens (B, S) int32 -> (logits (B,S,V) f32, aux, cache|None)."""
+    prelude, period, n_periods = block_program(cfg)
+    h = _constrain_tokens_batch(params["embed"][tokens].astype(cfg.jdtype))
+    aux = jnp.zeros((), jnp.float32)
+    pre_caches = []
+    for p, spec in zip(params["prelude"], prelude):
+        h, a, c = _apply_block(p, cfg, spec, h, want_cache=return_cache)
+        aux = aux + a
+        pre_caches.append(c)
+
+    if cfg.ode_depth:
+        # Paper technique: the stacked residual group as a neural ODE
+        # (weight-tied, RK4 in pseudo-depth over the original depth).
+        from repro.core.node import ContinuousDepthBlock
+        group = jax.tree_util.tree_map(lambda x: x[0], params["stack"])
+
+        def residual(gp, hh):
+            out = hh
+            for i, spec in enumerate(period):
+                out, _, _ = _apply_block(gp[f"b{i}"], cfg, spec, out)
+            return out - hh
+
+        _, _, real_n = block_program(cfg)
+        blk = ContinuousDepthBlock(residual, depth=float(real_n),
+                                   num_steps=cfg.ode_depth)
+        h = blk(group, h)
+        stack_caches = None
+    else:
+        def body(carry, layer):
+            h, aux = carry
+            caches = {}
+            for i, spec in enumerate(period):
+                h, a, c = _apply_block(layer[f"b{i}"], cfg, spec, h,
+                                       want_cache=return_cache)
+                aux = aux + a
+                caches[f"b{i}"] = c
+            return (h, aux), caches if return_cache else None
+
+        (h, aux), stack_caches = lax.scan(_remat(body, cfg), (h, aux),
+                                          params["stack"])
+
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(h, table)
+    cache = {"prelude": pre_caches, "stack": stack_caches} \
+        if return_cache else None
+    return logits, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token with pre-allocated caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> Pytree:
+    prelude, period, n_periods = block_program(cfg)
+    dtype = cfg.jdtype
+    acfg = attn_config(cfg)
+
+    def block_cache(spec: BlockSpec):
+        if spec.mixer == "gqa":
+            shape = (batch, max_seq, cfg.n_kv, cfg.hd)
+            if cfg.kv_cache_quant:
+                sshape = (batch, max_seq, cfg.n_kv, 1)
+                return {"k": jnp.zeros(shape, jnp.int8),
+                        "v": jnp.zeros(shape, jnp.int8),
+                        "k_scale": jnp.zeros(sshape, jnp.float32),
+                        "v_scale": jnp.zeros(sshape, jnp.float32)}
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if spec.mixer == "mla":
+            return {"ckv": jnp.zeros((batch, max_seq, cfg.mla_kv_lora), dtype),
+                    "k_rope": jnp.zeros((batch, max_seq, cfg.mla_rope_dim),
+                                        dtype)}
+        if spec.mixer == "mamba":
+            mc = cfg.mamba
+            return {"ssm": jnp.zeros((batch, mc.d_inner, mc.d_state),
+                                     jnp.float32),
+                    "conv": jnp.zeros((batch, mc.d_conv - 1, mc.d_inner),
+                                      dtype)}
+        if spec.mixer == "mlstm":
+            xc = cfg.xlstm_cfg()
+            return (jnp.zeros((batch, xc.n_heads, xc.head_dim, xc.head_dim),
+                              jnp.float32),
+                    jnp.zeros((batch, xc.n_heads, xc.head_dim), jnp.float32),
+                    jnp.full((batch, xc.n_heads), -1e30, jnp.float32))
+        if spec.mixer == "slstm":
+            return xlstm_lib.slstm_zero_state(cfg.xlstm_cfg(), batch)
+        raise ValueError(spec.mixer)
+
+    stack = {f"b{i}": jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape),
+        block_cache(spec)) for i, spec in enumerate(period)}
+    return {"prelude": [block_cache(s) for s in prelude], "stack": stack}
+
+
+def _decode_block(p, cfg: ArchConfig, spec: BlockSpec, h, pos, cache):
+    acfg = attn_config(cfg)
+    x = rmsnorm(p["norm1"], h, cfg.norm_eps)
+    if spec.mixer == "gqa":
+        out, cache = attn_lib.gqa_decode(p["mixer"], acfg, x, pos, cache)
+    elif spec.mixer == "mla":
+        out, cache = attn_lib.mla_decode(p["mixer"], acfg, x, pos, cache)
+    elif spec.mixer == "mamba":
+        out, cache = mamba_lib.mamba_decode(p["mixer"], cfg.mamba, x, cache)
+    elif spec.mixer == "mlstm":
+        out, cache = xlstm_lib.mlstm_decode(p["mixer"], cfg.xlstm_cfg(), x,
+                                            cache)
+    elif spec.mixer == "slstm":
+        out, cache = xlstm_lib.slstm_decode(p["mixer"], cfg.xlstm_cfg(), x,
+                                            cache)
+    h = _constrain_tokens_batch(h + out)
+    if spec.ffn is not None:
+        x = rmsnorm(p["norm2"], h, cfg.norm_eps)
+        if spec.ffn[0] == "mlp":
+            h = h + mlp_apply(p["ffn"], x, cfg.mlp_type)
+        else:
+            y, _ = moe_lib.moe_apply(p["ffn"], cfg.moe, x)
+            h = h + y
+    return h, cache
+
+
+def decode_step(params: Pytree, cfg: ArchConfig, tokens: jax.Array,
+                pos, cache: Pytree):
+    """tokens (B, 1); pos: scalar current position; returns (logits, cache')."""
+    if cfg.ode_depth:
+        raise NotImplementedError("ODE-depth mode is train/prefill only")
+    prelude, period, n_periods = block_program(cfg)
+    h = _constrain_tokens_batch(params["embed"][tokens].astype(cfg.jdtype))
+    new_pre = []
+    for p, spec, c in zip(params["prelude"], prelude, cache["prelude"]):
+        h, c2 = _decode_block(p, cfg, spec, h, pos, c)
+        new_pre.append(c2)
+
+    def body(h, xs):
+        layer, lcache = xs
+        new_cache = {}
+        for i, spec in enumerate(period):
+            h, new_cache[f"b{i}"] = _decode_block(
+                layer[f"b{i}"], cfg, spec, h, pos, lcache[f"b{i}"])
+        return h, new_cache
+
+    h, new_stack = lax.scan(body, h, (params["stack"], cache["stack"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(h, table)
+    return logits, {"prelude": new_pre, "stack": new_stack}

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts layer: shared + routed experts, top-k routing,
+capacity-bounded scatter dispatch (GShard-style, static shapes).
+
+Covers DeepSeek-V2 (2 shared + 64/160 routed, top-6, softmax gates) and
+Jamba (16 routed, top-2, renormalised gates).  Dispatch is O(T*k) memory:
+tokens are argsorted by expert, given a position-in-expert, and scattered
+into an (E, C, d) buffer (over-capacity tokens drop, the standard
+trade-off); expert FFNs run as one batched einsum over the expert axis —
+the axis the mesh shards (EP).  A Switch-style load-balancing aux loss is
+returned for training.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert FFN width
+    n_shared: int = 0              # always-active shared experts
+    capacity_factor: float = 1.25
+    norm_topk: bool = False        # renormalise the top-k gates (Mixtral)
+    aux_weight: float = 0.01
+    mlp_type: str = "swiglu"
+
+
+def moe_init(key, cfg: MoEConfig, d_model: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 7)
+    e, f = cfg.n_experts, cfg.d_ff
+    p = {
+        "router": dense_init(ks[0], (d_model, e), jnp.float32),
+        "w_up": dense_init(ks[1], (e, d_model, f), dtype),
+        "w_down": dense_init(ks[2], (e, f, d_model), dtype),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = dense_init(ks[3], (e, d_model, f), dtype)
+    if cfg.n_shared:
+        fs = cfg.n_shared * f
+        p["sh_up"] = dense_init(ks[4], (d_model, fs), dtype)
+        p["sh_down"] = dense_init(ks[5], (fs, d_model), dtype)
+        if cfg.mlp_type == "swiglu":
+            p["sh_gate"] = dense_init(ks[6], (d_model, fs), dtype)
+    return p
+
+
+def _expert_ffn(params, cfg: MoEConfig, x):           # x: (G, E, C, d)
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x, params["w_gate"]))
+        h = h * jnp.einsum("gecd,edf->gecf", x, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", x, params["w_up"]))
+    return jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+
+
+def _shared_ffn(params, cfg: MoEConfig, x):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["sh_gate"]) * (x @ params["sh_up"])
+    else:
+        h = jax.nn.gelu(x @ params["sh_up"])
+    return h @ params["sh_down"]
+
+
+def capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(4, -(-c // 4) * 4)   # round up to a multiple of 4
+
+
+def moe_apply(params, cfg: MoEConfig, x: jax.Array):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    GShard-style GROUPED dispatch: each batch row is its own dispatch
+    group (capacity enforced per group), and the scatter/gather runs
+    under ``vmap`` over the batch dim.  This keeps every scatter local
+    to the data shard that owns the row — without the group dim, GSPMD
+    replicates the (T_global*k, d) scatter across the model axis and
+    all-reduces it (measured: 4.2 TB/step on jamba train_4k, §Perf).
+    """
+    b, s, d = x.shape
+    k = cfg.top_k
+    e = cfg.n_experts
+    c = capacity(s, cfg)
+
+    logits = (x.astype(jnp.float32) @ params["router"])       # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                      # (B, S, k)
+    if cfg.norm_topk:
+        gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+
+    def dispatch_one(xg, idx_g, gates_g):
+        """xg: (S, d); returns (buf (E*C, d), st, sg, valid, slot)."""
+        e_flat = idx_g.reshape(-1)                            # (S*k,)
+        g_flat = gates_g.reshape(-1)
+        tok = jnp.repeat(jnp.arange(s), k)
+        order = jnp.argsort(e_flat)                           # stable
+        se, st, sg = e_flat[order], tok[order], g_flat[order]
+        starts = jnp.searchsorted(se, jnp.arange(e))          # (E,)
+        pos = jnp.arange(s * k) - starts[se]
+        valid = pos < c
+        slot = jnp.where(valid, se * c + pos, e * c)          # OOB -> drop
+        buf = jnp.zeros((e * c, d), x.dtype)
+        buf = buf.at[slot].set(xg[st], mode="drop")
+        return buf, st, sg, valid, slot
+
+    bufs, st, sg, valid, slot = jax.vmap(dispatch_one)(x, idx, gates)
+    out = _expert_ffn(params, cfg, bufs.reshape(b, e, c, d))
+    out = out.reshape(b, e * c, d)
+
+    def combine_one(out_g, st_g, sg_g, valid_g, slot_g):
+        slot_safe = jnp.minimum(slot_g, e * c - 1)
+        contrib = out_g[slot_safe] * \
+            (sg_g * valid_g)[:, None].astype(x.dtype)
+        return jnp.zeros((s, d), x.dtype).at[st_g].add(contrib)
+
+    y = jax.vmap(combine_one)(out, st, sg, valid, slot)
+
+    if cfg.n_shared:
+        y = y + _shared_ffn(params, cfg, x)
+
+    # ---- Switch load-balance aux loss ------------------------------------
+    me = probs.reshape(-1, e).mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0) / (b * s * k)
+    aux = cfg.aux_weight * e * jnp.sum(me * ce)
+    return y, aux

@@ -1,0 +1,266 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, chunkwise-
+parallel training, O(1) recurrent decode) and sLSTM (scalar memory,
+sequential recurrence with exponential gating).
+
+The mLSTM training path uses the chunkwise linear-attention form with
+log-space gate stabilisation — within-chunk parallel (L x L per head,
+VPU/MXU friendly) and an inter-chunk carried state (C, n, m), the same
+schedule as the Mamba chunked scan.  The sLSTM is inherently sequential
+(its recurrent gates read h_{t-1}); it runs as a ``lax.scan`` — noted in
+DESIGN.md as the faithful (non-parallelisable) structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int
+    m_proj_factor: float = 2.0     # mLSTM up-projection
+    s_proj_factor: float = 4.0 / 3.0
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.m_proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "up": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di))
+                   * cfg.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], (di, di), dtype),
+        "wk": dense_init(ks[3], (di, di), dtype),
+        "wv": dense_init(ks[4], (di, di), dtype),
+        "wi": dense_init(ks[5], (di, h), jnp.float32),
+        "wf": dense_init(ks[6], (di, h), jnp.float32),
+        "gn": jnp.ones((di,), dtype),
+        "down": dense_init(ks[7], (di, d), dtype),
+    }
+
+
+def _conv_silu(params, cfg, x):
+    k = cfg.d_conv
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * params["conv_w"][i]
+              for i in range(k)) + params["conv_b"]
+    return jax.nn.silu(out)
+
+
+def _heads(x, h):
+    b, s, di = x.shape
+    return x.reshape(b, s, h, di // h)
+
+
+def _mlstm_chunk(q, k, v, lgi, lgf, state):
+    """One chunk of the stabilised chunkwise mLSTM.
+
+    q,k,v: (B,H,L,dk); lgi/lgf: (B,H,L) log input gate preact / log f.
+    state: (c (B,H,dk,dv), n (B,H,dk), m (B,H)).  Returns (h, state').
+    """
+    bsz, nh, L, dk = q.shape
+    cum = jnp.cumsum(lgf, axis=-1)                         # (B,H,L)
+    # intra-chunk decay matrix D_ij = cum_i - cum_j + lgi_j  (j <= i)
+    D = cum[..., :, None] - cum[..., None, :] + lgi[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(mask, D, -jnp.inf)
+    m_intra = jnp.max(D, axis=-1)                          # (B,H,L)
+    c_prev, n_prev, m_prev = state
+    m_inter = cum + m_prev[..., None]
+    m = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+
+    scale = dk ** -0.5
+    qk = jnp.einsum("bhld,bhkd->bhlk", q, k,
+                    preferred_element_type=jnp.float32) * scale
+    S = qk * jnp.exp(D - m[..., :, None])
+    inter_w = jnp.exp(m_inter - m)                         # (B,H,L)
+    num = (jnp.einsum("bhlk,bhkv->bhlv", S, v) +
+           inter_w[..., None] *
+           jnp.einsum("bhld,bhdv->bhlv", q * scale, c_prev))
+    den = (jnp.abs(S.sum(-1) +
+                   inter_w * jnp.einsum("bhld,bhd->bhl", q * scale, n_prev)))
+    den = jnp.maximum(den, jnp.exp(-m))
+    h = num / den[..., None]
+
+    # state update to the chunk end
+    cL = cum[..., -1]                                      # (B,H)
+    log_wj = cL[..., None] - cum + lgi                     # (B,H,L)
+    m_new = jnp.maximum(m_prev + cL, jnp.max(log_wj, axis=-1))
+    m_new = jnp.maximum(m_new, -1e30)
+    carry_scale = jnp.exp(m_prev + cL - m_new)             # (B,H)
+    kv_w = jnp.exp(log_wj - m_new[..., None])
+    c_new = (carry_scale[..., None, None] * c_prev +
+             jnp.einsum("bhl,bhld,bhlv->bhdv", kv_w, k, v))
+    n_new = (carry_scale[..., None] * n_prev +
+             jnp.einsum("bhl,bhld->bhd", kv_w, k))
+    return h, (c_new, n_new, m_new)
+
+
+def mlstm_prefill(params, cfg: XLSTMConfig, x: jax.Array):
+    b, s, _ = x.shape
+    h_, hd = cfg.n_heads, cfg.head_dim
+    up = x @ params["up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = _conv_silu(params, cfg, xm)
+    q = _heads(xc @ params["wq"], h_).swapaxes(1, 2).astype(jnp.float32)
+    k = _heads(xc @ params["wk"], h_).swapaxes(1, 2).astype(jnp.float32)
+    v = _heads(xm @ params["wv"], h_).swapaxes(1, 2).astype(jnp.float32)
+    lgi = (xm.astype(jnp.float32) @ params["wi"]).swapaxes(1, 2)  # (B,H,S)
+    lgf = jax.nn.log_sigmoid(
+        (xm.astype(jnp.float32) @ params["wf"]).swapaxes(1, 2))
+
+    L = min(cfg.chunk, s)
+    if s % L:
+        raise ValueError(f"seq {s} % chunk {L} != 0")
+    nc = s // L
+
+    def split_c(t):  # (B,H,S,...) -> (nc, B,H,L,...)
+        return t.reshape(t.shape[0], t.shape[1], nc, L,
+                         *t.shape[3:]).swapaxes(0, 2).swapaxes(1, 2)
+
+    qc, kc, vc = split_c(q), split_c(k), split_c(v)
+    lgic, lgfc = split_c(lgi), split_c(lgf)
+
+    state = (jnp.zeros((b, h_, hd, hd), jnp.float32),
+             jnp.zeros((b, h_, hd), jnp.float32),
+             jnp.full((b, h_), -1e30, jnp.float32))
+
+    def step(st, inp):
+        qk, kk, vk, ik, fk = inp
+        hk, st = _mlstm_chunk(qk, kk, vk, ik, fk, st)
+        return st, hk
+
+    state, hs = lax.scan(step, state, (qc, kc, vc, lgic, lgfc))
+    hs = hs.swapaxes(0, 2).swapaxes(1, 2).reshape(b, h_, s, hd)
+    hs = hs.swapaxes(1, 2).reshape(b, s, cfg.d_inner).astype(x.dtype)
+    hs = rmsnorm({"scale": params["gn"]}, hs)              # group-norm-ish
+    y = (hs + xc) * jax.nn.silu(z)
+    return y @ params["down"], state
+
+
+def mlstm_decode(params, cfg: XLSTMConfig, x: jax.Array, state):
+    """x: (B,1,d); state (c,n,m) as in prefill."""
+    b = x.shape[0]
+    h_, hd = cfg.n_heads, cfg.head_dim
+    up = x @ params["up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    # NOTE: decode drops the short conv's history (k-1 tokens) for state
+    # economy; xLSTM's conv is a local smoother and this is the standard
+    # serving simplification. (A conv cache could be added as in mamba.)
+    xc = jax.nn.silu(xm * params["conv_w"][-1] + params["conv_b"])
+    q = (xc @ params["wq"]).reshape(b, h_, hd).astype(jnp.float32)
+    k = (xc @ params["wk"]).reshape(b, h_, hd).astype(jnp.float32)
+    v = (xm @ params["wv"]).reshape(b, h_, hd).astype(jnp.float32)
+    lgi = (xm.astype(jnp.float32) @ params["wi"]).reshape(b, h_)
+    lgf = jax.nn.log_sigmoid(
+        (xm.astype(jnp.float32) @ params["wf"])).reshape(b, h_)
+
+    c_prev, n_prev, m_prev = state
+    m_new = jnp.maximum(lgf + m_prev, lgi)
+    f_s = jnp.exp(lgf + m_prev - m_new)
+    i_s = jnp.exp(lgi - m_new)
+    c = f_s[..., None, None] * c_prev + i_s[..., None, None] * \
+        jnp.einsum("bhd,bhv->bhdv", k, v)
+    n = f_s[..., None] * n_prev + i_s[..., None] * k
+    scale = hd ** -0.5
+    num = jnp.einsum("bhd,bhdv->bhv", q * scale, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q * scale, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    h = rmsnorm({"scale": params["gn"]}, h)
+    y = (h + xc[:, None, :].reshape(b, 1, -1)) * jax.nn.silu(z)
+    return y @ params["down"], (c, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: XLSTMConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    df = int(cfg.s_proj_factor * d)
+    return {
+        "wx": dense_init(ks[0], (d, 4 * d), dtype),        # z,i,f,o inputs
+        "r": (jax.random.normal(ks[1], (h, hd, 4 * hd))
+              * hd ** -0.5).astype(dtype),                 # block-diag recur
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "gn": jnp.ones((d,), dtype),
+        "up_gate": dense_init(ks[2], (d, df), dtype),
+        "up": dense_init(ks[3], (d, df), dtype),
+        "down": dense_init(ks[4], (df, d), dtype),
+    }
+
+
+def _slstm_step(params, cfg: XLSTMConfig, carry, wx_t):
+    """carry: (h, c, n, m) each (B, H, hd) / (B, H, hd) scalars per unit."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    b = h_prev.shape[0]
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    rec = jnp.einsum("bhd,hdk->bhk", h_prev, params["r"])  # (B,H,4*hd)
+    zifo = (wx_t.reshape(b, nh, 4 * hd) + rec).astype(jnp.float32) \
+        + params["b"].reshape(nh, 4 * hd)
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)               # (B,H,hd)
+    lgf = jax.nn.log_sigmoid(f)
+    m = jnp.maximum(lgf + m_prev, i)
+    i_s = jnp.exp(i - m)
+    f_s = jnp.exp(lgf + m_prev - m)
+    c = f_s * c_prev + i_s * jnp.tanh(z)
+    n = jnp.maximum(f_s * n_prev + i_s, 1e-6)
+    h = jax.nn.sigmoid(o) * c / n
+    return (h.astype(h_prev.dtype), c, n, m)
+
+
+def slstm_zero_state(cfg: XLSTMConfig, batch: int):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    z32 = jnp.zeros((batch, nh, hd), jnp.float32)
+    return (z32, z32, z32, jnp.full((batch, nh, hd), -1e30, jnp.float32))
+
+
+def slstm_prefill(params, cfg: XLSTMConfig, x: jax.Array):
+    b, s, d = x.shape
+    wx = x @ params["wx"]                                  # (B,S,4d)
+
+    def step(carry, wx_t):
+        carry = _slstm_step(params, cfg, carry, wx_t)
+        return carry, carry[0]
+
+    carry, hs = lax.scan(step, slstm_zero_state(cfg, b), wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    hs = rmsnorm({"scale": params["gn"]}, hs)
+    y = jax.nn.gelu(hs @ params["up_gate"]) * (hs @ params["up"])
+    return y @ params["down"], carry
+
+
+def slstm_decode(params, cfg: XLSTMConfig, x: jax.Array, state):
+    b = x.shape[0]
+    wx = (x @ params["wx"])[:, 0, :]
+    carry = _slstm_step(params, cfg, state, wx)
+    h = carry[0].reshape(b, 1, cfg.d_model).astype(x.dtype)
+    h = rmsnorm({"scale": params["gn"]}, h)
+    y = jax.nn.gelu(h @ params["up_gate"]) * (h @ params["up"])
+    return y @ params["down"], carry

@@ -1,0 +1,171 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+TPU v5e hardware model (per chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI link bandwidth ~50 GB/s
+
+Terms (seconds, per step, per chip — the compiled SPMD module is the
+per-device program, so cost_analysis() numbers are already per chip):
+
+    compute    = HLO_FLOPs / peak
+    memory     = HLO_bytes_accessed / HBM_bw
+    collective = sum(max(operand, result) bytes over collective ops) / link_bw
+
+collective bytes come from parsing the optimised HLO text (they are NOT
+in cost_analysis); MODEL_FLOPS = 6*N_active*tokens (train) or
+2*N_active*tokens (prefill/decode), and the ratio MODEL_FLOPS /
+(HLO_FLOPs * chips) exposes remat/attention/dispatch overcompute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Sum bytes over every array type mentioned in a type string
+    (handles tuples '(bf16[..], bf16[..])')."""
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-type traffic from optimised HLO (per device).
+
+    For each collective instruction takes max(result bytes, operand bytes)
+    as the per-device traffic proxy.  ``-done`` halves of async pairs are
+    skipped (the ``-start`` carries the shapes).
+    """
+    out = {k: 0 for k in _COLL_OPS}
+    count = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        lhs, rhs = ls.split(" = ", 1)
+        m = re.match(r"(\([^)]*\)|\S+)\s+(%?[\w-]+)", rhs)
+        if not m:
+            continue
+        result_type, opname = m.group(1), m.group(2).lstrip("%")
+        base = None
+        for op in _COLL_OPS:
+            if opname == op or opname.startswith(op + "-start") or \
+                    opname.startswith(op + "."):
+                base = op
+                break
+        if base is None or opname.endswith("-done"):
+            continue
+        res_b = _type_bytes(result_type)
+        # operand types appear inside the parens of the call
+        args = rhs[rhs.find("("):]
+        opnd_b = _type_bytes(args)
+        out[base] += max(res_b, opnd_b)
+        count[base] += 1
+    out["total"] = sum(out[k] for k in _COLL_OPS)
+    out["counts"] = count
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops_global: float
+    coll_breakdown: dict
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_global = self.hlo_flops_per_chip * self.chips
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the per-chip compute roofline the step achieves,
+        counting only MODEL (useful) FLOPs: the score we hillclimb."""
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        t_useful = (self.model_flops_global / self.chips) / PEAK_FLOPS
+        return t_useful / max(t_step, 1e-30)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops_global,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference."""
+    from repro.configs.base import active_param_count
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def from_artifact(path: str) -> Roofline:
+    with open(path) as f:
+        d = json.load(f)
+    return Roofline(**{k: d[k] for k in (
+        "arch", "shape", "mesh", "chips", "hlo_flops_per_chip",
+        "hlo_bytes_per_chip", "coll_bytes_per_chip", "model_flops_global",
+        "coll_breakdown")})

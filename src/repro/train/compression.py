@@ -1,0 +1,80 @@
+"""Gradient compression for the data-parallel reduction.
+
+At 1000+ nodes the DP gradient all-reduce crosses DCI; int8 compression
+with error feedback (1-bit-Adam-style residual accumulation) cuts that
+traffic 4x with negligible quality loss.  Implemented as an *optimizer
+transform* so the error-feedback buffers live in optimizer state and are
+checkpointed/resharded for free:
+
+    opt = compressed(adam(3e-4), bits=8)
+
+The quantise->dequantise round trip happens *before* the (GSPMD-inserted)
+mean over the data axis; XLA then reduces the small-dynamic-range values.
+On real fleets the transport itself would move int8 — here the transform
+preserves the numerics (quantisation error + feedback) so convergence
+behaviour is faithfully testable, and the traffic saving is accounted in
+the roofline's collective term when enabled.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer
+
+_tree_map = jax.tree_util.tree_map
+
+
+class CompressedState(NamedTuple):
+    inner: object
+    error: object          # error-feedback residuals (same tree as grads)
+
+
+def _quantize_dequantize(g: jax.Array, bits: int):
+    """Symmetric per-tensor int quantisation; returns (deq, residual)."""
+    levels = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(g)) / levels + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -levels, levels)
+    deq = q * scale
+    return deq, g - deq
+
+
+def topk_sparsify(g: jax.Array, frac: float):
+    """Keep the largest-|.| fraction of entries (deep-gradient-compression
+    style); returns (sparse, residual)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(g) >= thresh
+    kept = jnp.where(mask, g, 0.0)
+    return kept, g - kept
+
+
+def compressed(inner: Optimizer, bits: int = 8,
+               topk_frac: float | None = None) -> Optimizer:
+    """Wrap an optimizer with compress(grad + error_feedback)."""
+
+    def init(params):
+        return CompressedState(
+            inner=inner.init(params),
+            error=_tree_map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params))
+
+    def update(grads, state: CompressedState, params=None):
+        def comp(g, e):
+            g = g.astype(jnp.float32) + e
+            if topk_frac is not None:
+                return topk_sparsify(g, topk_frac)
+            return _quantize_dequantize(g, bits)
+
+        pairs = _tree_map(comp, grads, state.error)
+        cgrads = _tree_map(lambda p: p[0], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        error = _tree_map(lambda p: p[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        updates, inner_state = inner.update(cgrads, state.inner, params)
+        return updates, CompressedState(inner=inner_state, error=error)
+
+    return Optimizer(init, update)

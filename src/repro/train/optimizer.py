@@ -1,0 +1,139 @@
+"""From-scratch optimizers (no optax in the environment).
+
+Minimal GradientTransformation-style API:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Includes Adam/AdamW (the paper trains with Adam), global-norm clipping,
+and warmup-cosine / constant schedules for the LM trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+_tree_map = jax.tree_util.tree_map
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple]
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> Pytree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return _tree_map(lambda x: x * scale, tree)
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int,
+                           total_steps: int,
+                           final_frac: float = 0.1) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) *
+                         0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def adam(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         grad_clip: Optional[float] = None,
+         mu_dtype=None) -> Optimizer:
+    """Adam / AdamW (decoupled weight decay) with optional global-norm clip."""
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        mu = _tree_map(lambda p: jnp.zeros_like(p, dtype=mu_dtype or p.dtype),
+                       params)
+        nu = _tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def update(grads, state: AdamState, params=None):
+        if grad_clip is not None:
+            grads = clip_by_global_norm(grads, grad_clip)
+        step = state.step + 1
+        mu = _tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                       state.mu, grads)
+        nu = _tree_map(
+            lambda v, g: b2 * v + (1 - b2) *
+            jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v / bc2
+            u = -lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and params is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype if p is not None else m.dtype)
+
+        if params is not None:
+            updates = _tree_map(upd, mu, nu, params)
+        else:
+            updates = _tree_map(lambda m, v: upd(m, v, None), mu, nu)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.1, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return _tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0,
+        grad_clip: Optional[float] = None) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return (jnp.zeros((), jnp.int32),
+                _tree_map(jnp.zeros_like, params) if momentum else None)
+
+    def update(grads, state, params=None):
+        del params
+        if grad_clip is not None:
+            grads = clip_by_global_norm(grads, grad_clip)
+        step, vel = state
+        step = step + 1
+        lr_t = sched(step)
+        if momentum:
+            vel = _tree_map(lambda v, g: momentum * v + g, vel, grads)
+            upd = _tree_map(lambda v: -lr_t * v, vel)
+        else:
+            upd = _tree_map(lambda g: -lr_t * g, grads)
+        return upd, (step, vel)
+
+    return Optimizer(init, update)

@@ -1,0 +1,203 @@
+"""End-to-end twin experiment recipes shared by examples, benchmarks, tests.
+
+Each recipe returns a dict of metrics so the benchmark harness can emit
+one CSV row per paper table/figure entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analogue import AnalogueSpec
+from repro.core.losses import dtw, l1, lyapunov_time, max_lyapunov_exponent, mre
+from repro.core.twin import make_autonomous_twin, make_driven_twin
+from repro.data import hp_memristor as hp
+from repro.data import lorenz96 as l96
+from repro.train import trainer
+from repro.train.optimizer import adam, warmup_cosine_schedule
+
+HP_AMP, HP_FREQ = 2.0, 2.0
+L96_DT = 0.0025
+
+
+# ---------------------------------------------------------------------------
+# HP memristor twin (paper Fig. 3)
+# ---------------------------------------------------------------------------
+
+def train_hp_twin(seed: int = 42, pretrain_steps: int = 400,
+                  train_steps: int = 600, hidden: int = 14):
+    """Train the HP twin on the sine drive (paper Methods: 500 pts, 1e-3 s)."""
+    ts, xs, vs, cur = hp.generate("sine", num_points=500, dt=1e-3,
+                                  amp=HP_AMP, freq=HP_FREQ)
+    ys = xs[:, None]
+    twin = make_driven_twin(1, hp.WAVEFORMS["sine"](amp=HP_AMP, freq=HP_FREQ),
+                            hidden=hidden)
+    params = twin.init(jax.random.PRNGKey(seed))
+    params, _ = trainer.pretrain_derivatives(
+        twin.field, params, ts, ys, optimizer=adam(1e-2),
+        num_steps=pretrain_steps)
+    params, hist = trainer.train_twin(
+        twin, params, ts, ys,
+        optimizer=adam(warmup_cosine_schedule(3e-3, 50, train_steps)),
+        num_steps=train_steps, segment_len=50, loss="l1", noise_std=0.002,
+        key=jax.random.PRNGKey(seed + 1))
+    return twin, params, float(hist[-1])
+
+
+def hp_waveform_config(waveform: str) -> dict:
+    if waveform == "modulated_sine":
+        return dict(amp=HP_AMP, freq=2 * HP_FREQ)
+    return dict(amp=HP_AMP, freq=HP_FREQ)
+
+
+def eval_hp_twin(twin, params, waveform: str, num_points: int = 500):
+    """MRE + DTW of the twin's state trajectory vs ground truth on a drive
+    it was NOT trained on (except sine)."""
+    kw = hp_waveform_config(waveform)
+    ts, xw, vw, _ = hp.generate(waveform, num_points=num_points, dt=1e-3,
+                                **kw)
+    drive = hp.WAVEFORMS[waveform](**kw)
+    field_w = dataclasses.replace(twin.field, drive=drive)
+    node_w = dataclasses.replace(twin.node, field=field_w)
+    pred = node_w.trajectory(params, xw[:1], ts)[:, 0]
+    return {"mre": float(mre(pred, xw)),
+            "dtw": float(dtw(pred, xw) / num_points),
+            "pred": pred, "true": xw, "ts": ts}
+
+
+def train_hp_resnet(seed: int = 42, train_steps: int = 600,
+                    hidden: int = 14):
+    """The paper's digital baseline: recurrent ResNet, same sizes."""
+    from repro.models.baselines import RecurrentResNet
+    ts, xs, vs, _ = hp.generate("sine", num_points=500, dt=1e-3,
+                                amp=HP_AMP, freq=HP_FREQ)
+    model = RecurrentResNet(sizes=(2, hidden, hidden, 1), state_dim=1)
+    params = model.init(jax.random.PRNGKey(seed))
+    params, hist = trainer.train_recurrent_resnet(
+        model, params, vs[:, None], xs[:, None],
+        optimizer=adam(warmup_cosine_schedule(3e-3, 50, train_steps)),
+        num_steps=train_steps, segment_len=50)
+    return model, params, float(hist[-1])
+
+
+def eval_hp_resnet(model, params, waveform: str, num_points: int = 500):
+    kw = hp_waveform_config(waveform)
+    ts, xw, vw, _ = hp.generate(waveform, num_points=num_points, dt=1e-3,
+                                **kw)
+    drive = hp.WAVEFORMS[waveform](**kw)
+    us = jax.vmap(drive)(ts)[:-1, None]
+    pred = model.rollout(params, xw[:1], us)[:, 0]
+    return {"mre": float(mre(pred, xw)),
+            "dtw": float(dtw(pred, xw) / num_points)}
+
+
+# ---------------------------------------------------------------------------
+# Lorenz96 twin (paper Fig. 4)
+# ---------------------------------------------------------------------------
+
+def l96_data(num_points: int = 2400, dt: float = L96_DT):
+    ts, ys_raw, split = l96.generate(num_points=num_points, dt=dt)
+    ys, mean, std = l96.normalize(ys_raw)
+    return ts, ys, split
+
+
+def train_l96_twin(seed: int = 7, pretrain_steps: int = 5000,
+                   train_steps: tuple = ((60, 600, 1e-3), (200, 600, 4e-4)),
+                   hidden: int = 64, tube_noise: float = 0.03,
+                   data=None):
+    """Noisy-tube derivative pretraining + multiple-shooting curriculum."""
+    ts, ys, split = data if data is not None else l96_data()
+    ts_tr, ys_tr = ts[:split], ys[:split]
+    twin = make_autonomous_twin(6, hidden=hidden)
+    params = twin.init(jax.random.PRNGKey(seed))
+
+    tsm, ysm, dys = trainer.finite_difference_derivatives(ts_tr, ys_tr)
+
+    def pre_loss(p, key):
+        noise = tube_noise * jax.random.normal(key, ysm.shape)
+        preds = jax.vmap(lambda t, y: twin.field(t, y, p))(tsm, ysm + noise)
+        return jnp.mean(jnp.abs(preds - dys))
+
+    params, _ = trainer.fit(
+        pre_loss, params,
+        adam(warmup_cosine_schedule(5e-3, 100, pretrain_steps),
+             weight_decay=1e-4),
+        pretrain_steps, key=jax.random.PRNGKey(seed + 1))
+
+    for seg, steps, lr in train_steps:
+        params, hist = trainer.train_twin(
+            twin, params, ts_tr, ys_tr,
+            optimizer=adam(warmup_cosine_schedule(lr, 50, steps),
+                           weight_decay=1e-4),
+            num_steps=steps, segment_len=seg, loss="l1", noise_std=0.02,
+            key=jax.random.PRNGKey(seed + 2))
+    return twin, params
+
+
+def eval_l96_twin(twin, params, data=None):
+    """Paper protocol: interpolation = closed loop from t=0 over the
+    training window; extrapolation = forecast from the observation-synced
+    state at the train/test split."""
+    ts, ys, split = data if data is not None else l96_data()
+    pred_i = twin.simulate(params, ys[0], ts[:split])
+    interp = float(l1(pred_i, ys[:split]))
+    pred_x = twin.simulate(params, ys[split - 1], ts[split - 1:])
+    extrap = float(l1(pred_x[1:], ys[split:]))
+    return {"interp_l1": interp, "extrap_l1": extrap,
+            "pred_extrap": pred_x[1:], "true_extrap": ys[split:]}
+
+
+def eval_l96_baseline(cell: str, seed: int = 3, train_steps: int = 2500,
+                      hidden: int = 64, data=None):
+    from repro.models.baselines import RecurrentForecaster
+    ts, ys, split = data if data is not None else l96_data()
+    model = RecurrentForecaster(cell=cell, in_dim=6, hidden=hidden, out_dim=6)
+    params = model.init(jax.random.PRNGKey(seed))
+    params, _ = trainer.train_forecaster(
+        model, params, ys[:split],
+        optimizer=adam(warmup_cosine_schedule(3e-3, 100, train_steps)),
+        num_steps=train_steps, noise_std=0.01,
+        key=jax.random.PRNGKey(seed + 1))
+    interp = model.closed_loop(params, ys[0], split - 1)
+    e_i = float(l1(interp, ys[:split]))
+    extrap = model.closed_loop(params, ys[split - 1], ys.shape[0] - split,
+                               warmup=ys[:split - 1])
+    e_x = float(l1(extrap[1:], ys[split:]))
+    return {"interp_l1": e_i, "extrap_l1": e_x}
+
+
+# ---------------------------------------------------------------------------
+# Analogue deployment + noise robustness (paper Fig. 4j)
+# ---------------------------------------------------------------------------
+
+def noise_robustness_grid(twin, params, read_noises, prog_noises,
+                          data=None, repeats: int = 3, seed: int = 0):
+    """L1 extrapolation error under (read, programming) noise combinations."""
+    ts, ys, split = data if data is not None else l96_data()
+    rows = []
+    for pn in prog_noises:
+        for rn in read_noises:
+            errs = []
+            for r in range(repeats):
+                spec = AnalogueSpec(prog_noise=pn, read_noise=rn)
+                a_twin = twin.deploy_analogue(
+                    jax.random.PRNGKey(seed + 101 * r), params, spec,
+                    read_key=jax.random.PRNGKey(seed + 13 * r + 1))
+                pred = a_twin.simulate(None, ys[split - 1], ts[split - 1:])
+                errs.append(float(l1(pred[1:], ys[split:])))
+            rows.append({"prog_noise": pn, "read_noise": rn,
+                         "extrap_l1": sum(errs) / len(errs)})
+    return rows
+
+
+def l96_lyapunov_info():
+    f = l96.lorenz96_field(8.0)
+    from repro.core.twin import reference_trajectory
+    ys = reference_trajectory(f, l96.PAPER_Y0, jnp.arange(500) * 0.02,
+                              steps_per_interval=8)
+    mle = max_lyapunov_exponent(f, ys[-1], None, dt=0.01, num_steps=20000,
+                                renorm_every=20)
+    return {"mle": float(mle), "lyapunov_time": float(lyapunov_time(mle))}

@@ -1,0 +1,175 @@
+"""Training loops for the continuous-time digital twins.
+
+Faithful to the paper's Methods: Adam, RK4 ODESolve, adjoint-state
+gradients, (soft-)DTW or L1 objectives, and random state noise as a
+regulariser during training (their ref. 46).  Two practical additions,
+both documented in EXPERIMENTS.md:
+
+* multiple-shooting segmentation — the trajectory is split into segments
+  that are solved in parallel from ground-truth initial states (vmap over
+  segments).  This is the standard stabiliser for chaotic NODE training
+  and maps perfectly onto batched TPU execution.
+* derivative-matching warm start — regress f_theta(x) onto finite-
+  difference derivatives before trajectory training (a cheap collocation
+  pretraining that cuts trajectory epochs ~10x).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.losses import l1, soft_dtw
+from repro.train.optimizer import Optimizer, apply_updates
+
+Pytree = Any
+
+
+def fit(loss_fn: Callable, params: Pytree, optimizer: Optimizer,
+        num_steps: int, key: jax.Array | None = None,
+        log_every: int = 0) -> tuple[Pytree, jax.Array]:
+    """Generic jitted full-batch descent; loss_fn(params, key) -> scalar."""
+    opt_state = optimizer.init(params)
+
+    @jax.jit
+    def step(params, opt_state, key):
+        if key is not None:
+            key, sub = jax.random.split(key)
+        else:
+            sub = None
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, sub))(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, key, loss
+
+    losses = []
+    for i in range(num_steps):
+        params, opt_state, key, loss = step(params, opt_state, key)
+        losses.append(loss)
+        if log_every and (i % log_every == 0 or i == num_steps - 1):
+            print(f"  step {i:5d}  loss {float(loss):.6f}")
+    return params, jnp.stack(losses)
+
+
+# ---------------------------------------------------------------------------
+# Multiple-shooting segmentation
+# ---------------------------------------------------------------------------
+
+def make_segments(ts: jax.Array, ys: jax.Array, segment_len: int):
+    """Split (T,)/(T,D) into overlapping shooting segments.
+
+    Returns (ts_seg (S, L+1), ys_seg (S, L+1, D)) where consecutive
+    segments share their boundary point.
+    """
+    T = ts.shape[0]
+    L = segment_len
+    S = (T - 1) // L
+    idx = jnp.arange(S)[:, None] * L + jnp.arange(L + 1)[None, :]
+    return ts[idx], ys[idx]
+
+
+def segment_loss_fn(twin, ts_seg, ys_seg, loss: str = "l1",
+                    gamma: float = 0.1, noise_std: float = 0.0):
+    """Loss over shooting segments solved in parallel (vmap)."""
+
+    def loss_fn(params, key):
+        y0s = ys_seg[:, 0]
+        if noise_std > 0 and key is not None:
+            y0s = y0s + noise_std * jax.random.normal(key, y0s.shape)
+        preds = jax.vmap(lambda y0, t: twin.simulate(params, y0, t))(
+            y0s, ts_seg)
+        if loss == "l1":
+            return l1(preds, ys_seg)
+        if loss == "softdtw":
+            per_seg = jax.vmap(lambda p, t: soft_dtw(p, t, gamma))(
+                preds, ys_seg)
+            return jnp.mean(per_seg) / ys_seg.shape[1]
+        if loss == "l1+softdtw":
+            per_seg = jax.vmap(lambda p, t: soft_dtw(p, t, gamma))(
+                preds, ys_seg)
+            return l1(preds, ys_seg) + 0.1 * jnp.mean(per_seg) / ys_seg.shape[1]
+        raise ValueError(loss)
+
+    return loss_fn
+
+
+def train_twin(twin, params, ts: jax.Array, ys: jax.Array, *,
+               optimizer: Optimizer, num_steps: int,
+               segment_len: int = 50, loss: str = "l1",
+               gamma: float = 0.1, noise_std: float = 0.0,
+               key: jax.Array | None = None, log_every: int = 0):
+    """Train a twin on one observed trajectory (paper's training setup)."""
+    ts_seg, ys_seg = make_segments(ts, ys, segment_len)
+    loss_fn = segment_loss_fn(twin, ts_seg, ys_seg, loss, gamma, noise_std)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return fit(loss_fn, params, optimizer, num_steps, key, log_every)
+
+
+# ---------------------------------------------------------------------------
+# Derivative-matching warm start (collocation pretraining)
+# ---------------------------------------------------------------------------
+
+def finite_difference_derivatives(ts: jax.Array, ys: jax.Array):
+    """Central differences on the interior points: (T-2,) ts, ys, dys."""
+    dt = ts[2:] - ts[:-2]
+    dys = (ys[2:] - ys[:-2]) / dt[:, None]
+    return ts[1:-1], ys[1:-1], dys
+
+
+def derivative_matching_loss(field, ts_mid, ys_mid, dys):
+    def loss_fn(params, key):
+        del key
+        preds = jax.vmap(lambda t, y: field(t, y, params))(ts_mid, ys_mid)
+        return jnp.mean(jnp.abs(preds - dys))
+    return loss_fn
+
+
+def pretrain_derivatives(field, params, ts, ys, *, optimizer,
+                         num_steps: int, log_every: int = 0):
+    ts_mid, ys_mid, dys = finite_difference_derivatives(ts, ys)
+    loss_fn = derivative_matching_loss(field, ts_mid, ys_mid, dys)
+    return fit(loss_fn, params, optimizer, num_steps, log_every=log_every)
+
+
+# ---------------------------------------------------------------------------
+# Baseline training (teacher-forced recurrent forecasters / ResNet)
+# ---------------------------------------------------------------------------
+
+def train_forecaster(model, params, ys: jax.Array, *, optimizer,
+                     num_steps: int, noise_std: float = 0.0,
+                     key: jax.Array | None = None, log_every: int = 0):
+    def loss_fn(params, key):
+        inp = ys
+        if noise_std > 0 and key is not None:
+            inp = ys + noise_std * jax.random.normal(key, ys.shape)
+        preds = model.teacher_forced(params, inp)
+        return l1(preds, ys[1:])
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return fit(loss_fn, params, optimizer, num_steps, key, log_every)
+
+
+def train_recurrent_resnet(model, params, us: jax.Array, ys: jax.Array, *,
+                           optimizer, num_steps: int,
+                           segment_len: int = 50,
+                           key: jax.Array | None = None, log_every: int = 0):
+    """Teacher-forced segment training of h_{t+1} = h_t + f([u_t, h_t])."""
+    T = ys.shape[0]
+    L = segment_len
+    S = (T - 1) // L
+    idx = jnp.arange(S)[:, None] * L + jnp.arange(L + 1)[None, :]
+    ys_seg = ys[idx]                      # (S, L+1, D)
+    us_seg = us[idx[:, :-1]]              # (S, L, U)
+
+    def loss_fn(params, key):
+        del key
+        preds = jax.vmap(lambda y0, u: model.rollout(params, y0, u))(
+            ys_seg[:, 0], us_seg)
+        return l1(preds, ys_seg)
+
+    return fit(loss_fn, params, optimizer, num_steps, key, log_every)

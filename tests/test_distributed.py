@@ -1,0 +1,221 @@
+"""Checkpointing, compression, sharding rules, pipeline PP, train driver."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+from repro.train.compression import compressed, topk_sparsify
+from repro.train.optimizer import adam, apply_updates
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (8, 16)),
+            "nested": {"b": jax.random.normal(k2, (4,)),
+                       "step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path), 10, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 10
+    restored = ckpt.restore(str(tmp_path), 10, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_atomicity(tmp_path):
+    tree = _tree(jax.random.PRNGKey(1))
+    for s in [1, 2, 3, 4, 5]:
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    kept = sorted(os.listdir(tmp_path))
+    assert kept == ["step_0000000004", "step_0000000005"]
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_async(tmp_path):
+    tree = _tree(jax.random.PRNGKey(2))
+    ckpt.save(str(tmp_path), 3, tree, blocking=False)
+    ckpt.wait_for_async()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_checkpoint_elastic_reshard_subprocess(tmp_path):
+    """Save on a 4-device mesh, restore onto an 8-device mesh (elastic)."""
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.train import checkpoint as ckpt
+        tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+        mesh4 = jax.make_mesh((4,), ("model",),
+                              devices=jax.devices()[:4])
+        sh4 = {{"w": NamedSharding(mesh4, P("model", None))}}
+        placed = jax.device_put(tree["w"], sh4["w"])
+        ckpt.save(r"{tmp_path}", 1, {{"w": placed}})
+        mesh8 = jax.make_mesh((8,), ("model",))
+        sh8 = {{"w": NamedSharding(mesh8, P(None, "model"))}}
+        out = ckpt.restore(r"{tmp_path}", 1, tree, shardings=sh8)
+        assert out["w"].sharding == sh8["w"], out["w"].sharding
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+        print("ELASTIC_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env={**os.environ,
+                                        "PYTHONPATH": f"{REPO}/src"})
+    assert "ELASTIC_OK" in r.stdout, r.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_error_feedback_preserves_convergence():
+    """Quadratic bowl: int8+EF must reach (near) the same optimum."""
+    target = jnp.array([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p - target) ** 2)
+
+    for opt in [adam(0.05), compressed(adam(0.05), bits=8)]:
+        p = jnp.zeros(3)
+        s = opt.init(p)
+        for _ in range(300):
+            g = jax.grad(loss)(p)
+            u, s = opt.update(g, s, p)
+            p = apply_updates(p, u)
+        assert float(loss(p)) < 1e-3
+
+
+def test_topk_sparsify_residual():
+    g = jnp.arange(-5.0, 5.0)
+    kept, resid = topk_sparsify(g, 0.2)
+    assert float(jnp.count_nonzero(kept)) <= 3
+    np.testing.assert_allclose(np.asarray(kept + resid), np.asarray(g))
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+def test_sharding_rules_divisibility_subprocess():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_config
+        from repro.launch.mesh import make_production_mesh
+        from repro.launch.sharding import param_shardings
+        from repro.models.model import init_params
+
+        mesh = make_production_mesh()
+        # qwen1.5: 40 heads not divisible by 16 -> attention TP replicated
+        # (Megatron-canonical rules: NO head_dim fallback, see §Perf iter 2)
+        cfg = get_config("qwen1.5-32b")
+        sds = jax.eval_shape(lambda k: init_params(cfg, k),
+                             jax.random.PRNGKey(0))
+        sh = param_shardings(mesh, sds)
+        wq = sh["stack"]["b0"]["mixer"]["wq"].spec
+        assert wq == P(None, "data", None, None), wq
+        # ... and the optimised variant pads heads to 48 -> TP restored
+        from repro.configs.optimized import get_optimized
+        cfg = get_optimized("qwen1.5-32b")
+        sds = jax.eval_shape(lambda k: init_params(cfg, k),
+                             jax.random.PRNGKey(0))
+        sh = param_shardings(mesh, sds)
+        wq = sh["stack"]["b0"]["mixer"]["wq"].spec
+        assert wq == P(None, "data", "model", None), wq
+        # llama3: 32 heads divisible -> heads sharded
+        cfg = get_config("llama3-8b")
+        sds = jax.eval_shape(lambda k: init_params(cfg, k),
+                             jax.random.PRNGKey(0))
+        sh = param_shardings(mesh, sds)
+        wq = sh["stack"]["b0"]["mixer"]["wq"].spec
+        assert wq == P(None, "data", "model", None), wq
+        # MoE experts on the model axis (EP)
+        cfg = get_config("deepseek-v2-lite-16b")
+        sds = jax.eval_shape(lambda k: init_params(cfg, k),
+                             jax.random.PRNGKey(0))
+        sh = param_shardings(mesh, sds)
+        wup = sh["stack"]["b0"]["ffn"]["w_up"].spec
+        assert wup[1] == "model", wup
+        print("SHARDING_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env={**os.environ,
+                                        "PYTHONPATH": f"{REPO}/src"})
+    assert "SHARDING_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])
+
+
+# ---------------------------------------------------------------------------
+# Pipeline parallelism
+# ---------------------------------------------------------------------------
+
+def test_pipeline_matches_sequential_subprocess():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.pipeline import make_pipeline_forward
+
+        n_stages, n_micro, mb, d = 4, 8, 2, 16
+        mesh = jax.make_mesh((4,), ("pipe",))
+        key = jax.random.PRNGKey(0)
+        ws = jax.random.normal(key, (n_stages, d, d)) / d ** 0.5
+
+        def block(w, x):
+            return jnp.tanh(x @ w)
+
+        x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
+        fwd = make_pipeline_forward(block, n_stages, n_micro, mesh)
+        y_pipe = fwd(ws, x)
+
+        y_ref = x
+        for s in range(n_stages):
+            y_ref = block(ws[s], y_ref)
+        np.testing.assert_allclose(np.asarray(y_pipe), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+        # gradients flow through ppermute
+        g = jax.grad(lambda w: fwd(w, x).sum())(ws)
+        assert all(np.isfinite(np.asarray(x)).all()
+                   for x in jax.tree_util.tree_leaves(g))
+        print("PIPELINE_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env={**os.environ,
+                                        "PYTHONPATH": f"{REPO}/src"})
+    assert "PIPELINE_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])
+
+
+# ---------------------------------------------------------------------------
+# Train driver end-to-end (resume-after-preemption semantics)
+# ---------------------------------------------------------------------------
+
+def test_train_driver_runs_and_resumes(tmp_path):
+    from repro.launch.train import main as train_main
+    args = ["--arch", "qwen3-1.7b", "--smoke", "--steps", "6",
+            "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path),
+            "--ckpt-every", "3", "--log-every", "100"]
+    losses1 = train_main(args)
+    assert ckpt.latest_step(str(tmp_path)) == 6
+    # resume: should continue from step 6 (no steps left -> quick exit)
+    losses2 = train_main([*args[:-6], "--ckpt-dir", str(tmp_path),
+                          "--ckpt-every", "3", "--log-every", "100"])
+    assert len(losses1) == 6

@@ -1,0 +1,255 @@
+"""Per-kernel shape/dtype sweeps asserting allclose vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.analogue import AnalogueSpec, program_mlp
+from repro.core.losses import dtw as dtw_jnp, soft_dtw as soft_dtw_jnp
+from repro.core.node import mlp_init
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# fused ODE MLP
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sizes,drive_dim,state_dim", [
+    ((2, 14, 14, 1), 1, 1),      # paper's HP-twin arrays (2x14, 14x14, 14x1)
+    ((6, 64, 64, 6), 0, 6),      # paper's Lorenz96 twin
+    ((3, 8, 2), 1, 2),           # 2-layer variant
+    ((4, 32, 32, 32, 4), 0, 4),  # 4-layer variant
+])
+@pytest.mark.parametrize("batch,T", [(8, 16), (16, 50)])
+def test_fused_node_matches_ref(sizes, drive_dim, state_dim, batch, T):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, sizes[1]))
+    params = mlp_init(k1, sizes)
+    y0 = 0.3 * jax.random.normal(k2, (batch, state_dim))
+    ts = jnp.linspace(0.0, 0.5, T + 1)
+    dt = float(ts[1] - ts[0])
+    if drive_dim:
+        uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
+    else:
+        uh = jnp.zeros((2 * T + 1, 0))
+    out_k = ops.fused_node_rollout(params, y0, uh, dt, batch_tile=8)
+    out_r = ops.fused_node_rollout_ref(params, y0, uh, dt)
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+    assert out_k.shape == (T + 1, batch, state_dim)
+
+
+def test_fused_node_vmem_guard():
+    params = mlp_init(KEY, (6, 64, 64, 6))
+    y0 = jnp.zeros((64, 6))
+    uh = jnp.zeros((2 * 100000 + 1, 0))
+    with pytest.raises(ValueError, match="VMEM"):
+        ops.fused_node_rollout(params, y0, uh, 1e-3)
+
+
+def test_fused_node_matches_odeint():
+    """The kernel must agree with the framework's own RK4 odeint."""
+    from repro.core.node import MLPVectorField
+    from repro.core.ode import odeint
+
+    field = MLPVectorField(sizes=(2, 14, 14, 1),
+                           drive=lambda t: jnp.sin(4 * t))
+    params = field.init(KEY)
+    T = 32
+    ts = jnp.linspace(0.0, 0.25, T + 1)
+    y0 = jnp.array([[0.2]])
+    ys = odeint(field, y0[0], ts, params, method="rk4")
+    uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
+    out = ops.fused_node_rollout(params, y0, uh, float(ts[1] - ts[0]),
+                                 batch_tile=1)
+    np.testing.assert_allclose(out[:, 0, :], ys, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# crossbar VMM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 3, 15), (8, 65, 14), (37, 129, 100), (130, 256, 257), (256, 512, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_crossbar_shapes(m, k, n, dtype):
+    spec = AnalogueSpec(prog_noise=0.02)
+    kx, kw = jax.random.split(jax.random.fold_in(KEY, m * k + n))
+    x = jax.random.normal(kx, (m, k), dtype)
+    from repro.core.analogue import program_tensor
+    w = jax.random.normal(kw, (k, n))
+    prog = program_tensor(kw, w, spec)
+    yk = ops.crossbar_vmm(prog, x, spec)
+    yr = ref.crossbar_matmul_ref(x, prog["gp"], prog["gm"], 1.0,
+                                 spec.v_clamp) / prog["scale"]
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 64, 32), (33, 200, 129)])
+def test_crossbar_quantized(m, k, n):
+    spec = AnalogueSpec()
+    kx, kw = jax.random.split(jax.random.fold_in(KEY, m + k + n))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    gpq, gmq, scale = ops.quantize_to_levels(w, spec)
+    assert gpq.dtype == jnp.uint8
+    yq = ops.crossbar_vmm_quantized(x, gpq, gmq, spec, scale)
+    g_step = (spec.g_max - spec.g_min) / (spec.levels - 1)
+    yr = ref.crossbar_matmul_q_ref(x, gpq, gmq, g_step, 1.0,
+                                   spec.v_clamp) / scale
+    np.testing.assert_allclose(np.asarray(yq), np.asarray(yr), rtol=1e-5,
+                               atol=1e-5)
+    # quantisation itself must stay within half a level of the ideal weight
+    ideal = x @ w
+    lvl_err = jnp.abs(yq - ideal).max() / (jnp.abs(w).max() * k)
+    assert float(lvl_err) < 1.0 / spec.levels
+
+
+def test_crossbar_quantized_matches_digital_coarsely():
+    """6-bit differential storage should approximate the digital matmul."""
+    spec = AnalogueSpec()
+    w = jax.random.normal(KEY, (64, 64)) * 0.1
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (16, 64))
+    gpq, gmq, scale = ops.quantize_to_levels(w, spec)
+    y = ops.crossbar_vmm_quantized(x, gpq, gmq, spec, scale)
+    rel = jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w)
+    assert float(rel) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# soft-DTW wavefront
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,d", [
+    (1, 1, 1), (5, 5, 1), (50, 70, 2), (128, 128, 3), (300, 200, 1),
+    (257, 513, 2),
+])
+def test_softdtw_shapes(n, m, d):
+    kx, ky = jax.random.split(jax.random.fold_in(KEY, n * m))
+    x = jax.random.normal(kx, (2, n, d))
+    y = jax.random.normal(ky, (2, m, d))
+    sk = ops.soft_dtw(x, y, 0.7)
+    sr = jax.vmap(lambda a, b: soft_dtw_jnp(a, b, 0.7))(x, y)
+    np.testing.assert_allclose(sk, sr, rtol=1e-4, atol=1e-4)
+    hk = ops.dtw_distance(x, y)
+    hr = jax.vmap(dtw_jnp)(x, y)
+    np.testing.assert_allclose(hk, hr, rtol=1e-5, atol=1e-5)
+
+
+def test_softdtw_grad_matches_ref():
+    x = jax.random.normal(KEY, (2, 40, 2))
+    y = jax.random.normal(jax.random.fold_in(KEY, 7), (2, 60, 2))
+    gk = jax.grad(lambda a: ops.soft_dtw(a, y, 0.5).sum())(x)
+    gr = jax.grad(
+        lambda a: jax.vmap(lambda p, q: soft_dtw_jnp(p, q, 0.5))(a, y).sum())(x)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5)
+
+
+def test_dtw_identity_is_zero():
+    x = jax.random.normal(KEY, (1, 64, 2))
+    assert float(ops.dtw_distance(x, x)[0]) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_dtw_shift_invariance_property():
+    """DTW of a time-warped copy must be far below an unrelated series."""
+    t = jnp.linspace(0, 6.28, 100)
+    a = jnp.sin(t)[None, :, None]
+    warped = jnp.sin(t ** 1.08 / t[-1] ** 0.08)[None, :, None]
+    noise = jax.random.normal(KEY, (1, 100, 1))
+    d_w = float(ops.dtw_distance(a, warped)[0])
+    d_n = float(ops.dtw_distance(a, noise)[0])
+    assert d_w < 0.2 * d_n
+
+
+# ---------------------------------------------------------------------------
+# state-resident SSM scan (Mamba recurrence)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bsz,s,di,n,d_tile", [
+    (1, 8, 16, 4, 16), (2, 32, 64, 16, 32), (1, 64, 128, 16, 128),
+])
+def test_ssm_scan_matches_ref(bsz, s, di, n, d_tile):
+    from repro.kernels.ssm_scan import ssm_scan, ssm_scan_ref
+    key = jax.random.PRNGKey(di + s)
+    ks = jax.random.split(key, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (bsz, s, di))) * 0.1
+    b = jax.random.normal(ks[1], (bsz, s, n))
+    c = jax.random.normal(ks[2], (bsz, s, n))
+    x = jax.random.normal(ks[3], (bsz, s, di))
+    a = -jnp.exp(jax.random.normal(ks[4], (di, n)) * 0.3)
+    yk, hk = ssm_scan(dt, b, c, x, a, d_tile=d_tile)
+    yr, hr = ssm_scan_ref(dt, b, c, x, a)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ssm_scan_matches_mamba_prefill_core():
+    """The kernel must agree with the model's chunked-scan mamba path."""
+    from repro.kernels.ssm_scan import ssm_scan
+    from repro.models.mamba import MambaConfig, mamba_init, mamba_prefill
+    cfg = MambaConfig(d_model=32, d_state=4, d_conv=4, expand=2, chunk=8)
+    params = mamba_init(jax.random.PRNGKey(0), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    out_model, state = mamba_prefill(params, cfg, u)
+    # recompute y via the kernel on the same intermediate quantities
+    import repro.models.mamba as M
+    xz = u @ params["in_proj"]
+    x_, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(M._causal_conv(params, cfg, x_))
+    dt, b_, c_ = M._dbc(params, cfg, xc)
+    a = -jnp.exp(params["A_log"])
+    yk, hk = ssm_scan(dt, b_, c_, xc.astype(jnp.float32), a, d_tile=64)
+    y = yk + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    out_kernel = y @ params["out_proj"]
+    np.testing.assert_allclose(np.asarray(out_kernel),
+                               np.asarray(out_model), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(state["ssm"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused causal flash attention (VMEM-resident accumulator)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,s,d,bq,bk", [
+    (1, 2, 2, 32, 16, 16, 16),
+    (2, 4, 2, 64, 32, 32, 16),   # GQA group 2
+    (1, 8, 2, 128, 64, 64, 64),  # GQA group 4
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_pallas_matches_ref(b, h, hkv, s, d, bq, bk, dtype):
+    from repro.kernels.flash_attention import (flash_attention_pallas,
+                                               flash_attention_pallas_ref)
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    out = flash_attention_pallas(q, k, v, bq=bq, bk=bk)
+    ref = flash_attention_pallas_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_pallas_matches_model_flash():
+    """Kernel vs the XLA flash schedule used by the models."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.flash import flash_attention
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, h, hkv, s, d = 1, 4, 2, 64, 32
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    xla_out = flash_attention([q], [k], v, scale=d ** -0.5,
+                              q_chunk=16, kv_chunk=16)
+    kern_out = flash_attention_pallas(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                      v.swapaxes(1, 2), bq=16, bk=16)
+    np.testing.assert_allclose(np.asarray(kern_out.swapaxes(1, 2)),
+                               np.asarray(xla_out), rtol=2e-5, atol=2e-5)

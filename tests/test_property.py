@@ -1,0 +1,166 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analogue import AnalogueSpec, conductance_pair, \
+    program_tensor, quantize_conductance
+from repro.core.losses import dtw, mre, soft_dtw
+from repro.core.ode import odeint
+from repro.models.moe import MoEConfig, capacity, moe_apply, moe_init
+
+SET = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# ODE integrator invariants
+# ---------------------------------------------------------------------------
+
+@given(lam=st.floats(-3.0, -0.1), y0=st.floats(-2.0, 2.0),
+       n=st.integers(4, 32))
+@settings(**SET)
+def test_linear_ode_matches_exponential(lam, y0, n):
+    f = lambda t, y, p: lam * y
+    ts = jnp.linspace(0.0, 1.0, n + 1)
+    ys = odeint(f, jnp.array([y0]), ts, None, method="rk4",
+                steps_per_interval=4)
+    expected = y0 * np.exp(lam * np.asarray(ts))
+    np.testing.assert_allclose(np.asarray(ys[:, 0]), expected, rtol=1e-4,
+                               atol=1e-5)
+
+
+@given(n=st.integers(2, 6))
+@settings(**SET)
+def test_rk4_order_beats_euler(n):
+    """Halving dt must shrink RK4 error super-linearly (4th order) —
+    checked above the float32 noise floor."""
+    f = lambda t, y, p: -y + jnp.sin(3 * t)
+    ts = jnp.linspace(0.0, 2.0, n + 1)
+    fine = odeint(f, jnp.array([1.0]), ts, None, method="rk4",
+                  steps_per_interval=64)
+
+    def err(method, spi):
+        ys = odeint(f, jnp.array([1.0]), ts, None, method=method,
+                    steps_per_interval=spi)
+        return float(jnp.abs(ys - fine).max())
+
+    e_rk4_1, e_rk4_2 = err("rk4", 1), err("rk4", 2)
+    assert e_rk4_2 <= e_rk4_1 / 4 + 1e-6     # comfortably super-linear
+
+
+# ---------------------------------------------------------------------------
+# (soft-)DTW invariants
+# ---------------------------------------------------------------------------
+
+@given(data=st.data(), n=st.integers(2, 30), m=st.integers(2, 30))
+@settings(**SET)
+def test_dtw_nonneg_and_identity(data, n, m):
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 2 ** 30)))
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (n, 2))
+    y = jax.random.normal(k2, (m, 2))
+    d = float(dtw(x, y))
+    assert d >= -1e-6
+    assert float(dtw(x, x)) < 1e-6
+    assert abs(float(dtw(x, y)) - float(dtw(y, x))) < 1e-4  # symmetric dist
+
+
+@given(seed=st.integers(0, 2 ** 30), gamma=st.floats(0.05, 2.0))
+@settings(**SET)
+def test_softdtw_lower_bounds_dtw(seed, gamma):
+    """soft-min <= min pointwise => soft-DTW <= DTW."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (12, 1))
+    y = jax.random.normal(k2, (15, 1))
+    assert float(soft_dtw(x, y, gamma)) <= float(dtw(x, y)) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Analogue mapping invariants
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2 ** 30), rows=st.integers(1, 16),
+       cols=st.integers(1, 16))
+@settings(**SET)
+def test_differential_pair_exact_before_quant(seed, rows, cols):
+    spec = AnalogueSpec(quantize=False, prog_noise=0.0)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    gp, gm, scale = conductance_pair(w, spec)
+    np.testing.assert_allclose(np.asarray((gp - gm) / scale), np.asarray(w),
+                               rtol=1e-5, atol=1e-7)
+    # conductances always within the physical device range
+    assert float(gp.min()) >= spec.g_min - 1e-12
+    assert float(gp.max()) <= spec.g_max + 1e-9
+
+
+@given(seed=st.integers(0, 2 ** 30))
+@settings(**SET)
+def test_quantization_error_within_half_level(seed):
+    spec = AnalogueSpec(prog_noise=0.0)
+    g = jax.random.uniform(jax.random.PRNGKey(seed), (32,),
+                           minval=spec.g_min, maxval=spec.g_max)
+    q = quantize_conductance(g, spec)
+    step = (spec.g_max - spec.g_min) / (spec.levels - 1)
+    assert float(jnp.abs(q - g).max()) <= step / 2 + 1e-12
+
+
+@given(seed=st.integers(0, 2 ** 30))
+@settings(max_examples=10, deadline=None)
+def test_programming_noise_statistics(seed):
+    """Programmed conductance must be unbiased with ~the configured sigma."""
+    spec = AnalogueSpec(prog_noise=0.0436, quantize=False)
+    w = jnp.ones((64, 64))
+    prog = program_tensor(jax.random.PRNGKey(seed), w, spec)
+    rel = (prog["gp"] - spec.g_max) / spec.g_max   # w=1 -> gp at g_max
+    assert abs(float(rel.mean())) < 0.02
+    assert 0.02 < float(rel.std()) < 0.07
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2 ** 30), topk=st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_moe_capacity_bounds_and_conservation(seed, topk):
+    cfg = MoEConfig(n_experts=4, top_k=topk, d_ff=8, capacity_factor=8.0)
+    params = moe_init(jax.random.PRNGKey(seed), cfg, 16)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 6, 16))
+    y, aux = moe_apply(params, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) >= 0.0
+    c = capacity(12, cfg)
+    assert c % 4 == 0 and c >= 4
+
+
+@given(seed=st.integers(0, 2 ** 30))
+@settings(max_examples=5, deadline=None)
+def test_moe_drop_monotone_in_capacity(seed):
+    """Higher capacity factor can only keep more tokens (|y| not smaller
+    in aggregate when no drops occur)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 32, 16))
+    outs = []
+    for cf in [0.25, 8.0]:
+        cfg = MoEConfig(n_experts=4, top_k=2, d_ff=8, capacity_factor=cf)
+        params = moe_init(jax.random.PRNGKey(0), cfg, 16)
+        y, _ = moe_apply(params, cfg, x)
+        outs.append(float(jnp.abs(y).sum()))
+    assert outs[1] >= outs[0] - 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline determinism (exact-resume contract)
+# ---------------------------------------------------------------------------
+
+@given(step=st.integers(0, 10000), seed=st.integers(0, 100))
+@settings(**SET)
+def test_pipeline_pure_function_of_step(step, seed):
+    from repro.data.tokens import TokenPipeline
+    p1 = TokenPipeline(vocab=128, seq_len=16, batch=2, seed=seed)
+    p2 = TokenPipeline(vocab=128, seq_len=16, batch=2, seed=seed)
+    np.testing.assert_array_equal(np.asarray(p1.batch_at(step)["tokens"]),
+                                  np.asarray(p2.batch_at(step)["tokens"]))
+    assert int(p1.batch_at(step)["tokens"].max()) < 128

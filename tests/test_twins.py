@@ -1,0 +1,128 @@
+"""Integration tests: the digital twins reproduce the paper's claims
+(reduced budgets for CI speed)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.analogue import AnalogueSpec
+from repro.core.losses import mre
+from repro.train import recipes
+
+
+@pytest.fixture(scope="module")
+def hp_twin():
+    return recipes.train_hp_twin(pretrain_steps=200, train_steps=250)
+
+
+@pytest.fixture(scope="module")
+def hp_resnet():
+    return recipes.train_hp_resnet(train_steps=250)
+
+
+def test_hp_twin_fits_training_drive(hp_twin):
+    twin, params, loss = hp_twin
+    assert loss < 0.01
+    m = recipes.eval_hp_twin(twin, params, "sine")
+    assert m["mre"] < 0.1
+
+
+def test_hp_twin_extrapolates_waveforms(hp_twin):
+    """Paper Fig. 3f: the twin must interpolate AND extrapolate to drives
+    it never saw in training."""
+    twin, params, _ = hp_twin
+    for wf in ["triangular", "rectangular", "modulated_sine"]:
+        m = recipes.eval_hp_twin(twin, params, wf)
+        assert m["mre"] < 0.25, (wf, m["mre"])
+
+
+def test_node_beats_recurrent_resnet(hp_twin, hp_resnet):
+    """Paper Fig. 3j: neural ODE < recurrent ResNet on modelling error."""
+    twin, params, _ = hp_twin
+    resnet, rparams, _ = hp_resnet
+    node_mre, res_mre = [], []
+    for wf in ["sine", "triangular", "rectangular", "modulated_sine"]:
+        node_mre.append(recipes.eval_hp_twin(twin, params, wf)["mre"])
+        res_mre.append(recipes.eval_hp_resnet(resnet, rparams, wf)["mre"])
+    assert sum(node_mre) / 4 < 0.5 * sum(res_mre) / 4
+
+
+def test_analogue_deployment_close_to_digital(hp_twin):
+    """6-bit quantisation alone must cost only a few % accuracy."""
+    twin, params, _ = hp_twin
+    m = recipes.eval_hp_twin(twin, params, "sine")
+    spec = AnalogueSpec(prog_noise=0.0)   # quantisation only
+    at = twin.deploy_analogue(jax.random.PRNGKey(0), params, spec)
+    pred = at.simulate(None, jnp.array([m["true"][0]]), m["ts"])[:, 0]
+    assert float(mre(pred, m["pred"])) < 0.08
+
+
+def test_analogue_noise_degrades_gracefully(hp_twin):
+    """Paper Fig. 2k/3e statistics must not break the twin."""
+    twin, params, _ = hp_twin
+    m = recipes.eval_hp_twin(twin, params, "sine")
+    spec = AnalogueSpec(prog_noise=0.0436, read_noise=0.02)
+    at = twin.deploy_analogue(jax.random.PRNGKey(0), params, spec,
+                              read_key=jax.random.PRNGKey(1))
+    pred = at.simulate(None, jnp.array([m["true"][0]]), m["ts"])[:, 0]
+    assert float(mre(pred, m["true"])) < 0.3
+
+
+@pytest.fixture(scope="module")
+def l96_setup():
+    data = recipes.l96_data(num_points=1200)
+    twin, params = recipes.train_l96_twin(
+        pretrain_steps=1500, train_steps=((60, 300, 1e-3),), data=data)
+    return data, twin, params
+
+
+def test_l96_twin_interpolates(l96_setup):
+    data, twin, params = l96_setup
+    m = recipes.eval_l96_twin(twin, params, data=data)
+    assert m["interp_l1"] < 0.3
+
+
+def test_l96_twin_extrapolates_short_horizon(l96_setup):
+    """Within ~2 Lyapunov times the forecast must track the chaos."""
+    data, twin, params = l96_setup
+    ts, ys, split = data
+    pred = twin.simulate(params, ys[split - 1], ts[split - 1:split + 199])
+    err = float(jnp.abs(pred[1:] - ys[split:split + 199]).mean())
+    assert err < 0.5
+
+
+def test_l96_noise_grid_runs(l96_setup):
+    data, twin, params = l96_setup
+    rows = recipes.noise_robustness_grid(
+        twin, params, read_noises=[0.0, 0.02], prog_noises=[0.0],
+        data=data, repeats=1)
+    assert len(rows) == 2
+    assert all(jnp.isfinite(r["extrap_l1"]) for r in rows)
+
+
+def test_energy_model_hits_paper_anchors():
+    from repro.core import energy
+    hp_row = energy.hp_projection()[-1]
+    l96_row = energy.lorenz96_projection()[-1]
+    anchors = [
+        (hp_row["node_gpu_speed_gain"], 4.2),
+        (hp_row["analogue_energy_uj"], 17.0),
+        (hp_row["node_gpu_energy_uj"], 705.4),
+        (hp_row["resnet_gpu_energy_uj"], 176.4),
+        (hp_row["node_gpu_energy_gain"], 41.4),
+        (hp_row["resnet_gpu_energy_gain"], 10.4),
+        (l96_row["analogue_time_us"], 40.1),
+        (l96_row["node_gpu_time_us"], 505.8),
+        (l96_row["lstm_gpu_time_us"], 392.5),
+        (l96_row["gru_gpu_time_us"], 294.9),
+        (l96_row["rnn_gpu_time_us"], 98.8),
+        (l96_row["node_gpu_speed_gain"], 12.6),
+        (l96_row["lstm_gpu_speed_gain"], 9.8),
+        (l96_row["node_gpu_energy_gain"], 189.7),
+        (l96_row["lstm_gpu_energy_gain"], 147.2),
+        (l96_row["gru_gpu_energy_gain"], 100.6),
+        (l96_row["rnn_gpu_energy_gain"], 37.1),
+    ]
+    for got, want in anchors:
+        assert abs(got - want) / want < 0.20, (got, want)
