@@ -9,6 +9,8 @@ a readable table per benchmark.  Modules:
   fig4hi_l96_energy    — projected time/energy scalability (Lorenz96)
   fig4j_noise          — read/programming-noise robustness grid
   kernels              — Pallas kernel vs jnp-reference checks + ref timing
+  fleet_backends       — digital vs fused-Pallas vs analogue fleet rollout
+                         throughput at fleet sizes {1, 64, 1024}
   roofline             — per-(arch x shape) roofline table from the dry-run
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig3j_hp_errors]
@@ -183,6 +185,52 @@ def bench_kernels():
          f"interpret_max_err {err:.2e}")
 
 
+def bench_fleet_backends():
+    """Fleet-of-twins serving throughput across execution backends.
+
+    One HP-shaped twin (2->14->14->1), shared weights, N independent
+    initial conditions + per-twin drive parameters, one device program
+    per rollout.  Uses untrained weights — this measures substrate
+    throughput, not accuracy.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.analogue import AnalogueSpec
+    from repro.core.backends import AnalogueBackend, FusedPallasBackend
+    from repro.core.twin import TwinFleet, make_driven_twin
+
+    T = 50 if FAST else 100
+    ts = jnp.linspace(0.0, T * 1e-3, T + 1)
+
+    def family(t, theta):
+        return theta[0] * jnp.sin(2.0 * jnp.pi * theta[1] * t)
+
+    twin = make_driven_twin(1, drive=None, hidden=14)
+    params = twin.init(jax.random.PRNGKey(0))
+    fleet = TwinFleet(twin, drive_family=family)
+    spec = AnalogueSpec(prog_noise=0.0)
+
+    for n in [1, 64, 1024]:
+        kf = jax.random.fold_in(jax.random.PRNGKey(1), n)
+        k1, k2 = jax.random.split(kf)
+        y0s = 0.3 * jax.random.normal(k1, (n, 1))
+        thetas = 1.0 + jax.random.uniform(k2, (n, 2))
+        backends = {
+            "digital": fleet,
+            "fused_pallas": fleet.with_backend(
+                FusedPallasBackend(batch_tile=min(64, n))),
+            "analogue": fleet.with_backend(
+                AnalogueBackend(spec=spec, prog_key=jax.random.PRNGKey(7))),
+        }
+        for name, fl in backends.items():
+            fn = jax.jit(lambda p, y, th, fl=fl: fl.simulate(p, y, ts, th))
+            us = _timeit(fn, params, y0s, thetas,
+                         repeats=1 if n >= 1024 else 3)
+            steps_per_s = n * T / (us * 1e-6)
+            emit(f"fleet_backends/{name}/n{n}", us,
+                 f"{steps_per_s:.0f} twin-steps/s")
+
+
 def bench_roofline():
     import glob
     import json
@@ -205,6 +253,7 @@ BENCHES = {
     "fig4hi_l96_energy": bench_fig4hi_l96_energy,
     "fig4j_noise": None,
     "kernels": bench_kernels,
+    "fleet_backends": bench_fleet_backends,
     "roofline": bench_roofline,
 }
 

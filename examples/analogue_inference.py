@@ -1,6 +1,7 @@
 """Analogue-crossbar execution deep-dive: run a trained twin through the
 simulated memristor arrays under device non-idealities, and through the
-fused Pallas kernel path (the TPU adaptation of in-memory computing).
+fused Pallas kernel path (the TPU adaptation of in-memory computing) —
+all reached through the pluggable ``twin.with_backend(...)`` layer.
 
 Run:  PYTHONPATH=src python examples/analogue_inference.py
 """
@@ -10,6 +11,7 @@ import jax.numpy as jnp
 from repro.core.analogue import (AnalogueSpec, program_mlp,
                                  analogue_mlp_apply, programming_error,
                                  program_tensor)
+from repro.core.backends import AnalogueBackend, FusedPallasBackend
 from repro.core.losses import mre
 from repro.kernels import ops
 from repro.train import recipes
@@ -25,10 +27,15 @@ def main():
     print("== device-statistics sweep (paper Fig. 2h-k constraints) ==")
     for levels, pn in [(256, 0.0), (64, 0.0), (64, 0.0436), (16, 0.0436)]:
         spec = AnalogueSpec(levels=levels, prog_noise=pn)
-        at = twin.deploy_analogue(jax.random.PRNGKey(0), params, spec)
-        pred = at.simulate(None, y0, ts)[:, 0]
+        at = twin.with_backend(
+            AnalogueBackend(spec=spec, prog_key=jax.random.PRNGKey(0)))
+        pred = at.simulate(params, y0, ts)[:, 0]
         print(f"  {levels:3d} levels, prog noise {pn*100:4.1f}%:  "
               f"MRE vs truth {float(mre(pred, true)):.4f}")
+
+    print("\n== backend matrix: one set of weights, three substrates ==")
+    for name, v in recipes.hp_backend_matrix(twin, params).items():
+        print(f"  {name:13s} MRE vs truth {v:.4f}")
 
     print("\n== programming-error statistics (paper Fig. 3e: ~2.2%) ==")
     spec = AnalogueSpec(prog_noise=0.0436)
@@ -42,13 +49,10 @@ def main():
     print(f"  average: {sum(errs)/len(errs)*100:.2f}%  (paper: 2.2%)")
 
     print("\n== fused weights-stationary kernel vs step-by-step solver ==")
-    from repro.data import hp_memristor as hp
-    drive = hp.WAVEFORMS["sine"](amp=recipes.HP_AMP, freq=recipes.HP_FREQ)
-    uh = ops.half_step_drive(drive, ts)
-    traj_kernel = ops.fused_node_rollout(params, y0[None, :], uh,
-                                         float(ts[1] - ts[0]), batch_tile=1)
+    traj_kernel = twin.with_backend(
+        FusedPallasBackend(batch_tile=1)).simulate(params, y0, ts)
     traj_solver = twin.simulate(params, y0, ts)
-    err = float(jnp.abs(traj_kernel[:, 0, :] - traj_solver).max())
+    err = float(jnp.abs(traj_kernel - traj_solver).max())
     print(f"  kernel-vs-odeint max abs deviation: {err:.2e}")
 
     print("\n== quantised-storage crossbar read (uint8 levels, fused dequant) ==")

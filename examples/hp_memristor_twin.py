@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import energy
 from repro.core.analogue import AnalogueSpec
+from repro.core.backends import AnalogueBackend
 from repro.core.losses import mre
 from repro.train import recipes
 
@@ -48,9 +49,10 @@ def main(fast: bool = False):
     m = recipes.eval_hp_twin(twin, params, "sine")
     for pn, rn in [(0.0, 0.0), (0.0436, 0.0), (0.0436, 0.02)]:
         spec = AnalogueSpec(prog_noise=pn, read_noise=rn)
-        at = twin.deploy_analogue(jax.random.PRNGKey(0), params, spec,
-                                  read_key=jax.random.PRNGKey(1))
-        pred = at.simulate(None, jnp.array([m["true"][0]]), m["ts"])[:, 0]
+        at = twin.with_backend(
+            AnalogueBackend(spec=spec, prog_key=jax.random.PRNGKey(0),
+                            read_key=jax.random.PRNGKey(1)))
+        pred = at.simulate(params, jnp.array([m["true"][0]]), m["ts"])[:, 0]
         print(f"  prog {pn*100:4.1f}%  read {rn*100:3.1f}%:  "
               f"MRE vs truth {float(mre(pred, m['true'])):.4f}")
 

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.analogue import AnalogueSpec
+from repro.core.backends import AnalogueBackend
 from repro.train import recipes
 
 
@@ -23,10 +24,11 @@ def main():
 
     print("\n=== analogue deployment (6-bit, 4.36% programming noise) ===")
     spec = AnalogueSpec(prog_noise=0.0436, read_noise=0.02)
-    a_twin = twin.deploy_analogue(jax.random.PRNGKey(0), params, spec,
-                                  read_key=jax.random.PRNGKey(1))
+    a_twin = twin.with_backend(
+        AnalogueBackend(spec=spec, prog_key=jax.random.PRNGKey(0),
+                        read_key=jax.random.PRNGKey(1)))
     m = recipes.eval_hp_twin(twin, params, "sine")
-    pred = a_twin.simulate(None, jnp.array([m["true"][0]]), m["ts"])[:, 0]
+    pred = a_twin.simulate(params, jnp.array([m["true"][0]]), m["ts"])[:, 0]
     from repro.core.losses import mre
     print(f"  analogue twin MRE vs ground truth: "
           f"{float(mre(pred, m['true'])):.3f}")

@@ -1,0 +1,81 @@
+"""Fleet-of-twins serving: one trained model, N physical assets, one
+device program per rollout — on every execution backend.
+
+Production digital-twin deployments serve many asset instances of the
+same model class (Hartmann 2023; Fuller et al. 2019): each asset has its
+own sensed initial condition and its own stimulus parameters, but the
+trained weights are shared.  ``TwinFleet`` batches all of that:
+
+  * digital / analogue backends vmap N rollouts into one XLA program;
+  * the fused-Pallas backend tiles the fleet across the kernel grid —
+    every tile reuses the VMEM-resident weights (the crossbar analogy).
+
+Run:  PYTHONPATH=src python examples/twin_fleet_serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analogue import AnalogueSpec
+from repro.core.backends import AnalogueBackend, FusedPallasBackend
+from repro.core.twin import TwinFleet
+from repro.train import recipes
+
+FLEET_SIZE = 64
+HORIZON = 200          # RK4 steps per rollout
+
+
+def sine_family(t, theta):
+    """Per-asset stimulus: theta = (amp, freq) sensed at the asset."""
+    amp, freq = theta[0], theta[1]
+    return amp * jnp.sin(2.0 * jnp.pi * freq * t)
+
+
+def main():
+    print("== train once (shared weights for the whole fleet) ==")
+    twin, params, loss = recipes.train_hp_twin(pretrain_steps=200,
+                                               train_steps=300)
+    print(f"  final training loss {loss:.5f}")
+
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    ts = jnp.linspace(0.0, HORIZON * 1e-3, HORIZON + 1)
+    y0s = 0.1 + 0.2 * jax.random.uniform(k1, (FLEET_SIZE, 1))
+    thetas = jnp.stack([
+        1.0 + jax.random.uniform(k2, (FLEET_SIZE,)),          # amp in [1,2)
+        1.0 + 2.0 * jax.random.uniform(k3, (FLEET_SIZE,)),    # freq in [1,3)
+    ], axis=-1)
+
+    fleet = TwinFleet(twin, drive_family=sine_family)
+    backends = {
+        "digital": None,
+        "fused_pallas": FusedPallasBackend(batch_tile=min(64, FLEET_SIZE)),
+        "analogue": AnalogueBackend(spec=AnalogueSpec(prog_noise=0.0),
+                                    prog_key=jax.random.PRNGKey(7)),
+    }
+
+    print(f"\n== serve {FLEET_SIZE} assets x {HORIZON} RK4 steps ==")
+    ref = None
+    for name, backend in backends.items():
+        fl = fleet if backend is None else fleet.with_backend(backend)
+        fn = jax.jit(lambda p, y, th, fl=fl: fl.simulate(p, y, ts, th))
+        out = jax.block_until_ready(fn(params, y0s, thetas))   # compile
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(params, y0s, thetas))
+        dt_s = time.perf_counter() - t0
+        steps_per_s = FLEET_SIZE * HORIZON / dt_s
+        if ref is None:
+            ref = out
+            agree = 0.0
+        else:
+            agree = float(jnp.abs(out - ref).max())
+        print(f"  {name:13s} {dt_s*1e3:8.2f} ms/rollout  "
+              f"{steps_per_s:12.0f} twin-steps/s  "
+              f"max|Δ| vs digital {agree:.2e}")
+    print("\n  (fused/digital agree to solver precision; the analogue gap "
+          "is 6-bit quantisation, the paper's deployment cost)")
+
+
+if __name__ == "__main__":
+    main()

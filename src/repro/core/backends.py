@@ -1,0 +1,317 @@
+"""Pluggable execution backends: one trained twin, many substrates.
+
+The paper's central claim is substrate portability — the same trained
+neural-ODE weights execute digitally (GPU/TPU), on analogue memristor
+crossbars, or (our TPU transposition) inside the weights-stationary fused
+Pallas kernel.  This module is the single abstraction behind all three:
+
+    Backend.program(field, params) -> ExecState     ("deploy" the weights)
+    Backend.apply(state, t, x)     -> dx/dt         (one vector-field eval)
+    Backend.rollout(state, y0, ts) -> ys            (full IVP solve)
+    Backend.rollout_batch(state, y0s, ts) -> yss    (fleet of N twins)
+
+``program`` is the deployment step: for the digital backend it is the
+identity, for the analogue backend it writes conductances onto simulated
+crossbars (quantisation + programming noise, frozen), and for the fused
+backend it stages float32 weight/bias operands for VMEM residency.
+
+``rollout`` has a default odeint-based implementation (direct RK4 over
+``apply``); backends override it when the substrate integrates
+differently — the fused backend runs the whole RK4 trajectory inside one
+``pallas_call``, sampling the drive at half-steps itself.
+
+``rollout_batch`` is the fleet primitive: N independent initial
+conditions (and optionally per-twin drive parameters) in ONE device
+program — vmap for digital/analogue, grid batch-tiling for fused Pallas.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adjoint import odeint_adjoint
+from repro.core.analogue import (AnalogueMLPVectorField, AnalogueSpec,
+                                 program_mlp)
+from repro.core.ode import make_odeint, odeint
+
+Pytree = Any
+
+
+class ExecState(NamedTuple):
+    """A programmed twin: the executable field plus whatever parameters
+    still live off-substrate (None when the weights are frozen in)."""
+    field: Callable          # f(t, y, params) -> dy/dt
+    params: Pytree           # pytree threaded to the field, or None
+    extra: Any = None        # backend-private staging (e.g. fused operands)
+
+
+def _with_drive(state: ExecState, drive: Optional[Callable]) -> ExecState:
+    """Re-bind the drive u(t) on a programmed field (fields are frozen
+    dataclasses with a ``drive`` attribute)."""
+    return state._replace(field=dataclasses.replace(state.field, drive=drive))
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Structural type every execution substrate implements."""
+
+    name: str
+
+    def program(self, field: Callable, params: Pytree) -> ExecState: ...
+
+    def apply(self, state: ExecState, t: jax.Array, x: jax.Array) -> jax.Array: ...
+
+    def rollout(self, state: ExecState, y0: jax.Array, ts: jax.Array, *,
+                method: str = "rk4", steps_per_interval: int = 1,
+                gradient: str = "direct") -> jax.Array: ...
+
+    def rollout_batch(self, state: ExecState, y0s: jax.Array,
+                      ts: jax.Array, **kw) -> jax.Array: ...
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BaseBackend:
+    """Default implementations shared by the concrete backends."""
+
+    name = "base"
+
+    def program(self, field: Callable, params: Pytree) -> ExecState:
+        return ExecState(field=field, params=params)
+
+    def apply(self, state: ExecState, t, x):
+        return state.field(t, x, state.params)
+
+    def rollout(self, state: ExecState, y0, ts, *, method: str = "rk4",
+                steps_per_interval: int = 1,
+                gradient: str = "direct") -> jax.Array:
+        """Default: direct fixed-step odeint over ``apply``."""
+        del gradient  # substrate-specific backends decide differentiability
+        if method == "dopri5":
+            return make_odeint("dopri5")(state.field, y0, ts, state.params)
+        return odeint(state.field, y0, ts, state.params, method=method,
+                      steps_per_interval=steps_per_interval)
+
+    def rollout_batch(self, state: ExecState, y0s, ts, *,
+                      drive_family: Optional[Callable] = None,
+                      drive_params: Optional[jax.Array] = None,
+                      **kw) -> jax.Array:
+        """vmap N independent rollouts into one device program.
+
+        ``drive_family(t, theta)`` + per-twin ``drive_params`` (N, ...)
+        re-binds each fleet member's drive; returns (N, T+1, D) matching
+        ``jnp.stack([rollout(y0_i) for i])``.
+        """
+        if drive_family is None:
+            return jax.vmap(lambda y0: self.rollout(state, y0, ts, **kw))(y0s)
+
+        def single(y0, theta):
+            st = _with_drive(state, lambda t: drive_family(t, theta))
+            return self.rollout(st, y0, ts, **kw)
+
+        return jax.vmap(single)(y0s, drive_params)
+
+
+# ---------------------------------------------------------------------------
+# Digital backend — the training substrate
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DigitalBackend(BaseBackend):
+    """Plain jnp execution (the current training path, bit-for-bit).
+
+    The only backend that is differentiable through the solve: supports
+    the adjoint method (O(1) memory) and backprop-through-solver, plus the
+    adaptive dopri5 integrator.
+    """
+
+    name = "digital"
+
+    def rollout(self, state: ExecState, y0, ts, *, method: str = "rk4",
+                steps_per_interval: int = 1,
+                gradient: str = "adjoint") -> jax.Array:
+        if method == "dopri5":
+            return make_odeint("dopri5")(state.field, y0, ts, state.params)
+        if gradient == "adjoint":
+            return odeint_adjoint(state.field, y0, ts, state.params,
+                                  method, steps_per_interval)
+        return odeint(state.field, y0, ts, state.params, method=method,
+                      steps_per_interval=steps_per_interval)
+
+
+# ---------------------------------------------------------------------------
+# Analogue backend — simulated memristor crossbars
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class AnalogueBackend(BaseBackend):
+    """Deploys the MLP onto simulated differential crossbar pairs.
+
+    ``program`` performs the paper's deployment: differential conductance
+    mapping, 6-bit quantisation and multiplicative programming noise,
+    frozen at program time; ``apply``/``rollout`` then re-sample read
+    noise per VMM.  Weights no longer exist as parameters afterwards
+    (``ExecState.params is None``) — they live in the crossbars.
+
+    ``progs`` short-circuits programming with already-written crossbars
+    (the ``deploy_analogue`` legacy shim uses this).
+    """
+
+    name = "analogue"
+    spec: AnalogueSpec = AnalogueSpec()
+    prog_key: Optional[jax.Array] = None
+    read_key: Optional[jax.Array] = None
+    progs: Optional[tuple] = None
+
+    def program(self, field: Callable, params: Pytree) -> ExecState:
+        progs = self.progs
+        if progs is None:
+            if params is None:
+                raise ValueError(
+                    "AnalogueBackend needs params to program the crossbars "
+                    "(or pre-programmed `progs`)")
+            key = (self.prog_key if self.prog_key is not None
+                   else jax.random.PRNGKey(0))
+            progs = tuple(program_mlp(key, params, self.spec))
+        a_field = AnalogueMLPVectorField(
+            progs=progs, spec=self.spec,
+            drive=getattr(field, "drive", None), key=self.read_key)
+        return ExecState(field=a_field, params=None)
+
+
+# ---------------------------------------------------------------------------
+# Fused-Pallas backend — weights-stationary TPU kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FusedPallasBackend(BaseBackend):
+    """Whole-trajectory RK4 inside one ``pallas_call`` (weights pinned in
+    VMEM — the TPU transposition of in-memory computing).
+
+    ``rollout`` ignores the per-step odeint and instead samples the drive
+    on the RK4 half-step grid and hands the full solve to
+    :func:`repro.kernels.fused_ode_mlp.fused_node_rollout`.  Requires a
+    uniform, concrete time grid and ``method='rk4'``; inference-only (no
+    gradients flow through the kernel).
+
+    ``rollout_batch`` tiles the fleet across the Pallas grid — one cell
+    per ``batch_tile`` twins, weights broadcast to every cell — instead
+    of vmapping N separate solves.
+    """
+
+    name = "fused_pallas"
+    batch_tile: int = 64
+    interpret: Optional[bool] = None        # None = auto (TPU -> compiled)
+    vmem_budget_bytes: int = 14 * 1024 * 1024
+
+    # -- staging -----------------------------------------------------------
+    def program(self, field: Callable, params: Pytree) -> ExecState:
+        if params is None:
+            raise ValueError("FusedPallasBackend needs the MLP params")
+        weights = [p["w"].astype(jnp.float32) for p in params]
+        biases = [p["b"].astype(jnp.float32) for p in params]
+        return ExecState(field=field, params=params,
+                         extra={"weights": weights, "biases": biases})
+
+    def _grid(self, ts: jax.Array, steps_per_interval: int):
+        """Validate + densify the time grid; returns (ts_fine, dt, sub)."""
+        try:
+            tsn = np.asarray(ts, dtype=np.float64)
+        except jax.errors.TracerArrayConversionError as e:
+            raise ValueError(
+                "FusedPallasBackend needs a concrete (non-traced) time "
+                "grid: the step count and dt are kernel compile-time "
+                "constants. Close over ts instead of passing it as a jit "
+                "argument.") from e
+        diffs = np.diff(tsn)
+        if tsn.size < 2 or not np.allclose(diffs, diffs[0], rtol=1e-4,
+                                           atol=1e-12):
+            raise ValueError("FusedPallasBackend needs a uniform time grid")
+        sub = int(steps_per_interval)
+        T = (tsn.size - 1) * sub
+        ts_fine = jnp.asarray(
+            np.linspace(tsn[0], tsn[-1], T + 1), dtype=jnp.float32)
+        dt = float(diffs[0]) / sub
+        return ts_fine, dt, sub
+
+    def _u_half(self, drive: Optional[Callable], ts_fine: jax.Array):
+        """Sample u(t) on the RK4 half-step grid, (2T+1, Du)."""
+        from repro.kernels.ops import half_step_drive
+        T = ts_fine.shape[0] - 1
+        if drive is None:
+            return jnp.zeros((2 * T + 1, 0), jnp.float32)
+        return half_step_drive(drive, ts_fine).astype(jnp.float32)
+
+    # -- execution ---------------------------------------------------------
+    def rollout(self, state: ExecState, y0, ts, *, method: str = "rk4",
+                steps_per_interval: int = 1,
+                gradient: str = "direct") -> jax.Array:
+        del gradient  # forward-only substrate
+        from repro.kernels.fused_ode_mlp import fused_node_rollout
+        if method != "rk4":
+            raise ValueError(
+                f"FusedPallasBackend integrates RK4 only, got {method!r}")
+        ts_fine, dt, sub = self._grid(ts, steps_per_interval)
+        uh = self._u_half(getattr(state.field, "drive", None), ts_fine)
+        traj = fused_node_rollout(
+            y0[None, :].astype(jnp.float32), uh,
+            state.extra["weights"], state.extra["biases"], dt,
+            batch_tile=1, interpret=self.interpret,
+            vmem_budget_bytes=self.vmem_budget_bytes)
+        return traj[::sub, 0, :]
+
+    def rollout_batch(self, state: ExecState, y0s, ts, *,
+                      drive_family: Optional[Callable] = None,
+                      drive_params: Optional[jax.Array] = None,
+                      method: str = "rk4", steps_per_interval: int = 1,
+                      gradient: str = "direct") -> jax.Array:
+        del gradient
+        from repro.kernels.fused_ode_mlp import fused_node_rollout
+        if method != "rk4":
+            raise ValueError(
+                f"FusedPallasBackend integrates RK4 only, got {method!r}")
+        ts_fine, dt, sub = self._grid(ts, steps_per_interval)
+        B = y0s.shape[0]
+        if drive_family is None:
+            uh = self._u_half(getattr(state.field, "drive", None), ts_fine)
+        else:
+            # per-twin drive: (B, 2T+1, Du) -> per-tile blocks in-kernel
+            uh = jax.vmap(
+                lambda th_: self._u_half(lambda t: drive_family(t, th_),
+                                         ts_fine))(drive_params)
+        # largest divisor of B within the tile budget, so arbitrary fleet
+        # sizes work without the caller doing grid arithmetic
+        bt = min(self.batch_tile, B)
+        while B % bt:
+            bt -= 1
+        traj = fused_node_rollout(
+            y0s.astype(jnp.float32), uh,
+            state.extra["weights"], state.extra["biases"], dt,
+            batch_tile=bt, interpret=self.interpret,
+            vmem_budget_bytes=self.vmem_budget_bytes)
+        return jnp.transpose(traj[::sub], (1, 0, 2))
+
+
+DEFAULT_BACKEND = DigitalBackend()
+
+BACKENDS = {
+    "digital": DigitalBackend,
+    "analogue": AnalogueBackend,
+    "fused_pallas": FusedPallasBackend,
+}
+
+
+def resolve_backend(backend) -> Backend:
+    """Accept a Backend instance, a registry name, or None (digital)."""
+    if backend is None:
+        return DEFAULT_BACKEND
+    if isinstance(backend, str):
+        try:
+            return BACKENDS[backend]()
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {backend!r}; have {sorted(BACKENDS)}")
+    return backend

@@ -23,8 +23,8 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.adjoint import odeint_adjoint
-from repro.core.ode import make_odeint, odeint
+from repro.core.backends import Backend, resolve_backend
+from repro.core.ode import odeint
 
 Pytree = Any
 
@@ -93,11 +93,16 @@ class NeuralODE:
 
     gradient: 'adjoint' (O(1) memory; paper's training method) or
     'direct' (backprop through the unrolled solver).
+
+    ``backend`` selects the execution substrate (None -> digital): the
+    field is programmed onto it once per solve and the backend owns the
+    integration (see :mod:`repro.core.backends`).
     """
     field: Callable  # f(t, y, params) -> dy/dt
     method: str = "rk4"
     steps_per_interval: int = 1
     gradient: str = "adjoint"
+    backend: Optional[Backend] = None
 
     def init(self, key: jax.Array) -> Pytree:
         init = getattr(self.field, "init", None)
@@ -105,17 +110,29 @@ class NeuralODE:
             raise ValueError("vector field has no .init; pass params explicitly")
         return init(key)
 
+    def _solver_kw(self) -> dict:
+        return dict(method=self.method,
+                    steps_per_interval=self.steps_per_interval,
+                    gradient=self.gradient)
+
     def trajectory(self, params: Pytree, y0: jax.Array,
                    ts: jax.Array) -> jax.Array:
         """Solve the IVP, returning y at every ts (leading axis len(ts))."""
-        if self.method == "dopri5":
-            solve = make_odeint("dopri5")
-            return solve(self.field, y0, ts, params)
-        if self.gradient == "adjoint":
-            return odeint_adjoint(self.field, y0, ts, params,
-                                  self.method, self.steps_per_interval)
-        return odeint(self.field, y0, ts, params, method=self.method,
-                      steps_per_interval=self.steps_per_interval)
+        backend = resolve_backend(self.backend)
+        state = backend.program(self.field, params)
+        return backend.rollout(state, y0, ts, **self._solver_kw())
+
+    def trajectory_batch(self, params: Pytree, y0s: jax.Array,
+                         ts: jax.Array, *, drive_family=None,
+                         drive_params=None) -> jax.Array:
+        """Fleet solve: N initial conditions (and optionally per-twin
+        drive parameters) in one device program, (N, len(ts), D)."""
+        backend = resolve_backend(self.backend)
+        state = backend.program(self.field, params)
+        return backend.rollout_batch(state, y0s, ts,
+                                     drive_family=drive_family,
+                                     drive_params=drive_params,
+                                     **self._solver_kw())
 
     def __call__(self, params, y0, ts):
         return self.trajectory(params, y0, ts)

@@ -1,18 +1,23 @@
 """Digital-twin façade: driven and autonomous continuous-time twins.
 
-A twin = (vector field, integrator, gradient mode) + an optional analogue
-deployment.  This is the public API the examples and benchmarks use.
+A twin = (vector field, integrator, gradient mode) + a pluggable
+execution backend (digital jnp / analogue crossbars / fused Pallas — see
+:mod:`repro.core.backends`).  This is the public API the examples and
+benchmarks use; ``TwinFleet`` scales it to N independent twins in one
+device program.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.analogue import (AnalogueMLPVectorField, AnalogueSpec,
-                                 program_mlp)
+from repro.core.analogue import AnalogueSpec, program_mlp
+from repro.core.backends import (AnalogueBackend, Backend, DigitalBackend,
+                                 FusedPallasBackend, resolve_backend)
 from repro.core.node import MLPVectorField, NeuralODE
 from repro.core.ode import odeint
 
@@ -26,31 +31,105 @@ class DigitalTwin:
     node: NeuralODE
     state_dim: int
 
+    @property
+    def backend(self) -> Backend:
+        return resolve_backend(self.node.backend)
+
     def init(self, key: jax.Array) -> Pytree:
         return self.field.init(key)
+
+    def with_backend(self, backend) -> "DigitalTwin":
+        """Return the same twin executing on another substrate.
+
+        ``backend``: a Backend instance or registry name ('digital',
+        'analogue', 'fused_pallas').  The weights stay wherever the
+        caller keeps them — ``simulate(params, ...)`` programs them onto
+        the substrate at solve time.
+        """
+        backend = resolve_backend(backend)
+        return dataclasses.replace(
+            self, node=dataclasses.replace(self.node, backend=backend))
 
     def simulate(self, params: Pytree, y0: jax.Array, ts: jax.Array):
         return self.node.trajectory(params, y0, ts)
 
+    def simulate_batch(self, params: Pytree, y0s: jax.Array, ts: jax.Array,
+                       *, drive_family: Optional[Callable] = None,
+                       drive_params: Optional[jax.Array] = None):
+        """Batched fleet rollout: (N, D) initial conditions -> (N, T+1, D),
+        equal to stacking N single-trajectory solves but executed as one
+        device program (vmap, or one Pallas grid for the fused backend).
+        """
+        return self.node.trajectory_batch(params, y0s, ts,
+                                          drive_family=drive_family,
+                                          drive_params=drive_params)
+
     def deploy_analogue(self, key: jax.Array, params: Pytree,
                         spec: AnalogueSpec,
                         read_key: Optional[jax.Array] = None) -> "DigitalTwin":
-        """Program the trained weights onto simulated crossbars and return a
-        twin that runs fully through the analogue path."""
+        """Deprecated: use ``twin.with_backend(AnalogueBackend(spec=spec,
+        prog_key=key, read_key=read_key))`` and keep passing ``params``.
+
+        Kept as a thin shim: programs the crossbars eagerly so the legacy
+        ``simulate(None, y0, ts)`` call pattern still works.
+        """
+        warnings.warn(
+            "DigitalTwin.deploy_analogue is deprecated; use "
+            "twin.with_backend(AnalogueBackend(...)) instead",
+            DeprecationWarning, stacklevel=2)
         progs = tuple(program_mlp(key, params, spec))
-        a_field = AnalogueMLPVectorField(
-            progs=progs, spec=spec,
-            drive=getattr(self.field, "drive", None),
-            key=read_key)
-        a_node = dataclasses.replace(self.node, field=a_field,
-                                     gradient="direct")
-        return dataclasses.replace(self, field=a_field, node=a_node)
+        return self.with_backend(
+            AnalogueBackend(spec=spec, read_key=read_key, progs=progs))
+
+
+# ---------------------------------------------------------------------------
+# Fleets of twins — many assets, one device program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwinFleet:
+    """N independent instances of one trained twin (one per physical
+    asset), rolled out in a single device program.
+
+    ``drive_family(t, theta) -> u`` is a parametric stimulus family;
+    each fleet member i gets ``drive_params[i]`` (e.g. its own sensed
+    amp/freq).  Autonomous fleets leave both None.
+
+    Execution follows the underlying twin's backend: digital/analogue
+    fleets vmap, the fused-Pallas fleet batch-tiles the kernel grid so
+    all N trajectories run weights-stationary in one ``pallas_call``.
+    """
+    twin: DigitalTwin
+    drive_family: Optional[Callable] = None
+
+    @property
+    def backend(self) -> Backend:
+        return self.twin.backend
+
+    def with_backend(self, backend) -> "TwinFleet":
+        return dataclasses.replace(self, twin=self.twin.with_backend(backend))
+
+    def simulate(self, params: Pytree, y0s: jax.Array, ts: jax.Array,
+                 drive_params: Optional[jax.Array] = None) -> jax.Array:
+        if (drive_params is None) != (self.drive_family is None):
+            raise ValueError(
+                "drive_params and drive_family must be given together")
+        return self.twin.simulate_batch(params, y0s, ts,
+                                        drive_family=self.drive_family,
+                                        drive_params=drive_params)
+
+
+def simulate_batch(twin: DigitalTwin, params: Pytree, y0s: jax.Array,
+                   ts: jax.Array, **kw) -> jax.Array:
+    """Function-style alias for :meth:`DigitalTwin.simulate_batch`."""
+    return twin.simulate_batch(params, y0s, ts, **kw)
 
 
 def make_driven_twin(state_dim: int, drive: Callable, hidden: int = 14,
                      n_hidden_layers: int = 2, method: str = "rk4",
                      gradient: str = "adjoint",
-                     steps_per_interval: int = 1) -> DigitalTwin:
+                     steps_per_interval: int = 1,
+                     backend: Optional[Backend] = None) -> DigitalTwin:
     """HP-memristor-style twin: dy/dt = MLP([u(t), y]).
 
     Default sizes (2 -> 14 -> 14 -> 1) are the paper's three crossbar
@@ -59,19 +138,20 @@ def make_driven_twin(state_dim: int, drive: Callable, hidden: int = 14,
     sizes = (1 + state_dim,) + (hidden,) * n_hidden_layers + (state_dim,)
     field = MLPVectorField(sizes=sizes, drive=drive)
     node = NeuralODE(field=field, method=method, gradient=gradient,
-                     steps_per_interval=steps_per_interval)
+                     steps_per_interval=steps_per_interval, backend=backend)
     return DigitalTwin(field=field, node=node, state_dim=state_dim)
 
 
 def make_autonomous_twin(state_dim: int, hidden: int = 64,
                          n_hidden_layers: int = 2, method: str = "rk4",
                          gradient: str = "adjoint",
-                         steps_per_interval: int = 1) -> DigitalTwin:
+                         steps_per_interval: int = 1,
+                         backend: Optional[Backend] = None) -> DigitalTwin:
     """Lorenz96-style twin: dy/dt = MLP(y) (no external stimulation)."""
     sizes = (state_dim,) + (hidden,) * n_hidden_layers + (state_dim,)
     field = MLPVectorField(sizes=sizes, drive=None)
     node = NeuralODE(field=field, method=method, gradient=gradient,
-                     steps_per_interval=steps_per_interval)
+                     steps_per_interval=steps_per_interval, backend=backend)
     return DigitalTwin(field=field, node=node, state_dim=state_dim)
 
 

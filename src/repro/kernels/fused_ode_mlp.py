@@ -14,6 +14,8 @@ Grid: one cell per batch tile (weights broadcast to every cell).
 Block layout:
   y0      (bt, D)          per-tile
   u_half  (2T+1, Du)       full, broadcast  (drive at half-steps for RK4)
+          — or, for per-twin drives (fleet serving), (2T+1, bt, Du)
+          per-tile slices of a (2T+1, B, Du) stimulus tensor
   w_i/b_i (full)           broadcast — the "crossbar residency"
   out     (T+1, bt, D)     per-tile trajectory
 
@@ -31,8 +33,15 @@ from jax import lax
 from jax.experimental import pallas as pl
 
 
+def _default_interpret() -> bool:
+    """Compiled lowering on TPU, interpreter everywhere else — so CPU/GPU
+    hosts validate the kernel while TPU runs never silently benchmark the
+    interpreter."""
+    return jax.default_backend() != "tpu"
+
+
 def _make_kernel(num_layers: int, T: int, dt: float, drive_dim: int,
-                 bt: int):
+                 bt: int, per_tile_drive: bool = False):
     def kernel(*refs):
         y0_ref = refs[0]
         u_ref = refs[1]
@@ -55,7 +64,9 @@ def _make_kernel(num_layers: int, T: int, dt: float, drive_dim: int,
 
         def f(u_row, y):
             if drive_dim > 0:
-                u = jnp.broadcast_to(u_row, (bt, drive_dim))
+                # u_row: (drive_dim,) broadcast, or (bt, drive_dim) per-twin
+                u = (u_row if per_tile_drive
+                     else jnp.broadcast_to(u_row, (bt, drive_dim)))
                 inp = jnp.concatenate([u, y], axis=-1)
             else:
                 inp = y
@@ -83,19 +94,33 @@ def _make_kernel(num_layers: int, T: int, dt: float, drive_dim: int,
 
 def fused_node_rollout(
     y0: jax.Array,                    # (B, D) f32
-    u_half: jax.Array,                # (2T+1, Du) f32; Du may be 0
+    u_half: jax.Array,                # (2T+1, Du) shared or (B, 2T+1, Du)
     weights: Sequence[jax.Array],
     biases: Sequence[jax.Array],
     dt: float,
     *,
     batch_tile: int = 64,
-    interpret: bool = True,
+    interpret: bool | None = None,
     vmem_budget_bytes: int = 14 * 1024 * 1024,
 ) -> jax.Array:
-    """Full-trajectory RK4 solve; returns (T+1, B, D).  See module doc."""
+    """Full-trajectory RK4 solve; returns (T+1, B, D).  See module doc.
+
+    ``u_half`` is the drive sampled at RK4 half-steps: (2T+1, Du) shared
+    by the whole batch, or (B, 2T+1, Du) with one stimulus per batch
+    element (fleet serving); Du may be 0 (autonomous).  ``interpret=None``
+    auto-detects: compiled on TPU, interpreter elsewhere.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
     B, D = y0.shape
-    T = (u_half.shape[0] - 1) // 2
-    du = u_half.shape[1]
+    per_tile_drive = u_half.ndim == 3
+    if per_tile_drive and u_half.shape[0] != B:
+        raise ValueError(
+            f"per-twin drive batch {u_half.shape[0]} != y0 batch {B}")
+    if per_tile_drive and u_half.shape[-1] == 0:
+        per_tile_drive, u_half = False, u_half[0]
+    T = (u_half.shape[1 if per_tile_drive else 0] - 1) // 2
+    du = u_half.shape[-1]
     L = len(weights)
     bt = min(batch_tile, B)
     if B % bt:
@@ -103,7 +128,7 @@ def fused_node_rollout(
 
     wbytes = sum(4 * w.size for w in weights) + sum(4 * b.size for b in biases)
     traj_bytes = 4 * (T + 1) * bt * D
-    u_bytes = 4 * u_half.size
+    u_bytes = 4 * (2 * T + 1) * max(du, 1) * (bt if per_tile_drive else 1)
     need = wbytes + traj_bytes + u_bytes + 4 * bt * max(
         du + D, max(w.shape[1] for w in weights))
     if need > vmem_budget_bytes:
@@ -111,20 +136,25 @@ def fused_node_rollout(
             f"fused trajectory needs ~{need/2**20:.1f} MiB VMEM "
             f"(budget {vmem_budget_bytes/2**20:.1f}); shrink batch_tile or T")
 
-    kernel = _make_kernel(L, T, float(dt), du, bt)
+    kernel = _make_kernel(L, T, float(dt), du, bt, per_tile_drive)
 
     grid = (B // bt,)
+    if per_tile_drive:
+        # time-major so the kernel's leading-axis u_ref[2t] indexing holds
+        u_in = jnp.transpose(u_half, (1, 0, 2))           # (2T+1, B, du)
+        u_spec = pl.BlockSpec((2 * T + 1, bt, du), lambda i: (0, i, 0))
+    else:
+        u_in = u_half if du > 0 else jnp.zeros((2 * T + 1, 1), y0.dtype)
+        u_spec = pl.BlockSpec((2 * T + 1, max(du, 1)), lambda i: (0, 0))
     in_specs = [
         pl.BlockSpec((bt, D), lambda i: (i, 0)),          # y0
-        pl.BlockSpec((2 * T + 1, max(du, 1)), lambda i: (0, 0)),  # u_half
+        u_spec,                                           # u_half
     ]
     for w in weights:
         in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
     for b in biases:
         in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
     out_spec = pl.BlockSpec((T + 1, bt, D), lambda i: (0, i, 0))
-
-    u_in = u_half if du > 0 else jnp.zeros((2 * T + 1, 1), y0.dtype)
 
     return pl.pallas_call(
         kernel,

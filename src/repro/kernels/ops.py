@@ -29,12 +29,14 @@ from repro.kernels.softdtw import softdtw_pallas as _softdtw_pallas
 def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
                        u_half: jax.Array, dt: float,
                        *, batch_tile: int = 64,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool | None = None) -> jax.Array:
     """Solve the twin's neural ODE with the weights-stationary kernel.
 
     ``params``: the core MLP param list [{'w','b'}, ...]; ``y0``: (B, D);
-    ``u_half``: drive at half-steps (2T+1, Du) (pass (2T+1, 0) when
-    autonomous).  Returns the (T+1, B, D) trajectory.
+    ``u_half``: drive at half-steps — (2T+1, Du) shared across the batch,
+    or (B, 2T+1, Du) per-twin (pass (2T+1, 0) when autonomous).  Returns
+    the (T+1, B, D) trajectory.  ``interpret=None`` auto-detects the
+    accelerator (compiled on TPU, interpreter on CPU/GPU hosts).
     """
     weights = [p["w"].astype(jnp.float32) for p in params]
     biases = [p["b"].astype(jnp.float32) for p in params]

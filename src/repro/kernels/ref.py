@@ -26,17 +26,21 @@ def fused_node_rollout_ref(y0: jax.Array, u_half: jax.Array,
                            dt: float) -> jax.Array:
     """RK4 rollout of dy/dt = MLP([u(t), y]) (drive optional).
 
-    y0: (B, D); u_half: (2T+1, Du) drive sampled at half-steps (Du may be 0);
-    returns (T+1, B, D).
+    y0: (B, D); u_half: drive sampled at half-steps, (2T+1, Du) shared or
+    (B, 2T+1, Du) per-sample (Du may be 0); returns (T+1, B, D).
     """
-    T = (u_half.shape[0] - 1) // 2
-    du = u_half.shape[1]
     B = y0.shape[0]
+    per_sample = u_half.ndim == 3
+    if per_sample:
+        u_half = jnp.transpose(u_half, (1, 0, 2))   # time-major (2T+1, B, Du)
+    T = (u_half.shape[0] - 1) // 2
+    du = u_half.shape[-1]
 
     def f(u, y):
         if du > 0:
-            inp = jnp.concatenate(
-                [jnp.broadcast_to(u[None, :], (B, du)), y], axis=-1)
+            if not per_sample:
+                u = jnp.broadcast_to(u[None, :], (B, du))
+            inp = jnp.concatenate([u, y], axis=-1)
         else:
             inp = y
         return mlp_fwd(weights, biases, inp)

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.analogue import AnalogueSpec
+from repro.core.backends import AnalogueBackend, FusedPallasBackend
 from repro.core.losses import dtw, l1, lyapunov_time, max_lyapunov_exponent, mre
 from repro.core.twin import make_autonomous_twin, make_driven_twin
 from repro.data import hp_memristor as hp
@@ -53,19 +54,43 @@ def hp_waveform_config(waveform: str) -> dict:
     return dict(amp=HP_AMP, freq=HP_FREQ)
 
 
-def eval_hp_twin(twin, params, waveform: str, num_points: int = 500):
+def eval_hp_twin(twin, params, waveform: str, num_points: int = 500,
+                 backend=None):
     """MRE + DTW of the twin's state trajectory vs ground truth on a drive
-    it was NOT trained on (except sine)."""
+    it was NOT trained on (except sine).
+
+    ``backend``: optional execution substrate (Backend instance or
+    registry name) — evaluate the same trained weights digitally, through
+    the simulated crossbars, or through the fused Pallas kernel.
+    """
     kw = hp_waveform_config(waveform)
     ts, xw, vw, _ = hp.generate(waveform, num_points=num_points, dt=1e-3,
                                 **kw)
     drive = hp.WAVEFORMS[waveform](**kw)
     field_w = dataclasses.replace(twin.field, drive=drive)
     node_w = dataclasses.replace(twin.node, field=field_w)
+    if backend is not None:
+        from repro.core.backends import resolve_backend
+        node_w = dataclasses.replace(node_w, backend=resolve_backend(backend))
     pred = node_w.trajectory(params, xw[:1], ts)[:, 0]
     return {"mre": float(mre(pred, xw)),
             "dtw": float(dtw(pred, xw) / num_points),
             "pred": pred, "true": xw, "ts": ts}
+
+
+def hp_backend_matrix(twin, params, waveform: str = "sine",
+                      analogue_spec: AnalogueSpec = AnalogueSpec(),
+                      seed: int = 0) -> dict:
+    """The substrate-portability claim as numbers: same trained weights
+    evaluated on every backend, MRE vs ground truth each time."""
+    backends = {
+        "digital": None,
+        "fused_pallas": FusedPallasBackend(batch_tile=1),
+        "analogue": AnalogueBackend(spec=analogue_spec,
+                                    prog_key=jax.random.PRNGKey(seed)),
+    }
+    return {name: eval_hp_twin(twin, params, waveform, backend=b)["mre"]
+            for name, b in backends.items()}
 
 
 def train_hp_resnet(seed: int = 42, train_steps: int = 600,
@@ -183,10 +208,11 @@ def noise_robustness_grid(twin, params, read_noises, prog_noises,
             errs = []
             for r in range(repeats):
                 spec = AnalogueSpec(prog_noise=pn, read_noise=rn)
-                a_twin = twin.deploy_analogue(
-                    jax.random.PRNGKey(seed + 101 * r), params, spec,
+                backend = AnalogueBackend(
+                    spec=spec, prog_key=jax.random.PRNGKey(seed + 101 * r),
                     read_key=jax.random.PRNGKey(seed + 13 * r + 1))
-                pred = a_twin.simulate(None, ys[split - 1], ts[split - 1:])
+                a_twin = twin.with_backend(backend)
+                pred = a_twin.simulate(params, ys[split - 1], ts[split - 1:])
                 errs.append(float(l1(pred[1:], ys[split:])))
             rows.append({"prog_noise": pn, "read_noise": rn,
                          "extrap_l1": sum(errs) / len(errs)})

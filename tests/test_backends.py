@@ -1,0 +1,237 @@
+"""Backend parity: the same weights must produce the same trajectory on
+every execution substrate (paper's portability claim, Fig. 3-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.analogue import AnalogueSpec
+from repro.core.backends import (AnalogueBackend, DigitalBackend,
+                                 FusedPallasBackend, resolve_backend)
+from repro.core.ode import odeint
+from repro.core.twin import TwinFleet, make_autonomous_twin, make_driven_twin
+
+KEY = jax.random.PRNGKey(0)
+DRIVE = lambda t: jnp.sin(4.0 * t)
+
+NOISE_FREE = AnalogueSpec(prog_noise=0.0, read_noise=0.0, quantize=False)
+
+
+@pytest.fixture(scope="module")
+def hp_setup():
+    """Paper's HP-twin shape (2->14->14->1), driven."""
+    twin = make_driven_twin(1, DRIVE)
+    params = twin.init(KEY)
+    ts = jnp.linspace(0.0, 0.25, 51)
+    y0 = jnp.array([0.2])
+    return twin, params, y0, ts
+
+
+@pytest.fixture(scope="module")
+def l96_setup():
+    """Paper's Lorenz96-twin shape (6->64->64->6), autonomous."""
+    twin = make_autonomous_twin(6)
+    params = twin.init(jax.random.fold_in(KEY, 1))
+    ts = jnp.linspace(0.0, 0.125, 51)
+    y0 = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 2), (6,))
+    return twin, params, y0, ts
+
+
+# ---------------------------------------------------------------------------
+# (a) digital backend == odeint, exactly
+# ---------------------------------------------------------------------------
+
+def test_digital_backend_equals_odeint(hp_setup):
+    twin, params, y0, ts = hp_setup
+    got = twin.with_backend(DigitalBackend()).simulate(params, y0, ts)
+    want = odeint(twin.field, y0, ts, params, method="rk4")
+    assert jnp.array_equal(got, want)
+
+
+def test_default_backend_is_digital(hp_setup):
+    twin, params, y0, ts = hp_setup
+    default = twin.simulate(params, y0, ts)
+    explicit = twin.with_backend("digital").simulate(params, y0, ts)
+    assert jnp.array_equal(default, explicit)
+
+
+def test_resolve_backend_names():
+    assert isinstance(resolve_backend("digital"), DigitalBackend)
+    assert isinstance(resolve_backend("analogue"), AnalogueBackend)
+    assert isinstance(resolve_backend("fused_pallas"), FusedPallasBackend)
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend("quantum")
+
+
+# ---------------------------------------------------------------------------
+# (b) fused Pallas == digital within 1e-4
+# ---------------------------------------------------------------------------
+
+def test_fused_matches_digital_hp_driven(hp_setup):
+    twin, params, y0, ts = hp_setup
+    dig = twin.simulate(params, y0, ts)
+    fus = twin.with_backend(FusedPallasBackend(batch_tile=1)).simulate(
+        params, y0, ts)
+    np.testing.assert_allclose(fus, dig, atol=1e-4, rtol=1e-4)
+
+
+def test_fused_matches_digital_l96_autonomous(l96_setup):
+    twin, params, y0, ts = l96_setup
+    dig = twin.simulate(params, y0, ts)
+    fus = twin.with_backend(FusedPallasBackend(batch_tile=1)).simulate(
+        params, y0, ts)
+    np.testing.assert_allclose(fus, dig, atol=1e-4, rtol=1e-4)
+
+
+def test_fused_honours_steps_per_interval(hp_setup):
+    twin, params, y0, ts = hp_setup
+    twin_s = make_driven_twin(1, DRIVE, steps_per_interval=4)
+    dig = twin_s.simulate(params, y0, ts)
+    fus = twin_s.with_backend(FusedPallasBackend()).simulate(params, y0, ts)
+    assert fus.shape == dig.shape
+    np.testing.assert_allclose(fus, dig, atol=1e-4, rtol=1e-4)
+
+
+def test_fused_rejects_non_uniform_grid(hp_setup):
+    twin, params, y0, _ = hp_setup
+    bad_ts = jnp.array([0.0, 0.1, 0.15, 0.4])
+    with pytest.raises(ValueError, match="uniform"):
+        twin.with_backend(FusedPallasBackend()).simulate(params, y0, bad_ts)
+
+
+def test_fused_rejects_non_rk4(hp_setup):
+    twin, params, y0, ts = hp_setup
+    import dataclasses
+    node = dataclasses.replace(twin.node, method="euler",
+                               backend=FusedPallasBackend())
+    with pytest.raises(ValueError, match="RK4"):
+        node.trajectory(params, y0, ts)
+
+
+def test_interpret_autodetect_off_tpu():
+    from repro.kernels.fused_ode_mlp import _default_interpret
+    if jax.default_backend() == "tpu":
+        assert _default_interpret() is False
+    else:
+        # CPU/GPU hosts must fall back to the Pallas interpreter
+        assert _default_interpret() is True
+
+
+# ---------------------------------------------------------------------------
+# (c) noise-free analogue == digital within quantisation-free tolerance
+# ---------------------------------------------------------------------------
+
+def test_analogue_noise_free_matches_digital(hp_setup):
+    twin, params, y0, ts = hp_setup
+    dig = twin.simulate(params, y0, ts)
+    ana = twin.with_backend(
+        AnalogueBackend(spec=NOISE_FREE, prog_key=KEY)).simulate(
+            params, y0, ts)
+    np.testing.assert_allclose(ana, dig, atol=5e-4, rtol=1e-4)
+
+
+def test_analogue_backend_supports_dopri5(hp_setup):
+    """Adaptive dopri5 twins must still deploy to the analogue substrate
+    (regression: the default rollout used to reject 'dopri5')."""
+    twin, params, y0, ts = hp_setup
+    twin5 = make_driven_twin(1, DRIVE, method="dopri5")
+    dig = twin5.simulate(params, y0, ts)
+    ana = twin5.with_backend(
+        AnalogueBackend(spec=NOISE_FREE, prog_key=KEY)).simulate(
+            params, y0, ts)
+    np.testing.assert_allclose(ana, dig, atol=5e-4, rtol=1e-4)
+
+
+def test_analogue_needs_params_or_progs(hp_setup):
+    twin, params, y0, ts = hp_setup
+    at = twin.with_backend(AnalogueBackend(spec=NOISE_FREE))
+    with pytest.raises(ValueError, match="program the crossbars"):
+        at.simulate(None, y0, ts)
+
+
+def test_deploy_analogue_shim_still_works(hp_setup):
+    """Legacy path: deprecation warning, pre-programmed crossbars, and
+    the old ``simulate(None, ...)`` call pattern."""
+    twin, params, y0, ts = hp_setup
+    with pytest.warns(DeprecationWarning):
+        at = twin.deploy_analogue(KEY, params, NOISE_FREE)
+    old = at.simulate(None, y0, ts)
+    new = twin.with_backend(
+        AnalogueBackend(spec=NOISE_FREE, prog_key=KEY)).simulate(
+            params, y0, ts)
+    np.testing.assert_allclose(old, new, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# (d) batched fleet == stacked single-trajectory solves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", [
+    None,
+    FusedPallasBackend(batch_tile=2),
+    AnalogueBackend(spec=NOISE_FREE, prog_key=KEY),
+])
+def test_simulate_batch_equals_stacked_singles(hp_setup, backend):
+    twin, params, y0, ts = hp_setup
+    if backend is not None:
+        twin = twin.with_backend(backend)
+    y0s = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 3), (4, 1))
+    batched = twin.simulate_batch(params, y0s, ts)
+    stacked = jnp.stack([twin.simulate(params, y, ts) for y in y0s])
+    assert batched.shape == stacked.shape == (4, ts.shape[0], 1)
+    np.testing.assert_allclose(batched, stacked, atol=1e-5, rtol=1e-5)
+
+
+def test_fleet_per_twin_drives_match_across_backends(hp_setup):
+    """Per-twin drive parameters: the fused grid-tiled path must agree
+    with the digital vmap path."""
+    twin, params, _, ts = hp_setup
+
+    def family(t, theta):
+        return theta[0] * jnp.sin(theta[1] * t)
+
+    y0s = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 4), (4, 1))
+    thetas = jnp.array([[1.0, 4.0], [0.5, 8.0], [2.0, 2.0], [1.5, 6.0]])
+    fleet = TwinFleet(twin, drive_family=family)
+    dig = fleet.simulate(params, y0s, ts, thetas)
+    fus = fleet.with_backend(FusedPallasBackend(batch_tile=2)).simulate(
+        params, y0s, ts, thetas)
+    ana = fleet.with_backend(
+        AnalogueBackend(spec=NOISE_FREE, prog_key=KEY)).simulate(
+            params, y0s, ts, thetas)
+    np.testing.assert_allclose(fus, dig, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(ana, dig, atol=5e-4, rtol=1e-4)
+
+
+def test_fleet_drive_params_contract(hp_setup):
+    twin, params, _, ts = hp_setup
+    y0s = jnp.zeros((2, 1))
+    fleet = TwinFleet(twin, drive_family=lambda t, th: th * jnp.sin(t))
+    with pytest.raises(ValueError, match="together"):
+        fleet.simulate(params, y0s, ts)
+
+
+def test_fleet_autonomous_batch(l96_setup):
+    twin, params, _, ts = l96_setup
+    y0s = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 5), (8, 6))
+    dig = TwinFleet(twin).simulate(params, y0s, ts)
+    fus = TwinFleet(twin).with_backend(
+        FusedPallasBackend(batch_tile=4)).simulate(params, y0s, ts)
+    np.testing.assert_allclose(fus, dig, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# training still differentiates through the digital backend
+# ---------------------------------------------------------------------------
+
+def test_digital_backend_adjoint_gradients(hp_setup):
+    twin, params, y0, ts = hp_setup
+
+    def loss(p):
+        ys = twin.simulate(p, y0, ts[:9])
+        return jnp.mean(ys ** 2)
+
+    grads = jax.grad(loss)(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(jnp.all(jnp.isfinite(g)) for g in flat)
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
