@@ -10,27 +10,39 @@ the trajectory out.  A step-by-step XLA implementation would re-read the
 weights from HBM every f-eval and write every intermediate state back; at
 the paper's sizes that makes the solve HBM-latency-bound.
 
-Grid: one cell per batch tile (weights broadcast to every cell).
-Block layout:
-  y0      (bt, D)          per-tile
-  u_half  (2T+1, Du)       full, broadcast  (drive at half-steps for RK4)
-          — or, for per-twin drives (fleet serving), (2T+1, bt, Du)
-          per-tile slices of a (2T+1, B, Du) stimulus tensor
-  w_i/b_i (full)           broadcast — the "crossbar residency"
-  out     (T+1, bt, D)     per-tile trajectory
+Grid: (batch tiles, time chunks); weights broadcast to every cell.  Time
+is the minor grid dimension, so all chunks of one batch tile run back to
+back and the integration state is carried across chunks in a VMEM scratch
+buffer (re-seeded from ``y0`` whenever a new batch tile starts).
+Block layout per (i, j) cell:
+  y0       (bt, D)            per-tile, same block for every chunk
+  u_chunks (1, 2C+1, Du)      chunk j's drive half-steps, broadcast
+           — or, for per-twin drives (fleet serving), (1, 2C+1, bt, Du)
+           per-tile slices of a (n_chunks, 2C+1, B, Du) stimulus tensor
+  w_i/b_i  (full)             broadcast — the "crossbar residency"
+  out      (C, bt, D)         chunk j's slab of the trajectory
+  carry    (bt, D)            VMEM scratch, persistent across the grid
 
-VMEM budget per cell ~= (T+1)*bt*D*4  +  sum(w)  +  (2T+1)*Du*4 bytes;
-the wrapper asserts it fits the ~16 MB/core budget before lowering.
+VMEM per cell ~= weights + C*bt*D*4 (out slab) + (2C+1)*Du*4 (drive
+slab) + carry + activations; the horizon T no longer has to fit — only
+one chunk does.  ``time_chunk=None`` auto-picks the largest C within
+``vmem_budget_bytes``, so weights stay resident while arbitrarily long
+horizons stream chunk-by-chunk through HBM.  A ``ValueError`` is now
+raised only when the weights plus a single step genuinely cannot fit.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_VMEM_BUDGET = 14 * 1024 * 1024   # ~16 MB/core minus headroom
 
 
 def _default_interpret() -> bool:
@@ -40,7 +52,54 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _make_kernel(num_layers: int, T: int, dt: float, drive_dim: int,
+class ChunkPlan(NamedTuple):
+    """How a T-step horizon is streamed through VMEM."""
+    time_chunk: int          # C — RK4 steps resident per grid cell
+    num_chunks: int          # ceil(T / C)
+    vmem_bytes: int          # estimated per-cell VMEM footprint
+
+
+def plan_time_chunk(T: int, bt: int, D: int, du: int, per_tile_drive: bool,
+                    weights: Sequence[jax.Array], biases: Sequence[jax.Array],
+                    vmem_budget_bytes: int,
+                    time_chunk: int | None = None) -> ChunkPlan:
+    """Pick the largest time chunk C whose per-cell working set fits the
+    VMEM budget (or honour an explicit ``time_chunk`` override).
+
+    Per-cell bytes: weights + biases (resident), the (C, bt, D) output
+    slab, the (2C+1, u_width) drive slab, the (bt, D) carry, and a slack
+    term for RK4 activations (k1..k4, the widest matmul operand).
+    """
+    u_width = max(du, 1) * (bt if per_tile_drive else 1)
+    wbytes = sum(4 * w.size for w in weights) + sum(4 * b.size for b in biases)
+    act = 4 * bt * max(du + D, max(w.shape[1] for w in weights)) * 6
+    fixed = wbytes + act + 4 * bt * D            # + carry
+    per_step = 4 * bt * D + 8 * u_width          # out row + two u rows
+    if time_chunk is not None:
+        C = max(1, min(int(time_chunk), T))
+    else:
+        avail = vmem_budget_bytes - fixed - 4 * u_width   # the +1 u row
+        C = int(avail // per_step)
+        if C < 1:
+            raise ValueError(
+                f"fused kernel weights + one RK4 step need "
+                f"~{(fixed + per_step + 4 * u_width) / 2 ** 20:.1f} MiB VMEM "
+                f"(budget {vmem_budget_bytes / 2 ** 20:.1f}); shrink "
+                f"batch_tile or the MLP")
+        C = min(C, T)
+    need = fixed + 4 * C * bt * D + 4 * (2 * C + 1) * u_width
+    if need > vmem_budget_bytes:
+        # only reachable with an explicit (oversized) time_chunk — fail
+        # with a clear message instead of an opaque Mosaic allocation
+        # error at lowering time
+        raise ValueError(
+            f"time_chunk={C} needs ~{need / 2 ** 20:.1f} MiB VMEM "
+            f"(budget {vmem_budget_bytes / 2 ** 20:.1f}); shrink "
+            f"time_chunk or batch_tile")
+    return ChunkPlan(C, -(-T // C), need)
+
+
+def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
                  bt: int, per_tile_drive: bool = False):
     def kernel(*refs):
         y0_ref = refs[0]
@@ -48,9 +107,15 @@ def _make_kernel(num_layers: int, T: int, dt: float, drive_dim: int,
         w_refs = refs[2:2 + num_layers]
         b_refs = refs[2 + num_layers:2 + 2 * num_layers]
         out_ref = refs[2 + 2 * num_layers]
+        carry_ref = refs[3 + 2 * num_layers]
 
-        # Load weights ONCE — they stay register/VMEM-resident for the
-        # whole trajectory (the crossbar analogy).
+        # First chunk of a batch tile: seed the carried state from y0.
+        @pl.when(pl.program_id(1) == 0)
+        def _():
+            carry_ref[...] = y0_ref[...]
+
+        # Load weights ONCE per cell — they stay register/VMEM-resident
+        # for the whole chunk (the crossbar analogy).
         ws = [w_ref[...] for w_ref in w_refs]
         bs = [b_ref[...] for b_ref in b_refs]
 
@@ -72,24 +137,35 @@ def _make_kernel(num_layers: int, T: int, dt: float, drive_dim: int,
                 inp = y
             return mlp(inp)
 
-        y = y0_ref[...]
-        out_ref[0] = y
-
         def body(t, y):
-            u0 = u_ref[2 * t]
-            um = u_ref[2 * t + 1]
-            u1 = u_ref[2 * t + 2]
+            u0 = u_ref[0, 2 * t]
+            um = u_ref[0, 2 * t + 1]
+            u1 = u_ref[0, 2 * t + 2]
             k1 = f(u0, y)
             k2 = f(um, y + (dt / 2) * k1)
             k3 = f(um, y + (dt / 2) * k2)
             k4 = f(u1, y + dt * k3)
             y = y + (dt / 6) * (k1 + 2 * k2 + 2 * k3 + k4)
-            out_ref[t + 1] = y
+            out_ref[t] = y
             return y
 
-        lax.fori_loop(0, T, body, y)
+        y = lax.fori_loop(0, C, body, carry_ref[...])
+        carry_ref[...] = y
 
     return kernel
+
+
+def _chunk_drive(u: jax.Array, C: int, num_chunks: int) -> jax.Array:
+    """Re-slab a time-major drive (2T+1, ...) into per-chunk overlapping
+    windows (num_chunks, 2C+1, ...).  Consecutive RK4 chunks share their
+    boundary half-step sample, and the tail is edge-padded so a partial
+    final chunk integrates on a frozen drive (those steps are sliced off
+    the trajectory before returning)."""
+    pad = 2 * (num_chunks * C) + 1 - u.shape[0]
+    if pad:
+        u = jnp.pad(u, ((0, pad),) + ((0, 0),) * (u.ndim - 1), mode="edge")
+    idx = (jnp.arange(num_chunks) * 2 * C)[:, None] + jnp.arange(2 * C + 1)
+    return u[idx]
 
 
 def fused_node_rollout(
@@ -100,15 +176,19 @@ def fused_node_rollout(
     dt: float,
     *,
     batch_tile: int = 64,
+    time_chunk: int | None = None,
     interpret: bool | None = None,
-    vmem_budget_bytes: int = 14 * 1024 * 1024,
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
 ) -> jax.Array:
     """Full-trajectory RK4 solve; returns (T+1, B, D).  See module doc.
 
     ``u_half`` is the drive sampled at RK4 half-steps: (2T+1, Du) shared
     by the whole batch, or (B, 2T+1, Du) with one stimulus per batch
-    element (fleet serving); Du may be 0 (autonomous).  ``interpret=None``
-    auto-detects: compiled on TPU, interpreter elsewhere.
+    element (fleet serving); Du may be 0 (autonomous).  ``time_chunk``
+    bounds how many RK4 steps stay VMEM-resident per grid cell (None =
+    auto-pick the largest chunk fitting ``vmem_budget_bytes``), so the
+    horizon T is unbounded.  ``interpret=None`` auto-detects: compiled on
+    TPU, interpreter elsewhere.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -126,41 +206,43 @@ def fused_node_rollout(
     if B % bt:
         raise ValueError(f"batch {B} not divisible by tile {bt}")
 
-    wbytes = sum(4 * w.size for w in weights) + sum(4 * b.size for b in biases)
-    traj_bytes = 4 * (T + 1) * bt * D
-    u_bytes = 4 * (2 * T + 1) * max(du, 1) * (bt if per_tile_drive else 1)
-    need = wbytes + traj_bytes + u_bytes + 4 * bt * max(
-        du + D, max(w.shape[1] for w in weights))
-    if need > vmem_budget_bytes:
-        raise ValueError(
-            f"fused trajectory needs ~{need/2**20:.1f} MiB VMEM "
-            f"(budget {vmem_budget_bytes/2**20:.1f}); shrink batch_tile or T")
+    plan = plan_time_chunk(T, bt, D, du, per_tile_drive, weights, biases,
+                           vmem_budget_bytes, time_chunk)
+    C, NC = plan.time_chunk, plan.num_chunks
 
-    kernel = _make_kernel(L, T, float(dt), du, bt, per_tile_drive)
+    kernel = _make_kernel(L, C, float(dt), du, bt, per_tile_drive)
 
-    grid = (B // bt,)
+    grid = (B // bt, NC)                 # time minor: chunks run in order
     if per_tile_drive:
-        # time-major so the kernel's leading-axis u_ref[2t] indexing holds
-        u_in = jnp.transpose(u_half, (1, 0, 2))           # (2T+1, B, du)
-        u_spec = pl.BlockSpec((2 * T + 1, bt, du), lambda i: (0, i, 0))
+        # time-major so the kernel's u_ref[0, 2t] indexing holds
+        u_tm = jnp.transpose(u_half, (1, 0, 2))          # (2T+1, B, du)
+        u_in = _chunk_drive(u_tm, C, NC)                 # (NC, 2C+1, B, du)
+        u_spec = pl.BlockSpec((1, 2 * C + 1, bt, du),
+                              lambda i, j: (j, 0, i, 0))
     else:
-        u_in = u_half if du > 0 else jnp.zeros((2 * T + 1, 1), y0.dtype)
-        u_spec = pl.BlockSpec((2 * T + 1, max(du, 1)), lambda i: (0, 0))
+        u_tm = u_half if du > 0 else jnp.zeros((2 * T + 1, 1), y0.dtype)
+        u_in = _chunk_drive(u_tm, C, NC)                 # (NC, 2C+1, du')
+        u_spec = pl.BlockSpec((1, 2 * C + 1, max(du, 1)),
+                              lambda i, j: (j, 0, 0))
     in_specs = [
-        pl.BlockSpec((bt, D), lambda i: (i, 0)),          # y0
-        u_spec,                                           # u_half
+        pl.BlockSpec((bt, D), lambda i, j: (i, 0)),      # y0
+        u_spec,                                          # u_chunks
     ]
     for w in weights:
-        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec(w.shape, lambda i, j: (0, 0)))
     for b in biases:
-        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
-    out_spec = pl.BlockSpec((T + 1, bt, D), lambda i: (0, i, 0))
+        in_specs.append(pl.BlockSpec(b.shape, lambda i, j: (0,)))
+    out_spec = pl.BlockSpec((C, bt, D), lambda i, j: (j, i, 0))
 
-    return pl.pallas_call(
+    steps = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((T + 1, B, D), y0.dtype),
+        out_shape=jax.ShapeDtypeStruct((NC * C, B, D), y0.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, D), jnp.float32)],
         interpret=interpret,
     )(y0, u_in, *weights, *biases)
+    # Row k of ``steps`` is y after step k; prepend y0, drop the padded
+    # tail of a partial final chunk.
+    return jnp.concatenate([y0[None], steps[:T]], axis=0)

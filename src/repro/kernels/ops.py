@@ -18,7 +18,8 @@ from repro.core.analogue import AnalogueSpec
 from repro.core.losses import BIG, _pairwise_dist, soft_dtw as _soft_dtw_jnp
 from repro.kernels import ref
 from repro.kernels.crossbar_vmm import crossbar_matmul as _crossbar_pallas
-from repro.kernels.fused_ode_mlp import fused_node_rollout as _fused_pallas
+from repro.kernels.fused_ode_mlp import (DEFAULT_VMEM_BUDGET,
+                                         fused_node_rollout as _fused_pallas)
 from repro.kernels.softdtw import softdtw_pallas as _softdtw_pallas
 
 
@@ -29,20 +30,27 @@ from repro.kernels.softdtw import softdtw_pallas as _softdtw_pallas
 def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
                        u_half: jax.Array, dt: float,
                        *, batch_tile: int = 64,
-                       interpret: bool | None = None) -> jax.Array:
+                       time_chunk: int | None = None,
+                       interpret: bool | None = None,
+                       vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
+                       ) -> jax.Array:
     """Solve the twin's neural ODE with the weights-stationary kernel.
 
     ``params``: the core MLP param list [{'w','b'}, ...]; ``y0``: (B, D);
     ``u_half``: drive at half-steps — (2T+1, Du) shared across the batch,
     or (B, 2T+1, Du) per-twin (pass (2T+1, 0) when autonomous).  Returns
-    the (T+1, B, D) trajectory.  ``interpret=None`` auto-detects the
-    accelerator (compiled on TPU, interpreter on CPU/GPU hosts).
+    the (T+1, B, D) trajectory.  Long horizons stream through VMEM in
+    time chunks of ``time_chunk`` RK4 steps (None = auto-size from the
+    VMEM budget); ``interpret=None`` auto-detects the accelerator
+    (compiled on TPU, interpreter on CPU/GPU hosts).
     """
     weights = [p["w"].astype(jnp.float32) for p in params]
     biases = [p["b"].astype(jnp.float32) for p in params]
     return _fused_pallas(y0.astype(jnp.float32), u_half.astype(jnp.float32),
                          weights, biases, float(dt),
-                         batch_tile=batch_tile, interpret=interpret)
+                         batch_tile=batch_tile, time_chunk=time_chunk,
+                         interpret=interpret,
+                         vmem_budget_bytes=vmem_budget_bytes)
 
 
 def fused_node_rollout_ref(params, y0, u_half, dt):

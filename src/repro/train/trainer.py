@@ -16,10 +16,12 @@ both documented in EXPERIMENTS.md:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.losses import l1, soft_dtw
@@ -28,31 +30,128 @@ from repro.train.optimizer import Optimizer, apply_updates
 Pytree = Any
 
 
-def fit(loss_fn: Callable, params: Pytree, optimizer: Optimizer,
-        num_steps: int, key: jax.Array | None = None,
-        log_every: int = 0) -> tuple[Pytree, jax.Array]:
-    """Generic jitted full-batch descent; loss_fn(params, key) -> scalar."""
-    opt_state = optimizer.init(params)
+def _step_body(loss_fn: Callable, optimizer: Optimizer, has_key: bool,
+               params, opt_state, key):
+    """One descent step — the shared body of both training engines."""
+    if has_key:
+        key, sub = jax.random.split(key)
+    else:
+        sub = None
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, sub))(params)
+    updates, opt_state = optimizer.update(grads, opt_state, params)
+    params = apply_updates(params, updates)
+    return params, opt_state, key, loss
+
+
+def make_step_fn(loss_fn: Callable, optimizer: Optimizer,
+                 has_key: bool) -> Callable:
+    """Jitted single step: (params, opt_state, key) -> same + loss.
+
+    The per-step engine — one device dispatch per optimisation step.
+    Kept as the reference implementation for :func:`fit_per_step` and the
+    ``train_throughput`` benchmark baseline."""
 
     @jax.jit
     def step(params, opt_state, key):
-        if key is not None:
-            key, sub = jax.random.split(key)
-        else:
-            sub = None
-        loss, grads = jax.value_and_grad(
-            lambda p: loss_fn(p, sub))(params)
-        updates, opt_state = optimizer.update(grads, opt_state, params)
-        params = apply_updates(params, updates)
-        return params, opt_state, key, loss
+        return _step_body(loss_fn, optimizer, has_key, params, opt_state, key)
 
+    return step
+
+
+def make_scan_engine(loss_fn: Callable, optimizer: Optimizer, has_key: bool,
+                     donate: bool = False, unroll: int = 8) -> Callable:
+    """Scan-compiled engine: (params, opt_state, key, n) -> carries + losses.
+
+    Runs ``n`` optimisation steps as one ``lax.scan`` inside a single jit,
+    so the host dispatches once per *chunk* instead of once per step —
+    the paper-sized MLPs are otherwise dominated by host round-trips.
+    ``n`` is static (at most two compilations per fit: full chunk +
+    remainder).  ``donate=True`` donates the (params, opt_state) carry
+    buffers to the chunk (in-place on accelerators; ignored on CPU).
+    ``unroll`` unrolls the scan body (same ops in the same order — purely
+    a loop-overhead optimisation for the tiny paper-sized step bodies).
+    """
+
+    def scan_step(carry, _):
+        params, opt_state, key = carry
+        params, opt_state, key, loss = _step_body(
+            loss_fn, optimizer, has_key, params, opt_state, key)
+        return (params, opt_state, key), loss
+
+    @functools.partial(jax.jit, static_argnums=3,
+                       donate_argnums=(0, 1) if donate else ())
+    def run_chunk(params, opt_state, key, n):
+        (params, opt_state, key), losses = lax.scan(
+            scan_step, (params, opt_state, key), None, length=n,
+            unroll=min(unroll, n))
+        return params, opt_state, key, losses
+
+    return run_chunk
+
+
+def fit(loss_fn: Callable, params: Pytree, optimizer: Optimizer,
+        num_steps: int, key: jax.Array | None = None,
+        log_every: int = 0,
+        scan_chunk: int | None = None) -> tuple[Pytree, jax.Array]:
+    """Generic scan-compiled full-batch descent; loss_fn(params, key) -> scalar.
+
+    The training loop is a ``lax.scan`` over chunks of ``scan_chunk``
+    steps inside one jit with donated (params, opt_state) carries; the
+    host syncs only at chunk boundaries, where the chunk's stacked loss
+    history comes back as one array (logging reads from it — there is no
+    per-step ``float(loss)`` device sync).  ``scan_chunk=None`` runs all
+    ``num_steps`` in a single chunk when not logging, or chunks at the
+    logging cadence otherwise.  Numerics are step-for-step identical to
+    the per-step reference loop (:func:`fit_per_step`).
+    """
+    opt_state = optimizer.init(params)
+    if num_steps <= 0:
+        return params, jnp.zeros((0,), jnp.float32)
+    if scan_chunk is None:
+        scan_chunk = num_steps if not log_every else max(log_every, 100)
+    scan_chunk = max(1, min(scan_chunk, num_steps))
+
+    donate = jax.default_backend() != "cpu"
+    if donate:
+        # keep the caller's buffers alive — only fit-internal carries are
+        # donated chunk to chunk
+        params = jax.tree_util.tree_map(jnp.copy, params)
+        opt_state = jax.tree_util.tree_map(jnp.copy, opt_state)
+    run_chunk = make_scan_engine(loss_fn, optimizer, key is not None,
+                                 donate=donate)
+
+    chunks, done = [], 0
+    while done < num_steps:
+        n = min(scan_chunk, num_steps - done)
+        params, opt_state, key, losses = run_chunk(params, opt_state, key, n)
+        if log_every:
+            hist = np.asarray(losses)       # one host sync per chunk
+            for t in range(n):
+                i = done + t
+                if i % log_every == 0 or i == num_steps - 1:
+                    print(f"  step {i:5d}  loss {hist[t]:.6f}")
+        chunks.append(losses)
+        done += n
+    return params, jnp.concatenate(chunks)
+
+
+def fit_per_step(loss_fn: Callable, params: Pytree, optimizer: Optimizer,
+                 num_steps: int, key: jax.Array | None = None,
+                 log_every: int = 0) -> tuple[Pytree, jax.Array]:
+    """Reference per-step loop (one jitted dispatch per step).
+
+    Superseded by the scan-compiled :func:`fit` on every hot path; kept
+    as the equivalence oracle and the ``train_throughput`` baseline.
+    """
+    opt_state = optimizer.init(params)
+    step = make_step_fn(loss_fn, optimizer, key is not None)
     losses = []
     for i in range(num_steps):
         params, opt_state, key, loss = step(params, opt_state, key)
         losses.append(loss)
         if log_every and (i % log_every == 0 or i == num_steps - 1):
             print(f"  step {i:5d}  loss {float(loss):.6f}")
-    return params, jnp.stack(losses)
+    return params, jnp.stack(losses) if losses else jnp.zeros((0,))
 
 
 # ---------------------------------------------------------------------------

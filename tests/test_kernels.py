@@ -39,12 +39,78 @@ def test_fused_node_matches_ref(sizes, drive_dim, state_dim, batch, T):
     assert out_k.shape == (T + 1, batch, state_dim)
 
 
-def test_fused_node_vmem_guard():
+@pytest.mark.parametrize("T,chunk", [
+    (5, 8),     # single partial chunk (chunk > T)
+    (8, 4),     # exactly two chunks
+    (5, 4),     # two chunks, T not divisible by the chunk
+    (20, 4),    # many chunks
+    (21, 4),    # many chunks + partial tail
+])
+def test_fused_node_time_chunks_match_ref(T, chunk):
+    """The time-chunked grid must carry the state across chunk boundaries
+    exactly — parity vs the jnp reference straddling one/two/many chunks,
+    including T not divisible by the chunk size."""
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, 31 * T + chunk))
+    params = mlp_init(k1, (2, 14, 14, 1))
+    y0 = 0.3 * jax.random.normal(k2, (8, 1))
+    ts = jnp.linspace(0.0, 0.5, T + 1)
+    uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
+    out_k = ops.fused_node_rollout(params, y0, uh, float(ts[1] - ts[0]),
+                                   batch_tile=4, time_chunk=chunk)
+    out_r = ops.fused_node_rollout_ref(params, y0, uh, float(ts[1] - ts[0]))
+    assert out_k.shape == (T + 1, 8, 1)
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_node_time_chunks_per_tile_drive():
+    """Per-twin drives must be sliced per (tile, chunk) cell correctly."""
+    params = mlp_init(KEY, (2, 14, 14, 1))
+    T, B = 11, 8
+    ts = jnp.linspace(0.0, 0.5, T + 1)
+    amps = 0.5 + jnp.arange(B, dtype=jnp.float32) / B
+    uh = jnp.stack([ops.half_step_drive(lambda t, a=a: a * jnp.sin(4 * t), ts)
+                    for a in amps])                       # (B, 2T+1, 1)
+    y0 = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 5), (B, 1))
+    out_k = ops.fused_node_rollout(params, y0, uh, float(ts[1] - ts[0]),
+                                   batch_tile=4, time_chunk=3)
+    out_r = ops.fused_node_rollout_ref(params, y0, uh, float(ts[1] - ts[0]))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_node_long_horizon_no_vmem_error():
+    """The old hard VMEM guard is gone: the exact shape that used to raise
+    'needs ~X MiB VMEM' now auto-chunks over time and matches the
+    reference at T=10,000 (acceptance: max abs err <= 1e-4)."""
+    from repro.kernels.fused_ode_mlp import (DEFAULT_VMEM_BUDGET,
+                                             plan_time_chunk)
+    params = mlp_init(KEY, (6, 64, 64, 6))
+    w = [p["w"].astype(jnp.float32) for p in params]
+    b = [p["b"].astype(jnp.float32) for p in params]
+    T = 10000
+    plan = plan_time_chunk(T, 64, 6, 0, False, w, b, DEFAULT_VMEM_BUDGET)
+    assert plan.num_chunks > 1                # genuinely exceeds one chunk
+    assert plan.vmem_bytes <= DEFAULT_VMEM_BUDGET
+    y0 = 0.1 * jax.random.normal(jax.random.fold_in(KEY, 9), (64, 6))
+    uh = jnp.zeros((2 * T + 1, 0))
+    out_k = ops.fused_node_rollout(params, y0, uh, 1e-4)   # no ValueError
+    out_r = ops.fused_node_rollout_ref(params, y0, uh, 1e-4)
+    assert out_k.shape == (T + 1, 64, 6)
+    assert float(jnp.abs(out_k - out_r).max()) <= 1e-4
+
+
+def test_fused_node_vmem_guard_only_when_weights_dont_fit():
+    """ValueError survives only for the genuinely impossible cases: the
+    weights plus a single RK4 step exceed the budget, or an explicit
+    time_chunk is oversized for it."""
     params = mlp_init(KEY, (6, 64, 64, 6))
     y0 = jnp.zeros((64, 6))
-    uh = jnp.zeros((2 * 100000 + 1, 0))
+    uh = jnp.zeros((2 * 100 + 1, 0))
     with pytest.raises(ValueError, match="VMEM"):
-        ops.fused_node_rollout(params, y0, uh, 1e-3)
+        ops.fused_node_rollout(params, y0, uh, 1e-3,
+                               vmem_budget_bytes=16 * 1024)
+    with pytest.raises(ValueError, match="time_chunk"):
+        ops.fused_node_rollout(params, y0, uh, 1e-3, time_chunk=100,
+                               vmem_budget_bytes=128 * 1024)
 
 
 def test_fused_node_matches_odeint():

@@ -1,0 +1,114 @@
+"""Training-engine equivalence: the scan-compiled fit() must reproduce
+the per-step reference loop step for step (same seeds -> same params)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.twin import make_driven_twin
+from repro.data import hp_memristor as hp
+from repro.train import trainer
+from repro.train.optimizer import adam, sgd, warmup_cosine_schedule
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def hp_losses():
+    """The HP-twin recipe's two loss phases (pretrain + trajectory)."""
+    ts, xs, _, _ = hp.generate("sine", num_points=500, dt=1e-3,
+                               amp=2.0, freq=2.0)
+    ys = xs[:, None]
+    twin = make_driven_twin(1, hp.WAVEFORMS["sine"](amp=2.0, freq=2.0),
+                            hidden=14)
+    params = twin.init(jax.random.PRNGKey(42))
+    tsm, ysm, dys = trainer.finite_difference_derivatives(ts, ys)
+    pre_loss = trainer.derivative_matching_loss(twin.field, tsm, ysm, dys)
+    ts_seg, ys_seg = trainer.make_segments(ts, ys, 50)
+    traj_loss = trainer.segment_loss_fn(twin, ts_seg, ys_seg, "l1",
+                                        noise_std=0.002)
+    return params, pre_loss, traj_loss
+
+
+def _assert_trees_close(a, b, rtol=1e-4, atol=1e-5):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("scan_chunk", [None, 1, 37, 200])
+def test_fit_equals_per_step_reference(hp_losses, scan_chunk):
+    """Same seeds -> same final params, for any chunking of the scan
+    (including a partial final chunk: 200 steps, chunk 37)."""
+    params, pre_loss, _ = hp_losses
+    steps = 200
+    p_scan, h_scan = trainer.fit(pre_loss, params, adam(1e-2), steps,
+                                 jax.random.PRNGKey(1),
+                                 scan_chunk=scan_chunk)
+    p_ref, h_ref = trainer.fit_per_step(pre_loss, params, adam(1e-2), steps,
+                                        jax.random.PRNGKey(1))
+    _assert_trees_close(p_scan, p_ref)
+    assert h_scan.shape == h_ref.shape == (steps,)
+    np.testing.assert_allclose(h_scan, h_ref, rtol=1e-4, atol=1e-6)
+
+
+def test_fit_equals_per_step_on_trajectory_loss(hp_losses):
+    """The noise-regularised multiple-shooting phase: the PRNG key must be
+    split in exactly the same order inside the scan as in the loop."""
+    params, _, traj_loss = hp_losses
+    steps = 20
+    p_scan, _ = trainer.fit(traj_loss, params, adam(1e-3), steps,
+                            jax.random.PRNGKey(2), scan_chunk=7)
+    p_ref, _ = trainer.fit_per_step(traj_loss, params, adam(1e-3), steps,
+                                    jax.random.PRNGKey(2))
+    _assert_trees_close(p_scan, p_ref)
+
+
+def test_fit_keyless_and_schedule(hp_losses):
+    """key=None path (no PRNG in the carry) + a stateful LR schedule."""
+    params, pre_loss, _ = hp_losses
+    opt = lambda: adam(warmup_cosine_schedule(1e-2, 10, 60))
+    p_scan, h_scan = trainer.fit(pre_loss, params, opt(), 60, None,
+                                 scan_chunk=25)
+    p_ref, h_ref = trainer.fit_per_step(pre_loss, params, opt(), 60, None)
+    _assert_trees_close(p_scan, p_ref)
+    np.testing.assert_allclose(h_scan, h_ref, rtol=1e-4, atol=1e-6)
+
+
+def test_fit_sgd_momentum_state_carried(hp_losses):
+    """Non-NamedTuple optimizer state (sgd's (step, vel) tuple) must
+    survive the scan carry."""
+    params, pre_loss, _ = hp_losses
+    p_scan, _ = trainer.fit(pre_loss, params, sgd(1e-3, momentum=0.9), 30,
+                            None, scan_chunk=8)
+    p_ref, _ = trainer.fit_per_step(pre_loss, params,
+                                    sgd(1e-3, momentum=0.9), 30, None)
+    _assert_trees_close(p_scan, p_ref)
+
+
+def test_fit_zero_steps(hp_losses):
+    params, pre_loss, _ = hp_losses
+    p, hist = trainer.fit(pre_loss, params, adam(1e-2), 0)
+    assert hist.shape == (0,)
+    _assert_trees_close(p, params, rtol=0, atol=0)
+
+
+def test_fit_logging_syncs_only_at_chunk_boundaries(hp_losses, capsys):
+    """Logging comes from the chunk's stacked loss array (no per-step
+    float(loss) sync) and still prints the same step lines."""
+    params, pre_loss, _ = hp_losses
+    trainer.fit(pre_loss, params, adam(1e-2), 45, None, log_every=20,
+                scan_chunk=30)
+    out = capsys.readouterr().out
+    for step in (0, 20, 40, 44):
+        assert f"step {step:5d}" in out
+
+
+def test_fit_does_not_invalidate_caller_params(hp_losses):
+    """fit() copies before donating: the caller's params stay usable."""
+    params, pre_loss, _ = hp_losses
+    before = jax.tree_util.tree_map(np.asarray, params)
+    trainer.fit(pre_loss, params, adam(1e-2), 5)
+    _assert_trees_close(params, before, rtol=0, atol=0)
