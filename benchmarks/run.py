@@ -15,6 +15,10 @@ against.  Modules:
   fleet_backends       — digital vs fused-Pallas vs analogue fleet rollout
                          throughput at fleet sizes {1, 64, 1024}, plus a
                          long-horizon (T=10k) time-chunked fused rollout
+  fleet_sharded        — multi-device fleet serving via launch.fleet_serving:
+                         single-device baseline vs sharded rollout on the
+                         trivial mesh, plus per-device scaling rows from a
+                         virtual multi-device subprocess
   train_throughput     — scan-compiled fit() engine vs per-step baseline
   roofline             — per-(arch x shape) roofline table from the dry-run
 
@@ -305,6 +309,94 @@ def bench_fleet_backends():
          f"chunk {plan.time_chunk} x{plan.num_chunks}")
 
 
+def bench_fleet_sharded():
+    """Multi-device fleet serving (repro.launch.fleet_serving).
+
+    In-process rows compare the single-device ``TwinFleet`` rollout with
+    the sharded path on the trivial mesh of this host — same program,
+    plus the shard_map wrapper, so the delta is pure sharding overhead
+    (and the derived field carries the parity error, which must be 0).
+    The per-device scaling rows run in a subprocess with virtual host
+    devices (``--xla_force_host_platform_device_count``): on CPU the
+    virtual devices share the same cores, so these rows validate the
+    scaling *mechanism* and become real speedups on multi-chip hosts.
+    """
+    import subprocess
+    import textwrap
+
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_twin_mesh
+    from repro.train import recipes
+
+    n = 64 if FAST else 256
+    horizon = 50 if FAST else 100
+    fleet = recipes.make_l96_fleet()
+    params = fleet.twin.init(jax.random.PRNGKey(0))
+    ts = recipes.l96_fleet_ts(horizon=horizon)
+    y0s = next(recipes.l96_fleet_requests(fleet_size=n))
+    mesh = make_twin_mesh()
+
+    single = jax.jit(lambda p, y: fleet.simulate(p, y, ts))
+    sharded = jax.jit(
+        lambda p, y: fleet.rollout_batch(p, y, ts, mesh=mesh))
+    # parity from the compile-time outputs — these calls double as the
+    # JIT warm-up, so timing below adds no redundant rollouts
+    ref = jax.block_until_ready(single(params, y0s))
+    out = jax.block_until_ready(sharded(params, y0s))
+    gap = float(jnp.abs(out - ref).max())
+    us_single = _timeit(single, params, y0s)
+    us_sharded = _timeit(sharded, params, y0s)
+    emit(f"fleet_sharded/fused/single_device/n{n}", us_single,
+         f"{n * horizon / (us_single * 1e-6):.0f} twin-steps/s")
+    emit(f"fleet_sharded/fused/sharded_1dev/n{n}", us_sharded,
+         f"{n * horizon / (us_sharded * 1e-6):.0f} twin-steps/s "
+         f"parity_max_err {gap:.1e}")
+
+    # per-device scaling: virtual 4-device mesh in a subprocess (XLA_FLAGS
+    # must be set before jax initialises)
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import time
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_twin_mesh
+        from repro.train import recipes
+        fleet = recipes.make_l96_fleet(backend="digital")
+        params = fleet.twin.init(jax.random.PRNGKey(0))
+        ts = recipes.l96_fleet_ts(horizon={horizon})
+        y0s = next(recipes.l96_fleet_requests(fleet_size={n}))
+        for shards in [1, 2, 4]:
+            mesh = make_twin_mesh(shards)
+            fn = jax.jit(lambda p, y: fleet.rollout_batch(p, y, ts,
+                                                          mesh=mesh))
+            jax.block_until_ready(fn(params, y0s))
+            times = []
+            for _ in range(3):
+                t0 = time.time()
+                jax.block_until_ready(fn(params, y0s))
+                times.append(time.time() - t0)
+            us = min(times) * 1e6
+            rate = {n} * {horizon} / (us * 1e-6)
+            print(f"RESULT,fleet_sharded/digital/shards{{shards}}/"
+                  f"n{n},{{us:.3f}},{{rate:.0f}} twin-steps/s")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True,
+                       env={**os.environ,
+                            "PYTHONPATH": os.path.join(
+                                os.path.dirname(__file__), "..", "src")})
+    ok = False
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT,"):
+            _, name, us, derived = line.split(",", 3)
+            emit(name, float(us), derived)
+            ok = True
+    if not ok:
+        print(f"  (virtual multi-device subprocess failed)\n"
+              f"{r.stderr[-2000:]}")
+
+
 def bench_train_throughput():
     """Scan-compiled training engine vs the per-step dispatch loop.
 
@@ -382,6 +474,7 @@ BENCHES = {
     "fig4j_noise": None,
     "kernels": bench_kernels,
     "fleet_backends": bench_fleet_backends,
+    "fleet_sharded": bench_fleet_sharded,
     "train_throughput": bench_train_throughput,
     "roofline": bench_roofline,
 }

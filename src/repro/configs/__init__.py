@@ -1,19 +1,27 @@
-"""Architecture registry: ``get_config(name)`` / ``get_smoke(name)``."""
+"""Architecture registry: ``get_config(name)`` / ``get_smoke(name)``.
+
+Twin configs (the paper's workloads, used by serving and recipes) live
+at the top level — ``repro.configs.hp_twin`` and
+``repro.configs.lorenz96_twin`` (which also defines the fleet-serving
+scenario).  The seed-era LM architectures are quarantined under
+``repro.configs.lm`` — only the roofline dry-run and the model-zoo tests
+touch them, and only via this registry.
+"""
 from repro.configs.base import (SHAPES, ArchConfig, ShapeConfig,
                                 active_param_count, param_count,
                                 runnable_shapes)
 
 _MODULES = {
-    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
-    "deepseek-v2-236b": "deepseek_v2_236b",
-    "jamba-v0.1-52b": "jamba_v0_1_52b",
-    "llama3-8b": "llama3_8b",
-    "internlm2-20b": "internlm2_20b",
-    "qwen3-1.7b": "qwen3_1_7b",
-    "qwen1.5-32b": "qwen1_5_32b",
-    "musicgen-medium": "musicgen_medium",
-    "xlstm-125m": "xlstm_125m",
-    "chameleon-34b": "chameleon_34b",
+    "deepseek-v2-lite-16b": "lm.deepseek_v2_lite_16b",
+    "deepseek-v2-236b": "lm.deepseek_v2_236b",
+    "jamba-v0.1-52b": "lm.jamba_v0_1_52b",
+    "llama3-8b": "lm.llama3_8b",
+    "internlm2-20b": "lm.internlm2_20b",
+    "qwen3-1.7b": "lm.qwen3_1_7b",
+    "qwen1.5-32b": "lm.qwen1_5_32b",
+    "musicgen-medium": "lm.musicgen_medium",
+    "xlstm-125m": "lm.xlstm_125m",
+    "chameleon-34b": "lm.chameleon_34b",
 }
 
 ARCH_NAMES = list(_MODULES)

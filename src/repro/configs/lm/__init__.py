@@ -1,0 +1,8 @@
+"""Quarantined seed-era LM architecture configs.
+
+The twin workload (HP memristor + Lorenz96 fleets — the paper and the
+serving pipeline) never imports these; they exist solely for the LM
+roofline dry-run (:mod:`repro.launch.dryrun`), the model-zoo smoke tests
+and the sharding-rule tests.  Reach them through the registry
+(``repro.configs.get_config``/``get_smoke``), not by direct import.
+"""

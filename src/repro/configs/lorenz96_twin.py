@@ -1,4 +1,7 @@
-"""The paper's own Lorenz96 twin configuration (Methods)."""
+"""The paper's own Lorenz96 twin configuration (Methods), plus the
+fleet-serving scale-up scenario built on it (Fig. 4 / ROADMAP north
+star): many assets sharing one trained twin, sharded over a device mesh
+by :mod:`repro.launch.fleet_serving`."""
 import dataclasses
 
 
@@ -18,3 +21,27 @@ class Lorenz96TwinConfig:
 
 
 CONFIG = Lorenz96TwinConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class Lorenz96FleetConfig:
+    """Fleet serving: N independent Lorenz96 assets, one trained twin.
+
+    The model sizes mirror :class:`Lorenz96TwinConfig` (weights from a
+    training run drop straight in via ``train.checkpoint.save_twin`` /
+    ``load_twin``); the serving knobs size the request stream and the
+    per-device execution tile.
+    """
+    state_dim: int = 6
+    hidden: int = 64
+    n_hidden_layers: int = 2
+    dt: float = 0.0025            # same grid the twin was trained on
+    fleet_size: int = 1024        # assets per request batch
+    horizon: int = 200            # RK4 steps per request
+    y0_spread: float = 0.5        # stddev of sensed initial conditions
+                                  # (the training data is normalised)
+    backend: str = "fused_pallas"
+    batch_tile: int = 64          # fused-kernel grid tile per device
+
+
+FLEET = Lorenz96FleetConfig()

@@ -23,6 +23,14 @@ differently — the fused backend runs the whole RK4 trajectory inside one
 ``rollout_batch`` is the fleet primitive: N independent initial
 conditions (and optionally per-twin drive parameters) in ONE device
 program — vmap for digital/analogue, grid batch-tiling for fused Pallas.
+It is also the mesh-aware entry point: passing ``mesh=`` (a
+``jax.sharding.Mesh`` with a ``"twins"`` axis) shards the fleet dimension
+across devices with ``shard_map`` — weights replicated, ``y0s`` and
+per-twin drive parameters split, each device running its slice through
+the SAME per-device implementation (``rollout_batch_local``).  Backends
+therefore customise ``rollout_batch_local`` and inherit multi-device
+serving for free; the sharding machinery itself lives in
+:mod:`repro.launch.fleet_serving`.
 """
 from __future__ import annotations
 
@@ -58,20 +66,37 @@ def _with_drive(state: ExecState, drive: Optional[Callable]) -> ExecState:
 
 @runtime_checkable
 class Backend(Protocol):
-    """Structural type every execution substrate implements."""
+    """Structural type every execution substrate implements.
+
+    Lifecycle: ``program`` once per set of weights, then any number of
+    ``apply``/``rollout``/``rollout_batch`` calls against the returned
+    :class:`ExecState`.  See ``docs/architecture.md`` for how the layers
+    compose and :class:`BaseBackend` for the default implementations.
+    """
 
     name: str
 
-    def program(self, field: Callable, params: Pytree) -> ExecState: ...
+    def program(self, field: Callable, params: Pytree) -> ExecState:
+        """Deploy ``params`` onto the substrate; returns the programmed
+        state (digital: identity; analogue: conductances written, frozen;
+        fused: f32 operands staged for VMEM residency)."""
+        ...
 
-    def apply(self, state: ExecState, t: jax.Array, x: jax.Array) -> jax.Array: ...
+    def apply(self, state: ExecState, t: jax.Array, x: jax.Array) -> jax.Array:
+        """One vector-field evaluation dx/dt = f(t, x) on the substrate."""
+        ...
 
     def rollout(self, state: ExecState, y0: jax.Array, ts: jax.Array, *,
                 method: str = "rk4", steps_per_interval: int = 1,
-                gradient: str = "direct") -> jax.Array: ...
+                gradient: str = "direct") -> jax.Array:
+        """Solve the IVP from ``y0`` over ``ts`` -> (T+1, D) trajectory."""
+        ...
 
     def rollout_batch(self, state: ExecState, y0s: jax.Array,
-                      ts: jax.Array, **kw) -> jax.Array: ...
+                      ts: jax.Array, **kw) -> jax.Array:
+        """Fleet solve: N initial conditions -> (N, T+1, D) in one device
+        program; ``mesh=`` shards the fleet axis across devices."""
+        ...
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -99,13 +124,39 @@ class BaseBackend:
     def rollout_batch(self, state: ExecState, y0s, ts, *,
                       drive_family: Optional[Callable] = None,
                       drive_params: Optional[jax.Array] = None,
-                      **kw) -> jax.Array:
-        """vmap N independent rollouts into one device program.
+                      mesh=None, **kw) -> jax.Array:
+        """Fleet rollout: N independent twins in one device program.
 
         ``drive_family(t, theta)`` + per-twin ``drive_params`` (N, ...)
         re-binds each fleet member's drive; returns (N, T+1, D) matching
         ``jnp.stack([rollout(y0_i) for i])``.
+
+        ``mesh``: optional ``jax.sharding.Mesh`` with a ``"twins"`` axis.
+        When given, the fleet dimension is sharded across the mesh with
+        ``shard_map`` (weights replicated, N padded up to a multiple of
+        the shard count, padded rows dropped from the result) and each
+        device runs
+        :meth:`rollout_batch_local` on its slice; ``mesh=None`` runs the
+        whole fleet on the current device.  Results are identical either
+        way — sharding only changes placement.
         """
+        if mesh is not None:
+            from repro.launch.fleet_serving import shard_rollout_batch
+            return shard_rollout_batch(self, state, y0s, ts, mesh=mesh,
+                                       drive_family=drive_family,
+                                       drive_params=drive_params, **kw)
+        return self.rollout_batch_local(state, y0s, ts,
+                                        drive_family=drive_family,
+                                        drive_params=drive_params, **kw)
+
+    def rollout_batch_local(self, state: ExecState, y0s, ts, *,
+                            drive_family: Optional[Callable] = None,
+                            drive_params: Optional[jax.Array] = None,
+                            **kw) -> jax.Array:
+        """Single-device fleet implementation (the shard body): vmap N
+        independent rollouts into one device program.  Subclasses override
+        THIS (not ``rollout_batch``) to keep the mesh dispatch in one
+        place."""
         if drive_family is None:
             return jax.vmap(lambda y0: self.rollout(state, y0, ts, **kw))(y0s)
 
@@ -280,11 +331,14 @@ class FusedPallasBackend(BaseBackend):
             vmem_budget_bytes=self.vmem_budget_bytes)
         return traj[::sub, 0, :]
 
-    def rollout_batch(self, state: ExecState, y0s, ts, *,
-                      drive_family: Optional[Callable] = None,
-                      drive_params: Optional[jax.Array] = None,
-                      method: str = "rk4", steps_per_interval: int = 1,
-                      gradient: str = "direct") -> jax.Array:
+    def rollout_batch_local(self, state: ExecState, y0s, ts, *,
+                            drive_family: Optional[Callable] = None,
+                            drive_params: Optional[jax.Array] = None,
+                            method: str = "rk4", steps_per_interval: int = 1,
+                            gradient: str = "direct") -> jax.Array:
+        """Per-device fleet solve: tile the local batch across the Pallas
+        grid (weights broadcast to every cell, per-twin drives sampled on
+        the half-step grid per tile)."""
         del gradient
         from repro.kernels.fused_ode_mlp import fused_node_rollout
         if method != "rk4":
@@ -315,6 +369,8 @@ class FusedPallasBackend(BaseBackend):
 
 DEFAULT_BACKEND = DigitalBackend()
 
+#: Registry of substrate names accepted anywhere a Backend is expected
+#: (``twin.with_backend("fused_pallas")``, recipe ``backend=`` kwargs).
 BACKENDS = {
     "digital": DigitalBackend,
     "analogue": AnalogueBackend,

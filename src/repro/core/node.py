@@ -124,14 +124,19 @@ class NeuralODE:
 
     def trajectory_batch(self, params: Pytree, y0s: jax.Array,
                          ts: jax.Array, *, drive_family=None,
-                         drive_params=None) -> jax.Array:
+                         drive_params=None, mesh=None) -> jax.Array:
         """Fleet solve: N initial conditions (and optionally per-twin
-        drive parameters) in one device program, (N, len(ts), D)."""
+        drive parameters) in one device program, (N, len(ts), D).
+
+        ``mesh``: optional twin mesh — shards the fleet dimension across
+        devices (see :meth:`repro.core.backends.BaseBackend.rollout_batch`).
+        """
         backend = resolve_backend(self.backend)
         state = backend.program(self.field, params)
         return backend.rollout_batch(state, y0s, ts,
                                      drive_family=drive_family,
                                      drive_params=drive_params,
+                                     mesh=mesh,
                                      **self._solver_kw())
 
     def __call__(self, params, y0, ts):

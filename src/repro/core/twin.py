@@ -55,14 +55,20 @@ class DigitalTwin:
 
     def simulate_batch(self, params: Pytree, y0s: jax.Array, ts: jax.Array,
                        *, drive_family: Optional[Callable] = None,
-                       drive_params: Optional[jax.Array] = None):
+                       drive_params: Optional[jax.Array] = None,
+                       mesh=None):
         """Batched fleet rollout: (N, D) initial conditions -> (N, T+1, D),
         equal to stacking N single-trajectory solves but executed as one
         device program (vmap, or one Pallas grid for the fused backend).
+
+        ``mesh``: optional ``jax.sharding.Mesh`` with a ``"twins"`` axis
+        — shards the fleet dimension across devices (weights replicated,
+        uneven N padded, padding dropped); ``None`` stays single-device.
         """
         return self.node.trajectory_batch(params, y0s, ts,
                                           drive_family=drive_family,
-                                          drive_params=drive_params)
+                                          drive_params=drive_params,
+                                          mesh=mesh)
 
     def deploy_analogue(self, key: jax.Array, params: Pytree,
                         spec: AnalogueSpec,
@@ -111,12 +117,30 @@ class TwinFleet:
 
     def simulate(self, params: Pytree, y0s: jax.Array, ts: jax.Array,
                  drive_params: Optional[jax.Array] = None) -> jax.Array:
+        return self.rollout_batch(params, y0s, ts, drive_params)
+
+    def rollout_batch(self, params: Pytree, y0s: jax.Array, ts: jax.Array,
+                      drive_params: Optional[jax.Array] = None, *,
+                      mesh=None) -> jax.Array:
+        """Fleet rollout, optionally sharded over a multi-device mesh.
+
+        ``mesh=None``: the whole fleet runs as one program on the current
+        device (vmap / one Pallas grid).  ``mesh``: a ``jax.sharding.Mesh``
+        with a ``"twins"`` axis — the fleet dimension of ``y0s`` and
+        ``drive_params`` is split across devices with ``shard_map``
+        (weights replicated, uneven N padded, padded rows dropped from
+        the result), each device
+        executing this fleet's backend on its slice.  Both paths return
+        the same (N, T+1, D) trajectories; see
+        :mod:`repro.launch.fleet_serving` for the serving pipeline on top.
+        """
         if (drive_params is None) != (self.drive_family is None):
             raise ValueError(
                 "drive_params and drive_family must be given together")
         return self.twin.simulate_batch(params, y0s, ts,
                                         drive_family=self.drive_family,
-                                        drive_params=drive_params)
+                                        drive_params=drive_params,
+                                        mesh=mesh)
 
 
 def simulate_batch(twin: DigitalTwin, params: Pytree, y0s: jax.Array,

@@ -36,13 +36,33 @@ def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
                        ) -> jax.Array:
     """Solve the twin's neural ODE with the weights-stationary kernel.
 
-    ``params``: the core MLP param list [{'w','b'}, ...]; ``y0``: (B, D);
-    ``u_half``: drive at half-steps — (2T+1, Du) shared across the batch,
-    or (B, 2T+1, Du) per-twin (pass (2T+1, 0) when autonomous).  Returns
-    the (T+1, B, D) trajectory.  Long horizons stream through VMEM in
-    time chunks of ``time_chunk`` RK4 steps (None = auto-size from the
-    VMEM budget); ``interpret=None`` auto-detects the accelerator
-    (compiled on TPU, interpreter on CPU/GPU hosts).
+    The whole RK4 trajectory runs inside one ``pallas_call`` with the MLP
+    weights pinned in VMEM (grid layout and VMEM model:
+    ``docs/kernels.md``).  Forward-only; requires a uniform time grid
+    (``dt`` and the step count are kernel compile-time constants).
+
+    Args:
+      params: the core MLP param list ``[{'w','b'}, ...]``.
+      y0: (B, D) initial conditions — one row per fleet member.
+      u_half: drive sampled at RK4 half-steps (:func:`half_step_drive`) —
+        (2T+1, Du) shared across the batch, (B, 2T+1, Du) per-twin
+        (fleet serving), or (2T+1, 0) when autonomous.
+      dt: RK4 step size (uniform).
+      batch_tile: fleet members per grid cell; B must divide by it
+        (``FusedPallasBackend`` auto-shrinks it to a divisor).
+      time_chunk: RK4 steps resident in VMEM per grid cell.  ``None``
+        auto-picks the largest chunk whose working set fits
+        ``vmem_budget_bytes`` (see ``fused_ode_mlp.plan_time_chunk``), so
+        the horizon T is unbounded; an explicit value is validated
+        against the same budget.
+      interpret: ``None`` auto-detects the accelerator (compiled on TPU,
+        interpreter on CPU/GPU hosts); pass True/False to force.
+      vmem_budget_bytes: the planner's per-cell VMEM budget.  If the
+        weights plus a single RK4 step cannot fit, a ``ValueError`` is
+        raised at planning time ("shrink batch_tile or the MLP").
+
+    Returns:
+      The (T+1, B, D) trajectory (y0 prepended).
     """
     weights = [p["w"].astype(jnp.float32) for p in params]
     biases = [p["b"].astype(jnp.float32) for p in params]

@@ -1,6 +1,16 @@
-"""Logical-axis sharding rules with divisibility-aware fallback.
+"""Sharding rules: twin-fleet serving specs + LM logical-axis rules.
 
-Every parameter leaf is matched by (leaf-name, rank) to an ordered list of
+**Twin fleets** (the serving workload, :mod:`repro.launch.fleet_serving`)
+shard on one logical axis only: the fleet dimension.  ``fleet_batch_spec``
+puts dim 0 of every request tensor (initial conditions ``y0s``, per-twin
+drive parameters ``thetas``) on the ``"twins"`` mesh axis;
+``fleet_param_shardings`` replicates the trained weights onto every
+device — the multi-device transposition of the paper's one-chip-many-
+assets deployment.  Nothing else is sharded: a neural-ODE rollout is
+embarrassingly parallel across fleet members.
+
+**LM rules** (kept for the roofline dry-run):
+every parameter leaf is matched by (leaf-name, rank) to an ordered list of
 tensor-parallel candidate dims; the first dim divisible by the mesh's
 "model" axis wins (so qwen1.5's 40 heads fall back to head_dim, xlstm's
 4 heads fall back to the projected dim, etc.).  A second pass assigns the
@@ -18,9 +28,36 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import axis_size, batch_axes
+from repro.launch.mesh import TWIN_AXIS, axis_size, batch_axes
 
 Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Twin-fleet serving specs
+# ---------------------------------------------------------------------------
+
+def fleet_batch_spec(ndim: int) -> P:
+    """PartitionSpec sharding dim 0 (the fleet axis) on ``"twins"``."""
+    return P(TWIN_AXIS, *([None] * (ndim - 1)))
+
+
+def fleet_input_shardings(mesh, tree: Pytree) -> Pytree:
+    """NamedShardings placing request tensors (y0s/thetas/...) with their
+    leading fleet dimension split across the twin mesh."""
+    return jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, fleet_batch_spec(len(x.shape))), tree)
+
+
+def fleet_param_shardings(mesh, params: Pytree) -> Pytree:
+    """NamedShardings replicating the trained twin weights on every
+    device (weights-stationary serving: each device keeps a full copy)."""
+    return replicated(mesh, params)
+
+
+# ---------------------------------------------------------------------------
+# LM logical-axis rules (roofline dry-run)
+# ---------------------------------------------------------------------------
 
 # (leaf name, rank) -> ordered TP candidate dims (stack axis not counted)
 MODEL_DIM_PREFS = {

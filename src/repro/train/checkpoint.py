@@ -133,6 +133,44 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+# ---------------------------------------------------------------------------
+# Twin-serving convenience layer (used by repro.launch.fleet_serving)
+# ---------------------------------------------------------------------------
+
+def save_twin(ckpt_dir: str, params: Pytree, *, step: int = 0,
+              blocking: bool = True, keep: int = 3) -> str:
+    """Persist a trained twin's weight pytree (the fleet-shared model).
+
+    A thin wrapper over :func:`save` with the canonical ``{"params": ...}``
+    layout that :func:`load_twin` expects; ``step`` distinguishes
+    successive versions of the same twin (retention keeps the newest
+    ``keep``).  Returns the checkpoint directory for this step.
+    """
+    return save(ckpt_dir, step, {"params": params}, blocking=blocking,
+                keep=keep)
+
+
+def load_twin(ckpt_dir: str, params_template: Pytree, *,
+              step: Optional[int] = None,
+              shardings: Optional[Pytree] = None) -> Pytree:
+    """Restore twin weights saved by :func:`save_twin`.
+
+    ``params_template`` supplies the pytree structure/shapes/dtypes (an
+    untrained ``twin.init(key)`` works — values are discarded);
+    ``step=None`` loads the newest checkpoint.  ``shardings`` optionally
+    places the weights directly onto a serving mesh (normally the
+    replicated placement from ``fleet_param_shardings``).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no twin checkpoint found under {ckpt_dir!r}")
+    wrapped_sh = None if shardings is None else {"params": shardings}
+    return restore(ckpt_dir, step, {"params": params_template},
+                   shardings=wrapped_sh)["params"]
+
+
 def restore(ckpt_dir: str, step: int, target: Pytree,
             shardings: Optional[Pytree] = None) -> Pytree:
     """Restore into the structure of ``target``.

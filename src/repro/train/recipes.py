@@ -219,6 +219,57 @@ def noise_robustness_grid(twin, params, read_noises, prog_noises,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Lorenz96 fleet serving (the multi-asset scale-up scenario)
+# ---------------------------------------------------------------------------
+
+def make_l96_fleet(cfg=None, backend=None):
+    """Build the Lorenz96 fleet-serving scenario: one autonomous twin at
+    the paper's Fig. 4 sizes, wrapped in a :class:`~repro.core.twin.TwinFleet`
+    so N assets roll out as one program (sharded across devices when a
+    twin mesh is passed to ``rollout_batch``/``FleetServer``).
+
+    ``cfg``: a ``Lorenz96FleetConfig`` (default: the registry ``FLEET``).
+    ``backend``: Backend instance or registry name; ``None`` uses the
+    config's choice (``fused_pallas`` with its ``batch_tile``).
+    """
+    from repro.configs.lorenz96_twin import FLEET
+    from repro.core.twin import TwinFleet
+    cfg = cfg or FLEET
+    twin = make_autonomous_twin(cfg.state_dim, hidden=cfg.hidden,
+                                n_hidden_layers=cfg.n_hidden_layers)
+    if backend is None:
+        backend = (FusedPallasBackend(batch_tile=cfg.batch_tile)
+                   if cfg.backend == "fused_pallas" else cfg.backend)
+    if backend is not None and backend != "digital":
+        twin = twin.with_backend(backend)
+    return TwinFleet(twin)
+
+
+def l96_fleet_ts(cfg=None, horizon=None):
+    """The serving time grid: ``horizon`` RK4 steps at the training dt
+    (uniform + concrete, as the fused kernel requires)."""
+    from repro.configs.lorenz96_twin import FLEET
+    cfg = cfg or FLEET
+    h = cfg.horizon if horizon is None else int(horizon)
+    return jnp.linspace(0.0, h * cfg.dt, h + 1)
+
+
+def l96_fleet_requests(cfg=None, fleet_size=None, num_batches=1, seed=0):
+    """Stream request batches of per-asset initial conditions.
+
+    Each batch is a (fleet_size, state_dim) array of sensed states drawn
+    around the normalised attractor (spread from the config) — the shape
+    ``serve_fleet`` consumes for an autonomous fleet.
+    """
+    from repro.configs.lorenz96_twin import FLEET
+    cfg = cfg or FLEET
+    n = cfg.fleet_size if fleet_size is None else int(fleet_size)
+    for i in range(num_batches):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        yield cfg.y0_spread * jax.random.normal(key, (n, cfg.state_dim))
+
+
 def l96_lyapunov_info():
     f = l96.lorenz96_field(8.0)
     from repro.core.twin import reference_trajectory

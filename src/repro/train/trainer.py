@@ -99,10 +99,26 @@ def fit(loss_fn: Callable, params: Pytree, optimizer: Optimizer,
     steps inside one jit with donated (params, opt_state) carries; the
     host syncs only at chunk boundaries, where the chunk's stacked loss
     history comes back as one array (logging reads from it — there is no
-    per-step ``float(loss)`` device sync).  ``scan_chunk=None`` runs all
-    ``num_steps`` in a single chunk when not logging, or chunks at the
-    logging cadence otherwise.  Numerics are step-for-step identical to
-    the per-step reference loop (:func:`fit_per_step`).
+    per-step ``float(loss)`` device sync).
+
+    Knobs:
+      ``scan_chunk`` — steps per compiled chunk.  ``None`` runs all
+      ``num_steps`` in a single chunk when not logging, or chunks at the
+      logging cadence otherwise; at most two compilations ever happen
+      (full chunk + remainder).
+      ``unroll`` — the scan body is unrolled 8× inside the chunk (see
+      :func:`make_scan_engine`'s ``unroll`` parameter): same ops in the
+      same order, purely loop-overhead amortisation for the tiny
+      paper-sized step bodies.
+
+    Numerics are step-for-step identical to the per-step reference loop:
+    :func:`fit_per_step` is kept as the equivalence oracle
+    (``tests/test_trainer.py`` pins scan ≡ per-step across chunkings,
+    optimizers and keyless losses) and as the ``train_throughput``
+    benchmark baseline the scan engine is ratio-gated against.
+
+    Returns ``(params, losses)`` with ``losses`` the full (num_steps,)
+    loss history.
     """
     opt_state = optimizer.init(params)
     if num_steps <= 0:

@@ -1,0 +1,187 @@
+"""Sharded fleet serving: padding/mask, mesh parity, checkpoint->serve.
+
+The contract under test (repro.launch.fleet_serving): sharding a fleet
+rollout over a twin mesh changes *placement only* — trajectories match
+the single-device ``TwinFleet`` path bit-for-bit on the same backend —
+and the checkpoint hand-off (``save_twin``/``load_twin``/``serve_fleet``)
+serves exactly the weights that were trained in memory.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backends import FusedPallasBackend
+from repro.core.twin import TwinFleet, make_autonomous_twin, make_driven_twin
+from repro.launch.fleet_serving import (FleetServer, pad_fleet_inputs,
+                                        padded_size, serve_fleet)
+from repro.launch.mesh import make_twin_mesh, twin_shard_count
+from repro.train import checkpoint as ckpt
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def l96_small():
+    twin = make_autonomous_twin(4, hidden=16)
+    params = twin.init(jax.random.PRNGKey(0))
+    ts = jnp.linspace(0.0, 0.02, 9)
+    y0s = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (12, 4))
+    return twin, params, ts, y0s
+
+
+# ---------------------------------------------------------------------------
+# Uneven-N padding + mask
+# ---------------------------------------------------------------------------
+
+def test_padded_size():
+    assert padded_size(12, 4) == 12
+    assert padded_size(13, 4) == 16
+    assert padded_size(1, 4) == 4
+    assert padded_size(5, 1) == 5
+
+
+def test_pad_fleet_inputs_uneven():
+    y0s = jnp.arange(14.0).reshape(7, 2)
+    thetas = jnp.arange(21.0).reshape(7, 3)
+    yp, tp, mask = pad_fleet_inputs(y0s, thetas, 4)
+    assert yp.shape == (8, 2) and tp.shape == (8, 3)
+    assert mask.shape == (8,) and int(mask.sum()) == 7
+    # real rows untouched, padding replicates the last real asset
+    np.testing.assert_array_equal(np.asarray(yp[:7]), np.asarray(y0s))
+    np.testing.assert_array_equal(np.asarray(yp[7]), np.asarray(y0s[6]))
+    np.testing.assert_array_equal(np.asarray(tp[7]), np.asarray(thetas[6]))
+
+
+def test_pad_fleet_inputs_divisible_is_noop():
+    y0s = jnp.ones((8, 3))
+    yp, tp, mask = pad_fleet_inputs(y0s, None, 4)
+    assert yp is y0s and tp is None
+    assert mask.all()
+
+
+def test_pad_fleet_inputs_batch_mismatch():
+    with pytest.raises(ValueError, match="drive_params batch"):
+        pad_fleet_inputs(jnp.ones((5, 2)), jnp.ones((4, 2)), 2)
+
+
+# ---------------------------------------------------------------------------
+# Sharded == single-device (trivial mesh on this host)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", [None, FusedPallasBackend(batch_tile=4)])
+def test_sharded_matches_single_device(l96_small, backend):
+    twin, params, ts, y0s = l96_small
+    if backend is not None:
+        twin = twin.with_backend(backend)
+    fleet = TwinFleet(twin)
+    mesh = make_twin_mesh()
+    ref = fleet.simulate(params, y0s, ts)
+    out = fleet.rollout_batch(params, y0s, ts, mesh=mesh)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+
+
+def test_sharded_driven_fleet_matches(l96_small):
+    twin = make_driven_twin(1, drive=None, hidden=8)
+    params = twin.init(jax.random.PRNGKey(2))
+    fam = lambda t, th: th[0] * jnp.sin(th[1] * t)
+    fleet = TwinFleet(twin, drive_family=fam)
+    ts = jnp.linspace(0.0, 0.05, 11)
+    y0s = 0.1 * jax.random.normal(jax.random.PRNGKey(3), (6, 1))
+    thetas = 1.0 + jax.random.uniform(jax.random.PRNGKey(4), (6, 2))
+    ref = fleet.simulate(params, y0s, ts, thetas)
+    out = fleet.rollout_batch(params, y0s, ts, thetas,
+                              mesh=make_twin_mesh())
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-6)
+
+
+def test_fleet_server_serves_and_unpads(l96_small):
+    twin, params, ts, y0s = l96_small
+    server = FleetServer(TwinFleet(twin), params, ts)
+    out = server.serve(y0s[:7])            # uneven N
+    ref = TwinFleet(twin).simulate(params, y0s[:7], ts)
+    assert out.shape == (7, ts.shape[0], 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint save -> load -> serve round trip
+# ---------------------------------------------------------------------------
+
+def test_twin_checkpoint_roundtrip(tmp_path, l96_small):
+    twin, params, _, _ = l96_small
+    ckpt.save_twin(str(tmp_path), params, step=3)
+    template = twin.init(jax.random.PRNGKey(99))   # different values
+    restored = ckpt.load_twin(str(tmp_path), template)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_load_twin_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.load_twin(str(tmp_path / "nowhere"), {})
+
+
+def test_checkpoint_serve_matches_in_memory(tmp_path, l96_small):
+    """serve_fleet from disk == FleetServer on the in-memory weights."""
+    twin, params, ts, y0s = l96_small
+    fleet = TwinFleet(twin)
+    ckpt.save_twin(str(tmp_path), params)
+
+    requests = [y0s[:5], y0s[5:12]]        # two uneven batches
+    served = list(serve_fleet(str(tmp_path), fleet, ts, requests))
+    assert [s.shape[0] for s in served] == [5, 7]
+
+    in_mem = FleetServer(fleet, params, ts)
+    for req, out in zip(requests, served):
+        ref = in_mem.serve(req)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Real multi-device sharding (virtual 4-device subprocess)
+# ---------------------------------------------------------------------------
+
+def test_multi_device_uneven_fleet_subprocess():
+    """On a genuine 4-shard mesh: uneven N pads, masks, and matches the
+    single-device rollout exactly (digital and fused backends)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.backends import FusedPallasBackend
+        from repro.core.twin import TwinFleet, make_autonomous_twin
+        from repro.launch.mesh import make_twin_mesh, twin_shard_count
+
+        mesh = make_twin_mesh()
+        assert twin_shard_count(mesh) == 4
+        twin = make_autonomous_twin(4, hidden=16)
+        params = twin.init(jax.random.PRNGKey(0))
+        ts = jnp.linspace(0.0, 0.02, 9)
+        y0s = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (37, 4))
+
+        for twin_b in [twin, twin.with_backend(FusedPallasBackend(
+                batch_tile=5))]:
+            fleet = TwinFleet(twin_b)
+            ref = fleet.simulate(params, y0s, ts)
+            out = fleet.rollout_batch(params, y0s, ts, mesh=mesh)
+            assert out.shape == (37, 9, 4), out.shape
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=0, atol=1e-5)
+        print("MULTIDEV_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env={**os.environ,
+                                        "PYTHONPATH": f"{REPO}/src"})
+    assert "MULTIDEV_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])

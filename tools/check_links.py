@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo markdown links (the CI docs gate).
+
+Scans every tracked ``*.md`` file for inline links/images
+(``[text](target)``), ignores external schemes and pure anchors, strips
+``#fragment`` suffixes, and checks the target exists relative to the
+linking file (or the repo root for ``/``-prefixed targets).
+
+Usage:  python tools/check_links.py  [paths...]
+Exit status 1 lists every broken link as file:line.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# inline links and images; [text](target "title") tolerated
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files(args: list[str]) -> list[Path]:
+    if args:
+        # relative arguments are taken relative to the caller's CWD
+        return [Path(a).resolve() for a in args]
+    out = subprocess.run(["git", "ls-files", "*.md", "**/*.md"],
+                         capture_output=True, text=True, cwd=REPO)
+    return [REPO / line for line in out.stdout.splitlines() if line]
+
+
+def display(path: Path) -> str:
+    try:
+        return str(path.relative_to(REPO))
+    except ValueError:
+        return str(path)
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            if target.startswith("/"):
+                resolved = REPO / target.lstrip("/")
+            else:
+                resolved = (path.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(f"{display(path)}:{lineno}: "
+                              f"broken link -> {m.group(1)}")
+    return errors
+
+
+def main() -> int:
+    files = md_files(sys.argv[1:])
+    errors = []
+    for f in files:
+        if f.exists():
+            errors.extend(check_file(f))
+    if errors:
+        print(f"{len(errors)} broken intra-repo link(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"checked {len(files)} markdown file(s): all intra-repo links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
