@@ -12,6 +12,8 @@ against.  Modules:
   fig4hi_l96_energy    — projected time/energy scalability (Lorenz96)
   fig4j_noise          — read/programming-noise robustness grid
   kernels              — Pallas kernel vs jnp-reference checks + ref timing
+                         (incl. the fused-ODE reverse-time backward and
+                         the soft-DTW E-matrix backward)
   fleet_backends       — digital vs fused-Pallas vs analogue fleet rollout
                          throughput at fleet sizes {1, 64, 1024}, plus a
                          long-horizon (T=10k) time-chunked fused rollout
@@ -19,7 +21,8 @@ against.  Modules:
                          single-device baseline vs sharded rollout on the
                          trivial mesh, plus per-device scaling rows from a
                          virtual multi-device subprocess
-  train_throughput     — scan-compiled fit() engine vs per-step baseline
+  train_throughput     — scan-compiled fit() engine vs per-step baseline,
+                         plus digital-adjoint vs fused-VJP training steps
   roofline             — per-(arch x shape) roofline table from the dry-run
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only kernels
@@ -239,6 +242,33 @@ def bench_kernels():
     emit("kernels/softdtw", _timeit(lambda: ref_fn()),
          f"interpret_max_err {err:.2e}")
 
+    # soft-DTW backward: the closed-form E-matrix wavefront kernel vs
+    # autodiff of the reference DP (which the op no longer uses)
+    gk = jax.grad(lambda x: ops.soft_dtw(x, b, 0.5).sum())(a)
+    gr = jax.grad(
+        lambda x: jax.vmap(lambda p, q: sj(p, q, 0.5))(x, b).sum())(a)
+    err = float(jnp.abs(gk - gr).max())
+    bwd_ref = jax.jit(jax.grad(
+        lambda x: jax.vmap(lambda p, q: sj(p, q, 0.5))(x, b).sum()))
+    emit("kernels/softdtw_bwd", _timeit(bwd_ref, a),
+         f"e_matrix_max_err {err:.2e}")
+
+    # fused neural-ODE backward: reverse-time checkpoint/replay kernel vs
+    # backprop through the unrolled reference
+    def loss_k(p):
+        return jnp.sum(ops.fused_node_rollout(p, y0, uh, dt) ** 2)
+
+    def loss_r(p):
+        return jnp.sum(ops.fused_node_rollout_ref(p, y0, uh, dt) ** 2)
+
+    gk = jax.grad(loss_k)(params)
+    gr = jax.grad(loss_r)(params)
+    err = max(float(jnp.abs(x - y).max()) for x, y in zip(
+        jax.tree_util.tree_leaves(gk), jax.tree_util.tree_leaves(gr)))
+    bwd_ref = jax.jit(jax.grad(loss_r))
+    emit("kernels/fused_node_mlp_bwd", _timeit(lambda: bwd_ref(params)),
+         f"interpret_max_err {err:.2e}")
+
 
 def bench_fleet_backends():
     """Fleet-of-twins serving throughput across execution backends.
@@ -449,6 +479,35 @@ def bench_train_throughput():
          f"{sps_loop:.0f} steps/s")
     emit("train_throughput/speedup", 0.0,
          f"{sps_scan / sps_loop:.2f}x scan over per-step")
+
+    # --- train where you serve: the multiple-shooting trajectory phase,
+    # digital adjoint vs the fused-Pallas substrate (weights-stationary
+    # forward + reverse-time checkpoint/replay backward).  On CPU hosts
+    # the fused kernels run in INTERPRET mode, so this ratio understates
+    # the substrate — the row exists to track the gap per platform (it
+    # becomes a genuine speedup on TPU, where the digital path re-reads
+    # the weights from HBM every f-eval in both directions).
+    from repro.core.backends import FusedPallasBackend
+    ts_seg, ys_seg = trainer.make_segments(ts, ys, 50)
+    loss_dig = trainer.segment_loss_fn(twin, ts_seg, ys_seg, "l1")
+    loss_fus = trainer.segment_loss_fn(twin, ts_seg, ys_seg, "l1",
+                                       backend=FusedPallasBackend())
+    steps_t = 4 if FAST else 10
+    eng_d = trainer.make_scan_engine(loss_dig, opt, False, donate=False)
+    eng_f = trainer.make_scan_engine(loss_fus, opt, False, donate=False)
+    us_d = _timeit(lambda: eng_d(params, opt_state, None, steps_t),
+                   repeats=3, best=True)
+    us_f = _timeit(lambda: eng_f(params, opt_state, None, steps_t),
+                   repeats=3, best=True)
+    sps_d = steps_t / (us_d * 1e-6)
+    sps_f = steps_t / (us_f * 1e-6)
+    emit("train_throughput/digital_adjoint_step", us_d / steps_t,
+         f"{sps_d:.1f} steps/s (trajectory phase)")
+    emit("train_throughput/fused_vjp_step", us_f / steps_t,
+         f"{sps_f:.1f} steps/s (trajectory phase)")
+    emit("train_throughput/fused_vs_digital", 0.0,
+         f"{sps_f / sps_d:.2f}x fused-VJP over digital-adjoint "
+         f"({jax.default_backend()})")
 
 
 def bench_roofline():

@@ -67,7 +67,6 @@ def _bwd(f, method, steps_per_interval, residuals, g):
         return (dy, a_dot_y, a_dot_p)
 
     zeros_p = _tree_map(jnp.zeros_like, params)
-    y_last = _tree_map(lambda x: x[-1], ys)
     a_init = _tree_map(lambda x: x[-1], g)
 
     def interval(carry, idx):
@@ -75,6 +74,12 @@ def _bwd(f, method, steps_per_interval, residuals, g):
         a, grad_p = carry
         t1 = ts[idx + 1]
         t0 = ts[idx]
+        # Each interval re-seeds y from the STORED forward trajectory
+        # rather than continuing the backward re-integration of y from
+        # y(T): for an unstable/chaotic field the reverse solve diverges
+        # from the forward path exponentially, corrupting the adjoint,
+        # while the stored observation-time states pin it to the true
+        # path at no extra cost (odeint already materialised ys).
         y1 = _tree_map(lambda x: x[idx + 1], ys)
         aug = (y1, a, grad_p)
         dt = (t0 - t1) / sub  # negative
@@ -91,7 +96,6 @@ def _bwd(f, method, steps_per_interval, residuals, g):
     (a_final, grad_params), _ = lax.scan(
         interval, (a_init, zeros_p), jnp.arange(n - 2, -1, -1))
 
-    del y_last
     return a_final, None, grad_params
 
 

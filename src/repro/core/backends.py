@@ -246,12 +246,22 @@ class FusedPallasBackend(BaseBackend):
     ``rollout`` ignores the per-step odeint and instead samples the drive
     on the RK4 half-step grid and hands the full solve to
     :func:`repro.kernels.fused_ode_mlp.fused_node_rollout`.  Requires a
-    uniform, concrete time grid and ``method='rk4'``; inference-only (no
-    gradients flow through the kernel).
+    uniform, concrete time grid and ``method='rk4'``.
+
+    The substrate is DIFFERENTIABLE: any ``gradient`` mode other than
+    ``"stopgrad"`` routes the solve through the reverse-time
+    checkpoint/replay kernel (:mod:`repro.kernels.fused_ode_mlp_bwd`),
+    so the same weights-stationary program that serves the fleet also
+    trains it (discretise-then-optimise — gradients match
+    backprop-through-the-unrolled-RK4 to float32 rounding).  Pass
+    ``gradient="stopgrad"`` to detach an inference-only solve.
 
     ``rollout_batch`` tiles the fleet across the Pallas grid — one cell
     per ``batch_tile`` twins, weights broadcast to every cell — instead
-    of vmapping N separate solves.
+    of vmapping N separate solves.  Fleet sizes that do not divide the
+    tile are padded up to the next tile multiple (padded rows replicate
+    the last twin and are dropped from the result), so a prime fleet
+    size costs one extra tile instead of degenerating to 1-twin cells.
 
     Long horizons stream through VMEM in time chunks: the kernel carries
     the integration state across a second grid dimension, so ``T`` is
@@ -312,35 +322,48 @@ class FusedPallasBackend(BaseBackend):
             return jnp.zeros((2 * T + 1, 0), jnp.float32)
         return half_step_drive(drive, ts_fine).astype(jnp.float32)
 
+    def _solve(self, state: ExecState, y0s, uh, dt, bt, gradient):
+        """Dispatch the fused solve in the requested gradient mode.
+
+        Every differentiable mode ('adjoint'/'direct'/'fused_vjp') maps
+        onto the one substrate-native VJP (reverse-time checkpoint/
+        replay); 'stopgrad' detaches.  The dispatch itself lives in
+        :func:`repro.kernels.ops.fused_node_rollout` — one copy.
+
+        NOTE: under the fused VJP the drive is data (zero cotangent), so
+        gradients w.r.t. per-twin ``drive_params`` are silently zero on
+        this substrate — calibrate drive parameters on the digital
+        backend.
+        """
+        from repro.kernels import ops
+        params = [{"w": w, "b": b} for w, b in
+                  zip(state.extra["weights"], state.extra["biases"])]
+        mode = "stopgrad" if gradient == "stopgrad" else "fused_vjp"
+        return ops.fused_node_rollout(
+            params, y0s, uh, dt, batch_tile=bt, time_chunk=self.time_chunk,
+            interpret=self.interpret,
+            vmem_budget_bytes=self.vmem_budget_bytes, gradient=mode)
+
     # -- execution ---------------------------------------------------------
     def rollout(self, state: ExecState, y0, ts, *, method: str = "rk4",
                 steps_per_interval: int = 1,
-                gradient: str = "direct") -> jax.Array:
-        del gradient  # forward-only substrate
-        from repro.kernels.fused_ode_mlp import fused_node_rollout
+                gradient: str = "fused_vjp") -> jax.Array:
         if method != "rk4":
             raise ValueError(
                 f"FusedPallasBackend integrates RK4 only, got {method!r}")
         ts_fine, dt, sub = self._grid(ts, steps_per_interval)
         uh = self._u_half(getattr(state.field, "drive", None), ts_fine)
-        traj = fused_node_rollout(
-            y0[None, :].astype(jnp.float32), uh,
-            state.extra["weights"], state.extra["biases"], dt,
-            batch_tile=1, time_chunk=self.time_chunk,
-            interpret=self.interpret,
-            vmem_budget_bytes=self.vmem_budget_bytes)
+        traj = self._solve(state, y0[None, :], uh, dt, 1, gradient)
         return traj[::sub, 0, :]
 
     def rollout_batch_local(self, state: ExecState, y0s, ts, *,
                             drive_family: Optional[Callable] = None,
                             drive_params: Optional[jax.Array] = None,
                             method: str = "rk4", steps_per_interval: int = 1,
-                            gradient: str = "direct") -> jax.Array:
+                            gradient: str = "fused_vjp") -> jax.Array:
         """Per-device fleet solve: tile the local batch across the Pallas
         grid (weights broadcast to every cell, per-twin drives sampled on
         the half-step grid per tile)."""
-        del gradient
-        from repro.kernels.fused_ode_mlp import fused_node_rollout
         if method != "rk4":
             raise ValueError(
                 f"FusedPallasBackend integrates RK4 only, got {method!r}")
@@ -353,18 +376,14 @@ class FusedPallasBackend(BaseBackend):
             uh = jax.vmap(
                 lambda th_: self._u_half(lambda t: drive_family(t, th_),
                                          ts_fine))(drive_params)
-        # largest divisor of B within the tile budget, so arbitrary fleet
-        # sizes work without the caller doing grid arithmetic
-        bt = min(self.batch_tile, B)
-        while B % bt:
-            bt -= 1
-        traj = fused_node_rollout(
-            y0s.astype(jnp.float32), uh,
-            state.extra["weights"], state.extra["biases"], dt,
-            batch_tile=bt, time_chunk=self.time_chunk,
-            interpret=self.interpret,
-            vmem_budget_bytes=self.vmem_budget_bytes)
-        return jnp.transpose(traj[::sub], (1, 0, 2))
+        # pad the fleet up to a tile multiple instead of shrinking the
+        # tile to a divisor: a prime B used to degenerate to bt=1 and one
+        # grid cell per twin (B=1021 -> 1021 cells); now it costs at most
+        # one padded tile.
+        from repro.kernels.fused_ode_mlp import pad_fleet_to_tile
+        y0s, uh, bt, B = pad_fleet_to_tile(y0s, uh, self.batch_tile)
+        traj = self._solve(state, y0s, uh, dt, bt, gradient)
+        return jnp.transpose(traj[::sub, :B], (1, 0, 2))
 
 
 DEFAULT_BACKEND = DigitalBackend()

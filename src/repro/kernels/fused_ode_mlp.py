@@ -29,6 +29,11 @@ one chunk does.  ``time_chunk=None`` auto-picks the largest C within
 ``vmem_budget_bytes``, so weights stay resident while arbitrarily long
 horizons stream chunk-by-chunk through HBM.  A ``ValueError`` is now
 raised only when the weights plus a single step genuinely cannot fit.
+
+This module is the forward; :mod:`repro.kernels.fused_ode_mlp_bwd`
+walks the same grid in reverse (chunk-boundary checkpoints = trajectory
+rows, recompute-in-VMEM replay) to make the rollout differentiable on
+the same substrate.
 """
 from __future__ import annotations
 
@@ -99,8 +104,69 @@ def plan_time_chunk(T: int, bt: int, D: int, du: int, per_tile_drive: bool,
     return ChunkPlan(C, -(-T // C), need)
 
 
+def make_rk4_step(num_layers: int, dt: float, drive_dim: int, bt: int,
+                  per_tile_drive: bool):
+    """One in-kernel RK4 step ``step(y, u0, um, u1, ws, bs) -> y_next``.
+
+    SHARED between the forward kernel and the backward kernel's
+    checkpoint replay + step VJP (:mod:`repro.kernels.fused_ode_mlp_bwd`)
+    — the recompute must be bit-identical to the forward, so there is
+    exactly one definition of the step."""
+
+    def mlp(x, ws, bs):
+        for i in range(num_layers):
+            x = jnp.dot(x, ws[i], preferred_element_type=jnp.float32)
+            x = x + bs[i][None, :]
+            if i < num_layers - 1:
+                x = jnp.maximum(x, 0.0)
+        return x
+
+    def f(u_row, y, ws, bs):
+        if drive_dim > 0:
+            # u_row: (drive_dim,) broadcast, or (bt, drive_dim) per-twin
+            u = (u_row if per_tile_drive
+                 else jnp.broadcast_to(u_row, (bt, drive_dim)))
+            inp = jnp.concatenate([u, y], axis=-1)
+        else:
+            inp = y
+        return mlp(inp, ws, bs)
+
+    def step(y, u0, um, u1, ws, bs):
+        k1 = f(u0, y, ws, bs)
+        k2 = f(um, y + (dt / 2) * k1, ws, bs)
+        k3 = f(um, y + (dt / 2) * k2, ws, bs)
+        k4 = f(u1, y + dt * k3, ws, bs)
+        return y + (dt / 6) * (k1 + 2 * k2 + 2 * k3 + k4)
+
+    return step
+
+
+def pad_fleet_to_tile(y0s: jax.Array, uh: jax.Array, batch_tile: int):
+    """Pad the fleet axis up to a multiple of the batch tile.
+
+    Padded rows replicate the last twin (in-distribution values, no NaN
+    risk) and per-twin drive slabs (``uh.ndim == 3``) are replicated
+    alongside; the caller slices the result back to the real fleet.
+    Returns ``(y0s_padded, uh_padded, bt, B)`` with ``B`` the original
+    fleet size.  One extra tile instead of the old largest-divisor
+    search that degenerated to bt=1 for prime fleet sizes.
+    """
+    B = y0s.shape[0]
+    bt = min(batch_tile, B)
+    pad = (-B) % bt
+    if pad:
+        y0s = jnp.concatenate(
+            [y0s, jnp.broadcast_to(y0s[-1:], (pad,) + y0s.shape[1:])])
+        if uh.ndim == 3:
+            uh = jnp.concatenate(
+                [uh, jnp.broadcast_to(uh[-1:], (pad,) + uh.shape[1:])])
+    return y0s, uh, bt, B
+
+
 def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
                  bt: int, per_tile_drive: bool = False):
+    step = make_rk4_step(num_layers, dt, drive_dim, bt, per_tile_drive)
+
     def kernel(*refs):
         y0_ref = refs[0]
         u_ref = refs[1]
@@ -119,33 +185,9 @@ def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
         ws = [w_ref[...] for w_ref in w_refs]
         bs = [b_ref[...] for b_ref in b_refs]
 
-        def mlp(x):
-            for i in range(num_layers):
-                x = jnp.dot(x, ws[i], preferred_element_type=jnp.float32)
-                x = x + bs[i][None, :]
-                if i < num_layers - 1:
-                    x = jnp.maximum(x, 0.0)
-            return x
-
-        def f(u_row, y):
-            if drive_dim > 0:
-                # u_row: (drive_dim,) broadcast, or (bt, drive_dim) per-twin
-                u = (u_row if per_tile_drive
-                     else jnp.broadcast_to(u_row, (bt, drive_dim)))
-                inp = jnp.concatenate([u, y], axis=-1)
-            else:
-                inp = y
-            return mlp(inp)
-
         def body(t, y):
-            u0 = u_ref[0, 2 * t]
-            um = u_ref[0, 2 * t + 1]
-            u1 = u_ref[0, 2 * t + 2]
-            k1 = f(u0, y)
-            k2 = f(um, y + (dt / 2) * k1)
-            k3 = f(um, y + (dt / 2) * k2)
-            k4 = f(u1, y + dt * k3)
-            y = y + (dt / 6) * (k1 + 2 * k2 + 2 * k3 + k4)
+            y = step(y, u_ref[0, 2 * t], u_ref[0, 2 * t + 1],
+                     u_ref[0, 2 * t + 2], ws, bs)
             out_ref[t] = y
             return y
 

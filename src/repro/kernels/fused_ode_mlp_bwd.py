@@ -1,0 +1,319 @@
+"""Reverse-time fused neural-ODE solve — training on the serving substrate.
+
+The forward kernel (:mod:`repro.kernels.fused_ode_mlp`) keeps the MLP
+weights VMEM-resident for the whole RK4 trajectory.  This module gives
+that rollout a custom VJP whose backward pass runs the SAME
+weights-stationary discipline in reverse: a second Pallas kernel walks
+the time-chunk grid dimension backwards, replays each chunk forward from
+its chunk-boundary state (recompute-in-VMEM checkpointing — the
+checkpoints are the chunk boundaries the forward already materialised as
+trajectory rows), and accumulates ``(dL/dy0, dL/dW, dL/db)`` while the
+weights and their gradient accumulators stay pinned in VMEM.
+
+This is the discretise-then-optimise analogue of
+:mod:`repro.core.adjoint`: instead of integrating a continuous adjoint
+ODE step by step (one HBM round-trip per f-eval), the cotangent is
+pulled back through the exact RK4 update whole-chunk-fused, so the
+gradient matches backprop-through-the-unrolled-solver to float32
+rounding.
+
+Grid: (batch tiles, time chunks), time minor, chunks visited in REVERSE
+order via the index maps.  Block layout per (i, j) cell (chunk
+``jj = NC-1-j``):
+
+  y_bound  (1, bt, D)        chunk jj's boundary state (traj row jj*C)
+  u_chunks (1, 2C+1, Du)     chunk jj's drive half-steps (as forward)
+  g        (C, bt, D)        cotangent slab for chunk jj's output rows
+  w_l/b_l  (full)            broadcast — weights stay resident
+  dy0      (bt, D)           per-tile block; last write (chunk 0) wins
+  dw_l/db_l (full)           one block for the WHOLE grid — the VMEM
+                             gradient accumulator (zeroed at the first
+                             cell, accumulated in place, flushed once)
+  a        (bt, D)  scratch  adjoint carried across chunks of one tile
+  ys       (C, bt, D) scratch  replayed per-step states of the chunk
+
+VMEM per cell ~= 3x weights (w, dw refs, dw loop carry) + TWO C-slabs
+(replayed states + cotangents) + activation slack for the step VJP —
+roughly twice the forward's footprint, so ``plan_bwd_time_chunk`` packs
+a (usually smaller) chunk against the same budget.  The boundary states
+are FREE residuals: the forward's output trajectory already contains
+every chunk-start state as row ``jj*C``, so the VJP stores nothing
+beyond what serving already returns.
+
+Gradients are taken w.r.t. ``y0``, ``weights`` and ``biases``; the drive
+``u_half`` is treated as data (zero cotangent) — it is a sampled input
+signal, not a parameter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.fused_ode_mlp import (DEFAULT_VMEM_BUDGET, ChunkPlan,
+                                         _chunk_drive, _default_interpret,
+                                         fused_node_rollout, make_rk4_step)
+
+
+def plan_bwd_time_chunk(T: int, bt: int, D: int, du: int,
+                        per_tile_drive: bool,
+                        weights: Sequence[jax.Array],
+                        biases: Sequence[jax.Array],
+                        vmem_budget_bytes: int,
+                        time_chunk: int | None = None) -> ChunkPlan:
+    """Backward-pass chunk planner: same contract as ``plan_time_chunk``
+    but for the heavier reverse working set (weights appear three times —
+    operands, gradient-accumulator refs, and the fori_loop gradient
+    carry — and every chunk keeps TWO (C, bt, D) slabs resident: the
+    replayed states and the cotangents)."""
+    u_width = max(du, 1) * (bt if per_tile_drive else 1)
+    wbytes = sum(4 * w.size for w in weights) + sum(4 * b.size for b in biases)
+    act = 4 * bt * max(du + D, max(w.shape[1] for w in weights)) * 12
+    fixed = 3 * wbytes + act + 3 * 4 * bt * D   # + boundary, adjoint, dy0
+    per_step = 8 * bt * D + 8 * u_width         # ys row + g row + two u rows
+    if time_chunk is not None:
+        C = max(1, min(int(time_chunk), T))
+    else:
+        avail = vmem_budget_bytes - fixed - 4 * u_width
+        C = int(avail // per_step)
+        if C < 1:
+            raise ValueError(
+                f"fused backward: weights + one reverse RK4 step need "
+                f"~{(fixed + per_step + 4 * u_width) / 2 ** 20:.1f} MiB VMEM "
+                f"(budget {vmem_budget_bytes / 2 ** 20:.1f}); shrink "
+                f"batch_tile or the MLP")
+        C = min(C, T)
+    need = fixed + 2 * 4 * C * bt * D + 4 * (2 * C + 1) * u_width
+    if need > vmem_budget_bytes:
+        raise ValueError(
+            f"backward time_chunk={C} needs ~{need / 2 ** 20:.1f} MiB VMEM "
+            f"(budget {vmem_budget_bytes / 2 ** 20:.1f}); shrink "
+            f"time_chunk or batch_tile")
+    return ChunkPlan(C, -(-T // C), need)
+
+
+def _make_bwd_kernel(num_layers: int, C: int, dt: float,
+                     drive_dim: int, bt: int, per_tile_drive: bool):
+    L = num_layers
+    # THE step of the forward kernel — shared so the checkpoint replay
+    # recomputes bit-identical states and the VJP transposes the exact
+    # update the forward applied
+    rk4 = make_rk4_step(L, dt, drive_dim, bt, per_tile_drive)
+
+    def kernel(*refs):
+        yb_ref, u_ref, g_ref = refs[0], refs[1], refs[2]
+        w_refs = refs[3:3 + L]
+        b_refs = refs[3 + L:3 + 2 * L]
+        dy0_ref = refs[3 + 2 * L]
+        dw_refs = refs[4 + 2 * L:4 + 3 * L]
+        db_refs = refs[4 + 3 * L:4 + 4 * L]
+        a_ref = refs[4 + 4 * L]
+        ys_ref = refs[5 + 4 * L]
+
+        i = pl.program_id(0)
+        j = pl.program_id(1)       # j walks 0..NC-1; the chunk REVERSAL
+        #                            lives in the BlockSpec index maps
+
+        # First (reverse-)chunk of a batch tile: zero the adjoint carry.
+        @pl.when(j == 0)
+        def _():
+            a_ref[...] = jnp.zeros_like(a_ref)
+
+        # Very first grid cell: zero the in-VMEM gradient accumulators.
+        @pl.when((i == 0) & (j == 0))
+        def _():
+            for r in dw_refs:
+                r[...] = jnp.zeros_like(r)
+            for r in db_refs:
+                r[...] = jnp.zeros_like(r)
+
+        ws = [w_ref[...] for w_ref in w_refs]
+        bs = [b_ref[...] for b_ref in b_refs]
+
+        # -- replay: recompute the chunk's per-step states into VMEM ----
+        def fwd_body(t, y):
+            ys_ref[t] = y
+            return rk4(y, u_ref[0, 2 * t], u_ref[0, 2 * t + 1],
+                       u_ref[0, 2 * t + 2], ws, bs)
+
+        lax.fori_loop(0, C, fwd_body, yb_ref[0])
+
+        # -- reverse sweep: pull the cotangent back through each step ---
+        zeros_w = [jnp.zeros_like(w) for w in ws]
+        zeros_b = [jnp.zeros_like(b) for b in bs]
+
+        def bwd_body(r, carry):
+            a, dws, dbs = carry
+            t = C - 1 - r
+            y_t = ys_ref[t]
+            u0 = u_ref[0, 2 * t]
+            um = u_ref[0, 2 * t + 1]
+            u1 = u_ref[0, 2 * t + 2]
+            a = a + g_ref[t]          # cotangent injected at this output row
+            _, vjp = jax.vjp(
+                lambda y_, ws_, bs_: rk4(y_, u0, um, u1, ws_, bs_),
+                y_t, ws, bs)
+            a, dws_t, dbs_t = vjp(a)
+            dws = [acc + d for acc, d in zip(dws, dws_t)]
+            dbs = [acc + d for acc, d in zip(dbs, dbs_t)]
+            return a, dws, dbs
+
+        a, dws, dbs = lax.fori_loop(0, C, bwd_body,
+                                    (a_ref[...], zeros_w, zeros_b))
+        a_ref[...] = a
+        dy0_ref[...] = a              # chunk 0 (the last j) leaves dL/dy0
+        for ref, v in zip(dw_refs, dws):
+            ref[...] += v
+        for ref, v in zip(db_refs, dbs):
+            ref[...] += v
+
+    return kernel
+
+
+def fused_node_rollout_bwd(
+    y_bounds: jax.Array,              # (NC, B, D) chunk-boundary states
+    u_half: jax.Array,                # (2T+1, Du) shared or (B, 2T+1, Du)
+    weights: Sequence[jax.Array],
+    biases: Sequence[jax.Array],
+    g_steps: jax.Array,               # (T, B, D) cotangents for rows 1..T
+    dt: float,
+    *,
+    batch_tile: int,
+    time_chunk: int,                  # the C that produced y_bounds
+    interpret: bool | None = None,
+) -> tuple:
+    """Run the reverse-time kernel; returns ``(dy0, dweights, dbiases)``.
+
+    ``y_bounds[jj]`` must be the state at the START of chunk jj (forward
+    trajectory row ``jj*C``); ``g_steps`` are the cotangents of the
+    forward's per-step outputs (trajectory rows 1..T — the y0 row's
+    cotangent is added by the caller).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    NC, B, D = y_bounds.shape
+    C = int(time_chunk)
+    per_tile_drive = u_half.ndim == 3
+    if per_tile_drive and u_half.shape[-1] == 0:
+        per_tile_drive, u_half = False, u_half[0]
+    T = g_steps.shape[0]
+    du = u_half.shape[-1]
+    L = len(weights)
+    bt = min(batch_tile, B)
+    if B % bt:
+        raise ValueError(f"batch {B} not divisible by tile {bt}")
+
+    # zero-pad the cotangents over the padded tail of a partial final
+    # chunk: the replayed padded steps then contribute exactly nothing.
+    pad = NC * C - T
+    if pad:
+        g_steps = jnp.pad(g_steps, ((0, pad), (0, 0), (0, 0)))
+
+    kernel = _make_bwd_kernel(L, C, float(dt), du, bt, per_tile_drive)
+
+    grid = (B // bt, NC)
+    if per_tile_drive:
+        u_tm = jnp.transpose(u_half, (1, 0, 2))          # (2T+1, B, du)
+        u_in = _chunk_drive(u_tm, C, NC)                 # (NC, 2C+1, B, du)
+        u_spec = pl.BlockSpec((1, 2 * C + 1, bt, du),
+                              lambda i, j: (NC - 1 - j, 0, i, 0))
+    else:
+        u_tm = u_half if du > 0 else jnp.zeros((2 * T + 1, 1),
+                                               y_bounds.dtype)
+        u_in = _chunk_drive(u_tm, C, NC)                 # (NC, 2C+1, du')
+        u_spec = pl.BlockSpec((1, 2 * C + 1, max(du, 1)),
+                              lambda i, j: (NC - 1 - j, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, bt, D), lambda i, j: (NC - 1 - j, i, 0)),  # bounds
+        u_spec,
+        pl.BlockSpec((C, bt, D), lambda i, j: (NC - 1 - j, i, 0)),  # g
+    ]
+    for w in weights:
+        in_specs.append(pl.BlockSpec(w.shape, lambda i, j: (0, 0)))
+    for b in biases:
+        in_specs.append(pl.BlockSpec(b.shape, lambda i, j: (0,)))
+
+    out_shapes = ([jax.ShapeDtypeStruct((B, D), jnp.float32)]
+                  + [jax.ShapeDtypeStruct(w.shape, jnp.float32)
+                     for w in weights]
+                  + [jax.ShapeDtypeStruct(b.shape, jnp.float32)
+                     for b in biases])
+    out_specs = ([pl.BlockSpec((bt, D), lambda i, j: (i, 0))]
+                 + [pl.BlockSpec(w.shape, lambda i, j: (0, 0))
+                    for w in weights]
+                 + [pl.BlockSpec(b.shape, lambda i, j: (0,))
+                    for b in biases])
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((bt, D), jnp.float32),
+                        pltpu.VMEM((C, bt, D), jnp.float32)],
+        interpret=interpret,
+    )(y_bounds, u_in, g_steps, *weights, *biases)
+    dy0, dws, dbs = outs[0], list(outs[1:1 + L]), list(outs[1 + L:])
+    return dy0, dws, dbs
+
+
+# ---------------------------------------------------------------------------
+# The differentiable rollout: custom VJP over (y0, u_half, weights, biases)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def fused_node_rollout_vjp(y0, u_half, weights, biases, dt,
+                           batch_tile=64, time_chunk=None, interpret=None,
+                           vmem_budget_bytes=DEFAULT_VMEM_BUDGET):
+    """:func:`fused_node_rollout` with gradients that never leave the
+    fused substrate: forward AND backward are whole-chunk Pallas kernels,
+    weights pinned in VMEM both ways.  Differentiable in ``y0``,
+    ``weights`` and ``biases``; the drive gets a zero cotangent."""
+    return fused_node_rollout(y0, u_half, weights, biases, dt,
+                              batch_tile=batch_tile, time_chunk=time_chunk,
+                              interpret=interpret,
+                              vmem_budget_bytes=vmem_budget_bytes)
+
+
+def _rollout_fwd(y0, u_half, weights, biases, dt, batch_tile, time_chunk,
+                 interpret, vmem_budget_bytes):
+    traj = fused_node_rollout(y0, u_half, weights, biases, dt,
+                              batch_tile=batch_tile, time_chunk=time_chunk,
+                              interpret=interpret,
+                              vmem_budget_bytes=vmem_budget_bytes)
+    # The trajectory IS the residual: every chunk-boundary state the
+    # backward replays from is already a row of the primal output, so
+    # checkpointing costs zero extra memory traffic.
+    return traj, (u_half, weights, biases, traj)
+
+
+def _rollout_bwd(dt, batch_tile, time_chunk, interpret, vmem_budget_bytes,
+                 res, g):
+    u_half, weights, biases, traj = res
+    u_orig = u_half
+    B, D = traj.shape[1], traj.shape[2]
+    per_tile_drive = u_half.ndim == 3
+    if per_tile_drive and u_half.shape[-1] == 0:
+        per_tile_drive, u_half = False, u_half[0]
+    T = (u_half.shape[1 if per_tile_drive else 0] - 1) // 2
+    du = u_half.shape[-1]
+    bt = min(batch_tile, B)
+    plan = plan_bwd_time_chunk(T, bt, D, du, per_tile_drive, weights,
+                               biases, vmem_budget_bytes, time_chunk)
+    C, NC = plan.time_chunk, plan.num_chunks
+    y_bounds = traj[jnp.arange(NC) * C]              # chunk-start states
+    g = g.astype(jnp.float32)
+    dy0, dws, dbs = fused_node_rollout_bwd(
+        y_bounds, u_half, weights, biases, g[1:], dt,
+        batch_tile=batch_tile, time_chunk=C, interpret=interpret)
+    # drive is data, not a parameter — zero cotangent (see module doc)
+    return dy0 + g[0], jnp.zeros_like(u_orig), dws, dbs
+
+
+fused_node_rollout_vjp.defvjp(_rollout_fwd, _rollout_bwd)

@@ -2,9 +2,11 @@
 
 Each op pairs a TPU-target kernel (validated in interpret mode on CPU)
 with its pure-jnp oracle in :mod:`repro.kernels.ref`.  Gradient support:
-soft-DTW gets a custom VJP whose backward pass is the autodiff of the
-reference DP (the forward kernel is the perf-critical path; the loss
-backward reuses XLA).
+both hot-path ops are differentiable on the kernel substrate itself —
+the fused neural-ODE rollout through a reverse-time checkpoint/replay
+Pallas kernel (:mod:`repro.kernels.fused_ode_mlp_bwd`), and soft-DTW
+through the closed-form E-matrix reverse DP as a second wavefront
+kernel (no autodiff of the reference DP anywhere).
 """
 from __future__ import annotations
 
@@ -13,14 +15,17 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core.analogue import AnalogueSpec
-from repro.core.losses import BIG, _pairwise_dist, soft_dtw as _soft_dtw_jnp
+from repro.core.losses import BIG, _pairwise_dist
 from repro.kernels import ref
 from repro.kernels.crossbar_vmm import crossbar_matmul as _crossbar_pallas
 from repro.kernels.fused_ode_mlp import (DEFAULT_VMEM_BUDGET,
                                          fused_node_rollout as _fused_pallas)
-from repro.kernels.softdtw import softdtw_pallas as _softdtw_pallas
+from repro.kernels.fused_ode_mlp_bwd import fused_node_rollout_vjp
+from repro.kernels.softdtw import (softdtw_bwd_pallas as _softdtw_bwd_pallas,
+                                   softdtw_pallas as _softdtw_pallas)
 
 
 # ---------------------------------------------------------------------------
@@ -33,13 +38,14 @@ def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
                        time_chunk: int | None = None,
                        interpret: bool | None = None,
                        vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
+                       gradient: str = "fused_vjp",
                        ) -> jax.Array:
     """Solve the twin's neural ODE with the weights-stationary kernel.
 
     The whole RK4 trajectory runs inside one ``pallas_call`` with the MLP
     weights pinned in VMEM (grid layout and VMEM model:
-    ``docs/kernels.md``).  Forward-only; requires a uniform time grid
-    (``dt`` and the step count are kernel compile-time constants).
+    ``docs/kernels.md``).  Requires a uniform time grid (``dt`` and the
+    step count are kernel compile-time constants).
 
     Args:
       params: the core MLP param list ``[{'w','b'}, ...]``.
@@ -49,7 +55,7 @@ def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
         (fleet serving), or (2T+1, 0) when autonomous.
       dt: RK4 step size (uniform).
       batch_tile: fleet members per grid cell; B must divide by it
-        (``FusedPallasBackend`` auto-shrinks it to a divisor).
+        (``FusedPallasBackend`` pads the fleet up to a tile multiple).
       time_chunk: RK4 steps resident in VMEM per grid cell.  ``None``
         auto-picks the largest chunk whose working set fits
         ``vmem_budget_bytes`` (see ``fused_ode_mlp.plan_time_chunk``), so
@@ -60,17 +66,35 @@ def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
       vmem_budget_bytes: the planner's per-cell VMEM budget.  If the
         weights plus a single RK4 step cannot fit, a ``ValueError`` is
         raised at planning time ("shrink batch_tile or the MLP").
+      gradient: ``"fused_vjp"`` (default) makes the rollout
+        differentiable in ``params`` and ``y0`` through the reverse-time
+        checkpoint/replay kernel (:mod:`repro.kernels.fused_ode_mlp_bwd`)
+        — the drive is data and gets a zero cotangent; ``"stopgrad"``
+        detaches the solve (inference-only serving).
 
     Returns:
       The (T+1, B, D) trajectory (y0 prepended).
     """
     weights = [p["w"].astype(jnp.float32) for p in params]
     biases = [p["b"].astype(jnp.float32) for p in params]
-    return _fused_pallas(y0.astype(jnp.float32), u_half.astype(jnp.float32),
-                         weights, biases, float(dt),
-                         batch_tile=batch_tile, time_chunk=time_chunk,
-                         interpret=interpret,
-                         vmem_budget_bytes=vmem_budget_bytes)
+    y0 = y0.astype(jnp.float32)
+    u_half = u_half.astype(jnp.float32)
+    if gradient == "fused_vjp":
+        return fused_node_rollout_vjp(y0, u_half, weights, biases,
+                                      float(dt), batch_tile, time_chunk,
+                                      interpret, vmem_budget_bytes)
+    if gradient == "stopgrad":
+        out = _fused_pallas(lax.stop_gradient(y0),
+                            lax.stop_gradient(u_half),
+                            [lax.stop_gradient(w) for w in weights],
+                            [lax.stop_gradient(b) for b in biases],
+                            float(dt),
+                            batch_tile=batch_tile, time_chunk=time_chunk,
+                            interpret=interpret,
+                            vmem_budget_bytes=vmem_budget_bytes)
+        return lax.stop_gradient(out)
+    raise ValueError(
+        f"unknown gradient mode {gradient!r}; have 'fused_vjp', 'stopgrad'")
 
 
 def fused_node_rollout_ref(params, y0, u_half, dt):
@@ -126,7 +150,7 @@ def quantize_to_levels(w: jax.Array, spec: AnalogueSpec):
 
 
 # ---------------------------------------------------------------------------
-# soft-DTW (kernel forward, reference-grad backward)
+# soft-DTW (kernel forward, kernelised E-matrix backward)
 # ---------------------------------------------------------------------------
 
 def _diag_layout_batch(D: jax.Array, chunk: int) -> jax.Array:
@@ -138,29 +162,55 @@ def _diag_layout_batch(D: jax.Array, chunk: int) -> jax.Array:
     return dd
 
 
+def _undiag_batch(e_dd: jax.Array, n: int, m: int) -> jax.Array:
+    """Inverse of ``ref.diag_layout``: (B, KD_pad, n) -> (B, n, m)."""
+    rows = jnp.arange(n)[:, None]
+    cols = jnp.arange(m)[None, :]
+    return e_dd[:, rows + cols, rows]
+
+
+def _sdtw_chunk(n: int, m: int) -> int:
+    return min(256, n + m - 1)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def soft_dtw(x: jax.Array, y: jax.Array, gamma: float = 1.0,
              interpret: bool = True) -> jax.Array:
     """Batched soft-DTW((B,n,d),(B,m,d)) -> (B,) via the wavefront kernel."""
     D = jax.vmap(_pairwise_dist)(x, y)
     n, m = D.shape[1], D.shape[2]
-    chunk = min(256, n + m - 1)
+    chunk = _sdtw_chunk(n, m)
     dd = _diag_layout_batch(D, chunk)
     return _softdtw_pallas(dd, n, m, gamma=gamma, hard=False, chunk=chunk,
                            interpret=interpret)
 
 
 def _sdtw_fwd(x, y, gamma, interpret):
-    return soft_dtw(x, y, gamma, interpret), (x, y)
+    D = jax.vmap(_pairwise_dist)(x, y)
+    n, m = D.shape[1], D.shape[2]
+    chunk = _sdtw_chunk(n, m)
+    dd = _diag_layout_batch(D, chunk)
+    ans, rd = _softdtw_pallas(dd, n, m, gamma=gamma, hard=False, chunk=chunk,
+                              interpret=interpret, return_r=True)
+    # residuals: only R must come from the forward kernel; the cost slab
+    # is cheaply re-derived from (x, y) in the backward
+    return ans, (x, y, rd)
 
 
 def _sdtw_bwd(gamma, interpret, res, g):
-    x, y = res
-    # backward through the reference DP (autodiff); forward stays kernel.
-    def batched(x, y):
-        return jax.vmap(lambda a, b: _soft_dtw_jnp(a, b, gamma))(x, y)
-    _, vjp = jax.vjp(batched, x, y)
-    gx, gy = vjp(g)
+    # Closed-form E-matrix reverse DP as a second wavefront kernel
+    # (kernels/softdtw.py) — dSDTW/dD = E, then an elementwise pullback
+    # through the |x_i - y_j| cost.  The old autodiff-of-the-reference-DP
+    # path (O(n·m) sequential tape) is gone.
+    x, y, rd = res
+    n, m = x.shape[1], y.shape[1]
+    chunk = _sdtw_chunk(n, m)
+    D, dist_vjp = jax.vjp(lambda a, b: jax.vmap(_pairwise_dist)(a, b), x, y)
+    dd = _diag_layout_batch(D, chunk)
+    e_dd = _softdtw_bwd_pallas(dd, rd, n, m, gamma=gamma, chunk=chunk,
+                               interpret=interpret)
+    dD = g[:, None, None] * _undiag_batch(e_dd, n, m)
+    gx, gy = dist_vjp(dD)
     return gx, gy
 
 

@@ -110,3 +110,53 @@ def softdtw_ref(D: jax.Array, gamma: float, hard: bool = False) -> jax.Array:
 def softdtw_batch_ref(D: jax.Array, gamma: float,
                       hard: bool = False) -> jax.Array:
     return jax.vmap(lambda d: softdtw_ref(d, gamma, hard))(D)
+
+
+def softdtw_grad_ref(D, gamma: float):
+    """Closed-form E-matrix (dSDTW/dD) by the reverse DP of Cuturi &
+    Blondel 2017, Alg. 2 — the numpy oracle for ``softdtw_bwd_pallas``.
+
+    Pads R and D with +inf borders so every child weight
+    exp((R_child - R - D_child) / gamma) vanishes outside the matrix.
+    """
+    import numpy as np
+    D = np.asarray(D, dtype=np.float64)
+    n, m = D.shape
+    # forward DP in float64
+    R = np.full((n, m), np.inf)
+    for i in range(n):
+        for j in range(m):
+            if i == 0 and j == 0:
+                R[i, j] = D[i, j]
+                continue
+            preds = []
+            if i > 0:
+                preds.append(R[i - 1, j])
+            if j > 0:
+                preds.append(R[i, j - 1])
+            if i > 0 and j > 0:
+                preds.append(R[i - 1, j - 1])
+            p = np.asarray(preds)
+            soft = -gamma * (np.log(np.sum(np.exp(-(p - p.min()) / gamma)))
+                             - p.min() / gamma)
+            R[i, j] = D[i, j] + soft
+    E = np.zeros((n, m))
+    E[n - 1, m - 1] = 1.0
+    Rp = np.full((n + 1, m + 1), np.inf)
+    Rp[:n, :m] = R
+    Dp = np.full((n + 1, m + 1), np.inf)
+    Dp[:n, :m] = D
+    Ep = np.zeros((n + 1, m + 1))
+    Ep[:n, :m] = E
+    for k in range(n + m - 3, -1, -1):          # reverse anti-diagonals
+        for i in range(max(0, k - m + 1), min(n, k + 1)):
+            j = k - i
+            if i == n - 1 and j == m - 1:
+                continue
+            acc = 0.0
+            for (ci, cj) in ((i + 1, j), (i, j + 1), (i + 1, j + 1)):
+                w = np.exp((Rp[ci, cj] - R[i, j] - Dp[ci, cj]) / gamma) \
+                    if np.isfinite(Dp[ci, cj]) else 0.0
+                acc += Ep[ci, cj] * w
+            Ep[i, j] = acc
+    return Ep[:n, :m]

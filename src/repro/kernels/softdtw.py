@@ -1,14 +1,32 @@
-"""Anti-diagonal wavefront soft-DTW kernel.
+"""Anti-diagonal wavefront soft-DTW kernels (forward AND backward).
 
-The DP recurrence R[i,j] = D[i,j] + softmin(R[i-1,j], R[i,j-1], R[i-1,j-1])
+Forward: the DP recurrence
+R[i,j] = D[i,j] + softmin(R[i-1,j], R[i,j-1], R[i-1,j-1])
 serialises along both axes but is embarrassingly parallel along each
 anti-diagonal — an exact match for the VPU's lane-parallel vector ops.
 The cost matrix is pre-laid-out in diagonal-major order (n+m-1, n) so each
 wavefront step is one contiguous VMEM row read; the two carried diagonals
 live in VMEM scratch that persists across the sequential k-chunk grid
 dimension (the chunking keeps arbitrarily long series within VMEM).
+``return_r=True`` additionally emits the full accumulated-cost matrix R
+in the same diagonal layout — the residual the backward pass needs.
 
-Grid: (batch, num_k_chunks); scratch: r_prev, r_prev2 (n,), ans (1,).
+Backward: the gradient of soft-DTW w.r.t. the cost matrix is the
+E-matrix of Cuturi & Blondel 2017 (Alg. 2), computed by the CLOSED-FORM
+reverse DP
+
+    E[i,j] = E[i+1,j]   * exp((R[i+1,j]   - R[i,j] - D[i+1,j])  / gamma)
+           + E[i,j+1]   * exp((R[i,j+1]   - R[i,j] - D[i,j+1])  / gamma)
+           + E[i+1,j+1] * exp((R[i+1,j+1] - R[i,j] - D[i+1,j+1])/ gamma)
+
+seeded with E[n-1,m-1] = 1 and swept over anti-diagonals in REVERSE
+order — the same wavefront schedule as the forward, so it runs as a
+second Pallas kernel (``softdtw_bwd_pallas``) with the carried E/R/D
+diagonals in VMEM scratch.  No autodiff of the sequential DP is
+involved anywhere.
+
+Grid: (batch, num_k_chunks); the backward's chunk grid dimension is
+index-mapped in reverse.
 """
 from __future__ import annotations
 
@@ -23,8 +41,15 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.losses import BIG
 
 
-def _kernel(dd_ref, out_ref, rp_ref, rp2_ref, ans_ref, *, n: int, m: int,
-            chunk: int, nkc: int, gamma: float, hard: bool):
+def _kernel(dd_ref, *refs, n: int, m: int, chunk: int, nkc: int,
+            gamma: float, hard: bool, with_r: bool):
+    if with_r:
+        out_ref, r_dd_ref = refs[0], refs[1]
+        scratch = refs[2:]
+    else:
+        out_ref = refs[0]
+        scratch = refs[1:]
+    rp_ref, rp2_ref, ans_ref = scratch
     kc = pl.program_id(1)
 
     @pl.when(kc == 0)
@@ -56,6 +81,8 @@ def _kernel(dd_ref, out_ref, rp_ref, rp2_ref, ans_ref, *, n: int, m: int,
         r_k = jnp.where(invalid, BIG, r_k)
         rp2_ref[...] = rp
         rp_ref[...] = r_k
+        if with_r:
+            r_dd_ref[0, r] = r_k
         ans_ref[0] = jnp.where(k == n + m - 2, r_k[n - 1], ans_ref[0])
         return 0
 
@@ -74,21 +101,123 @@ def softdtw_pallas(
     hard: bool = False,
     chunk: int = 256,
     interpret: bool = True,
-) -> jax.Array:
-    """Batched accumulated (soft-)DTW from diagonal-layout costs -> (B,)."""
+    return_r: bool = False,
+):
+    """Batched accumulated (soft-)DTW from diagonal-layout costs -> (B,).
+
+    ``return_r=True`` also returns the accumulated-cost matrix R in the
+    same (B, KD_pad, n) diagonal layout — the backward pass's residual.
+    """
     B, kd_pad, n_ = dd.shape
     assert n_ == n and kd_pad % chunk == 0
     nkc = kd_pad // chunk
     kernel = functools.partial(_kernel, n=n, m=m, chunk=chunk, nkc=nkc,
-                               gamma=float(gamma), hard=hard)
-    return pl.pallas_call(
+                               gamma=float(gamma), hard=hard,
+                               with_r=return_r)
+    out_shape = [jax.ShapeDtypeStruct((B,), jnp.float32)]
+    out_specs = [pl.BlockSpec((1,), lambda b, kc: (b,))]
+    if return_r:
+        out_shape.append(jax.ShapeDtypeStruct((B, kd_pad, n), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, chunk, n), lambda b, kc: (b, kc, 0)))
+    outs = pl.pallas_call(
         kernel,
         grid=(B, nkc),
         in_specs=[pl.BlockSpec((1, chunk, n), lambda b, kc: (b, kc, 0))],
-        out_specs=pl.BlockSpec((1,), lambda b, kc: (b,)),
-        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        out_specs=out_specs if return_r else out_specs[0],
+        out_shape=out_shape if return_r else out_shape[0],
         scratch_shapes=[pltpu.VMEM((n,), jnp.float32),
                         pltpu.VMEM((n,), jnp.float32),
                         pltpu.VMEM((1,), jnp.float32)],
         interpret=interpret,
     )(dd)
+    return outs
+
+
+def _bwd_kernel(dd_ref, rd_ref, e_dd_ref, e1_ref, e2_ref, r1_ref, r2_ref,
+                d1_ref, d2_ref, *, n: int, m: int, chunk: int, nkc: int,
+                gamma: float):
+    """Reverse anti-diagonal sweep computing the E-matrix.
+
+    Diagonal layout: layout[k, i] holds cell (i, k-i).  The children of
+    cell (i, j) on diag k sit at layout[k+1, i+1] ((i+1, j)),
+    layout[k+1, i] ((i, j+1)) and layout[k+2, i+1] ((i+1, j+1)) — so the
+    sweep carries the two PREVIOUSLY processed (later) diagonals of E, R
+    and D in VMEM scratch, exactly mirroring the forward's carry but
+    walking k downwards (the chunk grid dimension is index-mapped in
+    reverse)."""
+    kc_rev = pl.program_id(1)
+    inv_g = 1.0 / gamma
+    # one-hot of row n-1 (1-D iota is not lowerable on TPU)
+    seed_row = jnp.concatenate([jnp.zeros((n - 1,), jnp.float32),
+                                jnp.ones((1,), jnp.float32)])
+
+    @pl.when(kc_rev == 0)
+    def _init():
+        e1_ref[...] = jnp.zeros_like(e1_ref)
+        e2_ref[...] = jnp.zeros_like(e2_ref)
+        r1_ref[...] = jnp.full_like(r1_ref, BIG)
+        r2_ref[...] = jnp.full_like(r2_ref, BIG)
+        d1_ref[...] = jnp.full_like(d1_ref, BIG)
+        d2_ref[...] = jnp.full_like(d2_ref, BIG)
+
+    def shift(x, pad):
+        """layout row index i -> i+1 (children live one row down)."""
+        return jnp.concatenate([x[1:], jnp.full((1,), pad, x.dtype)])
+
+    def body(s, _):
+        r = chunk - 1 - s
+        k = (nkc - 1 - kc_rev) * chunk + r
+        d_k = dd_ref[0, r]
+        r_k = rd_ref[0, r]
+        e1, e2 = e1_ref[...], e2_ref[...]
+        r1, r2 = r1_ref[...], r2_ref[...]
+        d1, d2 = d1_ref[...], d2_ref[...]
+
+        def term(ev, rv, dv):
+            w = jnp.exp((rv - r_k - dv) * inv_g)
+            return jnp.where(dv < BIG, ev * w, 0.0)
+
+        e_k = (term(shift(e1, 0.0), shift(r1, BIG), shift(d1, BIG))  # down
+               + term(e1, r1, d1)                                    # right
+               + term(shift(e2, 0.0), shift(r2, BIG), shift(d2, BIG)))  # diag
+        e_k = jnp.where(d_k < BIG, e_k, 0.0)
+        # seed: dF/dR[n-1,m-1] = 1 (F = R[n-1,m-1])
+        e_k = e_k + jnp.where(k == n + m - 2, seed_row, 0.0)
+        e2_ref[...] = e1
+        e1_ref[...] = e_k
+        r2_ref[...] = r1
+        r1_ref[...] = r_k
+        d2_ref[...] = d1
+        d1_ref[...] = d_k
+        e_dd_ref[0, r] = e_k
+        return 0
+
+    lax.fori_loop(0, chunk, body, 0)
+
+
+def softdtw_bwd_pallas(
+    dd: jax.Array,           # (B, KD_pad, n) diagonal-major costs
+    rd: jax.Array,           # (B, KD_pad, n) diagonal-major R (from forward)
+    n: int, m: int,
+    *,
+    gamma: float = 1.0,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """E-matrix (dSDTW/dD) in diagonal layout, (B, KD_pad, n)."""
+    B, kd_pad, n_ = dd.shape
+    assert n_ == n and kd_pad % chunk == 0 and rd.shape == dd.shape
+    nkc = kd_pad // chunk
+    kernel = functools.partial(_bwd_kernel, n=n, m=m, chunk=chunk, nkc=nkc,
+                               gamma=float(gamma))
+    rev = lambda b, kc: (b, nkc - 1 - kc, 0)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nkc),
+        in_specs=[pl.BlockSpec((1, chunk, n), rev),
+                  pl.BlockSpec((1, chunk, n), rev)],
+        out_specs=pl.BlockSpec((1, chunk, n), rev),
+        out_shape=jax.ShapeDtypeStruct((B, kd_pad, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n,), jnp.float32)] * 6,
+        interpret=interpret,
+    )(dd, rd)

@@ -29,8 +29,16 @@ L96_DT = 0.0025
 # ---------------------------------------------------------------------------
 
 def train_hp_twin(seed: int = 42, pretrain_steps: int = 400,
-                  train_steps: int = 600, hidden: int = 14):
-    """Train the HP twin on the sine drive (paper Methods: 500 pts, 1e-3 s)."""
+                  train_steps: int = 600, hidden: int = 14,
+                  backend=None):
+    """Train the HP twin on the sine drive (paper Methods: 500 pts, 1e-3 s).
+
+    ``backend``: training substrate for the trajectory phase (Backend
+    instance or registry name).  ``backend="fused_pallas"`` trains on the
+    serving substrate — the weights-stationary kernel plus its
+    reverse-time VJP; the derivative-matching warm start stays digital
+    (it evaluates the bare field, no ODE solve).
+    """
     ts, xs, vs, cur = hp.generate("sine", num_points=500, dt=1e-3,
                                   amp=HP_AMP, freq=HP_FREQ)
     ys = xs[:, None]
@@ -44,7 +52,7 @@ def train_hp_twin(seed: int = 42, pretrain_steps: int = 400,
         twin, params, ts, ys,
         optimizer=adam(warmup_cosine_schedule(3e-3, 50, train_steps)),
         num_steps=train_steps, segment_len=50, loss="l1", noise_std=0.002,
-        key=jax.random.PRNGKey(seed + 1))
+        key=jax.random.PRNGKey(seed + 1), backend=backend)
     return twin, params, float(hist[-1])
 
 
@@ -132,8 +140,11 @@ def l96_data(num_points: int = 2400, dt: float = L96_DT):
 def train_l96_twin(seed: int = 7, pretrain_steps: int = 5000,
                    train_steps: tuple = ((60, 600, 1e-3), (200, 600, 4e-4)),
                    hidden: int = 64, tube_noise: float = 0.03,
-                   data=None):
-    """Noisy-tube derivative pretraining + multiple-shooting curriculum."""
+                   data=None, backend=None):
+    """Noisy-tube derivative pretraining + multiple-shooting curriculum.
+
+    ``backend``: trajectory-phase training substrate (see
+    :func:`repro.train.trainer.segment_loss_fn`)."""
     ts, ys, split = data if data is not None else l96_data()
     ts_tr, ys_tr = ts[:split], ys[:split]
     twin = make_autonomous_twin(6, hidden=hidden)
@@ -158,7 +169,7 @@ def train_l96_twin(seed: int = 7, pretrain_steps: int = 5000,
             optimizer=adam(warmup_cosine_schedule(lr, 50, steps),
                            weight_decay=1e-4),
             num_steps=steps, segment_len=seg, loss="l1", noise_std=0.02,
-            key=jax.random.PRNGKey(seed + 2))
+            key=jax.random.PRNGKey(seed + 2), backend=backend)
     return twin, params
 
 

@@ -12,6 +12,13 @@ both documented in EXPERIMENTS.md:
 * derivative-matching warm start — regress f_theta(x) onto finite-
   difference derivatives before trajectory training (a cheap collocation
   pretraining that cuts trajectory epochs ~10x).
+
+The trajectory loss is substrate-selectable (``segment_loss_fn``'s
+``backend=``): the default digital path vmaps one adjoint solve per
+shooting segment, while ``backend="fused_pallas"`` batches all segments
+through the weights-stationary Pallas kernel and differentiates through
+its reverse-time checkpoint/replay VJP — training on the substrate that
+serves.
 """
 from __future__ import annotations
 
@@ -187,9 +194,113 @@ def make_segments(ts: jax.Array, ys: jax.Array, segment_len: int):
     return ts[idx], ys[idx]
 
 
+def _segment_objective(loss: str, gamma: float, preds, ys_seg,
+                       kernelised: bool = False, interpret=None):
+    """Shared loss combinators over (S, L+1, D) predictions/targets.
+
+    ``kernelised=True`` (the fused training path) routes soft-DTW through
+    the wavefront Pallas kernels — forward AND the closed-form E-matrix
+    backward — instead of the pure-jnp reference DP."""
+    if kernelised and loss != "l1":
+        from repro.kernels import ops
+        from repro.kernels.fused_ode_mlp import _default_interpret
+        itp = _default_interpret() if interpret is None else interpret
+        sdtw = jnp.mean(ops.soft_dtw(preds, ys_seg, gamma, itp))
+    elif loss != "l1":
+        per_seg = jax.vmap(lambda p, t: soft_dtw(p, t, gamma))(preds, ys_seg)
+        sdtw = jnp.mean(per_seg)
+    if loss == "l1":
+        return l1(preds, ys_seg)
+    if loss == "softdtw":
+        return sdtw / ys_seg.shape[1]
+    if loss == "l1+softdtw":
+        return l1(preds, ys_seg) + 0.1 * sdtw / ys_seg.shape[1]
+    raise ValueError(loss)
+
+
+def _fused_segment_loss_fn(twin, backend, ts_seg, ys_seg, loss: str,
+                           gamma: float, noise_std: float):
+    """Multiple-shooting loss on the fused-Pallas substrate.
+
+    The segments become the kernel's BATCH dimension: one grid-tiled
+    weights-stationary solve integrates all S shooting segments at once
+    (for a driven twin each segment gets its own drive slab, sampled at
+    its absolute half-step times — the per-tile-drive kernel path), and
+    the reverse-time kernel carries the gradients.  Differs from the
+    digital vmap path only by the substrate; the objective, segmentation
+    and noise regularisation are identical.
+    """
+    from repro.kernels import ops
+    from repro.kernels.fused_ode_mlp import pad_fleet_to_tile
+
+    # honour the twin's solver config: RK4 only (as the serving backend
+    # enforces), with steps_per_interval densifying each segment's grid
+    method = getattr(twin.node, "method", "rk4")
+    if method != "rk4":
+        raise ValueError(
+            f"fused-backend training integrates RK4 only, got {method!r}")
+    sub = int(getattr(twin.node, "steps_per_interval", 1))
+
+    S, Lp1 = ts_seg.shape[0], ts_seg.shape[1]
+    tsn = np.asarray(ts_seg, dtype=np.float64)
+    # uniformity judged on the VALUES (float32 diffs wobble by ~eps*t),
+    # mirroring FusedPallasBackend._grid: every segment must sit on one
+    # shared-dt line starting at its own offset
+    dt = float(np.mean(tsn[:, -1] - tsn[:, 0]) / (Lp1 - 1))
+    drift = np.abs(tsn - (tsn[:, :1] + dt * np.arange(Lp1))).max()
+    tol = max(32 * np.finfo(np.float32).eps * np.abs(tsn).max(), 1e-9)
+    if dt == 0 or drift > tol:
+        raise ValueError(
+            "fused-backend training needs a uniform time grid (shared dt "
+            "across all shooting segments)")
+    T_fine = (Lp1 - 1) * sub
+    drive = getattr(twin.field, "drive", None)
+    if drive is None:
+        uh = jnp.zeros((2 * T_fine + 1, 0), jnp.float32)
+    else:
+        # per-segment drive sampled at each segment's absolute (fine) times
+        uh = jax.vmap(lambda row: ops.half_step_drive(
+            drive, jnp.linspace(row[0], row[-1], T_fine + 1)))(ts_seg)
+        uh = uh.astype(jnp.float32)
+
+    def loss_fn(params, key):
+        y0s = ys_seg[:, 0]
+        if noise_std > 0 and key is not None:
+            y0s = y0s + noise_std * jax.random.normal(key, y0s.shape)
+        # pad segments up to a tile multiple, as rollout_batch_local does
+        y0p, uhp, bt, _ = pad_fleet_to_tile(y0s, uh, backend.batch_tile)
+        traj = ops.fused_node_rollout(
+            params, y0p, uhp, dt / sub, batch_tile=bt,
+            time_chunk=backend.time_chunk, interpret=backend.interpret,
+            vmem_budget_bytes=backend.vmem_budget_bytes,
+            gradient="fused_vjp")
+        preds = jnp.transpose(traj[::sub, :S], (1, 0, 2))  # (S, L+1, D)
+        return _segment_objective(loss, gamma, preds, ys_seg,
+                                  kernelised=True,
+                                  interpret=backend.interpret)
+
+    return loss_fn
+
+
 def segment_loss_fn(twin, ts_seg, ys_seg, loss: str = "l1",
-                    gamma: float = 0.1, noise_std: float = 0.0):
-    """Loss over shooting segments solved in parallel (vmap)."""
+                    gamma: float = 0.1, noise_std: float = 0.0,
+                    backend=None):
+    """Loss over shooting segments solved in parallel.
+
+    ``backend``: optional execution substrate (Backend instance or
+    registry name); ``None`` uses the twin's own backend.  Digital and
+    analogue substrates vmap one solve per segment; the fused-Pallas
+    substrate batches all segments through one weights-stationary kernel
+    with the reverse-time VJP (train where you serve).
+    """
+    from repro.core.backends import FusedPallasBackend, resolve_backend
+
+    be = resolve_backend(backend) if backend is not None else twin.backend
+    if isinstance(be, FusedPallasBackend):
+        return _fused_segment_loss_fn(twin, be, ts_seg, ys_seg, loss,
+                                      gamma, noise_std)
+    if backend is not None:
+        twin = twin.with_backend(be)
 
     def loss_fn(params, key):
         y0s = ys_seg[:, 0]
@@ -197,17 +308,7 @@ def segment_loss_fn(twin, ts_seg, ys_seg, loss: str = "l1",
             y0s = y0s + noise_std * jax.random.normal(key, y0s.shape)
         preds = jax.vmap(lambda y0, t: twin.simulate(params, y0, t))(
             y0s, ts_seg)
-        if loss == "l1":
-            return l1(preds, ys_seg)
-        if loss == "softdtw":
-            per_seg = jax.vmap(lambda p, t: soft_dtw(p, t, gamma))(
-                preds, ys_seg)
-            return jnp.mean(per_seg) / ys_seg.shape[1]
-        if loss == "l1+softdtw":
-            per_seg = jax.vmap(lambda p, t: soft_dtw(p, t, gamma))(
-                preds, ys_seg)
-            return l1(preds, ys_seg) + 0.1 * jnp.mean(per_seg) / ys_seg.shape[1]
-        raise ValueError(loss)
+        return _segment_objective(loss, gamma, preds, ys_seg)
 
     return loss_fn
 
@@ -216,13 +317,22 @@ def train_twin(twin, params, ts: jax.Array, ys: jax.Array, *,
                optimizer: Optimizer, num_steps: int,
                segment_len: int = 50, loss: str = "l1",
                gamma: float = 0.1, noise_std: float = 0.0,
-               key: jax.Array | None = None, log_every: int = 0):
-    """Train a twin on one observed trajectory (paper's training setup)."""
+               key: jax.Array | None = None, log_every: int = 0,
+               backend=None, scan_chunk: int | None = None):
+    """Train a twin on one observed trajectory (paper's training setup).
+
+    ``backend`` selects the training substrate (see
+    :func:`segment_loss_fn`): ``backend="fused_pallas"`` (or a
+    ``FusedPallasBackend`` instance) runs every forward AND backward
+    solve through the weights-stationary Pallas kernels.
+    """
     ts_seg, ys_seg = make_segments(ts, ys, segment_len)
-    loss_fn = segment_loss_fn(twin, ts_seg, ys_seg, loss, gamma, noise_std)
+    loss_fn = segment_loss_fn(twin, ts_seg, ys_seg, loss, gamma, noise_std,
+                              backend=backend)
     if key is None:
         key = jax.random.PRNGKey(0)
-    return fit(loss_fn, params, optimizer, num_steps, key, log_every)
+    return fit(loss_fn, params, optimizer, num_steps, key, log_every,
+               scan_chunk=scan_chunk)
 
 
 # ---------------------------------------------------------------------------

@@ -220,6 +220,37 @@ def test_fleet_autonomous_batch(l96_setup):
     np.testing.assert_allclose(fus, dig, atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.parametrize("n", [5, 7, 13])
+def test_fused_fleet_prime_sizes_pad_to_tile(hp_setup, n):
+    """Prime fleet sizes must PAD up to the batch tile (one extra tile)
+    instead of degenerating to bt=1 grid cells — and the padded rows must
+    not leak into the result (parity vs the digital vmap path)."""
+    twin, params, _, ts = hp_setup
+    y0s = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 40 + n), (n, 1))
+    dig = twin.simulate_batch(params, y0s, ts)
+    fus = twin.with_backend(FusedPallasBackend(batch_tile=4)).simulate_batch(
+        params, y0s, ts)
+    assert fus.shape == dig.shape == (n, ts.shape[0], 1)
+    np.testing.assert_allclose(fus, dig, atol=1e-4, rtol=1e-4)
+
+
+def test_fused_fleet_prime_sizes_pad_per_twin_drives(hp_setup):
+    """The padding path must also replicate per-twin drive slabs."""
+    twin, params, _, ts = hp_setup
+
+    def family(t, theta):
+        return theta[0] * jnp.sin(theta[1] * t)
+
+    n = 5
+    y0s = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 50), (n, 1))
+    thetas = 1.0 + jax.random.uniform(jax.random.fold_in(KEY, 51), (n, 2))
+    fleet = TwinFleet(twin, drive_family=family)
+    dig = fleet.simulate(params, y0s, ts, thetas)
+    fus = fleet.with_backend(FusedPallasBackend(batch_tile=4)).simulate(
+        params, y0s, ts, thetas)
+    np.testing.assert_allclose(fus, dig, atol=1e-4, rtol=1e-4)
+
+
 def test_fused_time_chunk_threads_through_backend(hp_setup):
     """An explicit time_chunk forcing many chunks must not change the
     trajectory the backend serves."""

@@ -1,0 +1,353 @@
+"""Gradient parity: the fused-Pallas training substrate must agree with
+the digital adjoint, backprop-through-the-solver, and finite differences;
+the kernelised soft-DTW backward must agree with autodiff of the
+reference DP.  This is the acceptance suite for train-where-you-serve."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import soft_dtw as soft_dtw_jnp
+from repro.core.node import mlp_init
+from repro.core.twin import make_autonomous_twin, make_driven_twin
+from repro.kernels import ops, ref
+from repro.kernels.fused_ode_mlp_bwd import fused_node_rollout_vjp
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree_max_err(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return max(float(jnp.abs(x - y).max()) for x, y in zip(la, lb))
+
+
+def _tree_max_rel(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    scale = max(float(jnp.abs(y).max()) for y in lb) + 1e-12
+    return _tree_max_err(a, b) / scale
+
+
+# ---------------------------------------------------------------------------
+# fused VJP vs autodiff of the jnp reference (exact same discretisation)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sizes,drive_dim,T,chunk,bt", [
+    ((2, 14, 14, 1), 1, 11, 3, 4),    # HP shape, chunk-straddling
+    ((6, 32, 32, 6), 0, 21, 4, 8),    # autonomous, partial tail chunk
+    ((3, 8, 2), 1, 5, 8, 8),          # single chunk > T
+])
+def test_fused_vjp_matches_ref_autodiff(sizes, drive_dim, T, chunk, bt):
+    """Grads of a random-weighted trajectory functional: the reverse-time
+    kernel must reproduce backprop-through-the-unrolled-RK4 to float32
+    rounding, across time-chunk boundaries."""
+    D = sizes[-1]
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(KEY, sizes[1] + T), 3)
+    params = mlp_init(k1, sizes)
+    ws = [p["w"] for p in params]
+    bs = [p["b"] for p in params]
+    B = 8
+    ts = jnp.linspace(0.0, 0.5, T + 1)
+    dt = float(ts[1] - ts[0])
+    if drive_dim:
+        uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
+    else:
+        uh = jnp.zeros((2 * T + 1, 0))
+    y0 = 0.3 * jax.random.normal(k2, (B, D))
+    gw = jax.random.normal(k3, (T + 1, B, D))
+
+    gk = jax.grad(lambda y, w, b: jnp.sum(
+        fused_node_rollout_vjp(y, uh, w, b, dt, bt, chunk, None) * gw),
+        argnums=(0, 1, 2))(y0, ws, bs)
+    gr = jax.grad(lambda y, w, b: jnp.sum(
+        ref.fused_node_rollout_ref(y, uh, w, b, dt) * gw),
+        argnums=(0, 1, 2))(y0, ws, bs)
+    assert _tree_max_rel(gk, gr) < 1e-5
+
+
+def test_fused_vjp_per_tile_drives():
+    """Per-twin drive slabs (fleet training): gradients must flow through
+    the (tile, chunk)-sliced drive path too."""
+    params = mlp_init(KEY, (2, 14, 14, 1))
+    ws = [p["w"] for p in params]
+    bs = [p["b"] for p in params]
+    B, T = 8, 11
+    ts = jnp.linspace(0.0, 0.5, T + 1)
+    amps = 0.5 + jnp.arange(B, dtype=jnp.float32) / B
+    uh = jnp.stack([ops.half_step_drive(lambda t, a=a: a * jnp.sin(4 * t), ts)
+                    for a in amps])
+    y0 = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 5), (B, 1))
+    gw = jax.random.normal(jax.random.fold_in(KEY, 6), (T + 1, B, 1))
+    dt = float(ts[1] - ts[0])
+    gk = jax.grad(lambda y, w, b: jnp.sum(
+        fused_node_rollout_vjp(y, uh, w, b, dt, 4, 3, None) * gw),
+        argnums=(0, 1, 2))(y0, ws, bs)
+    gr = jax.grad(lambda y, w, b: jnp.sum(
+        ref.fused_node_rollout_ref(y, uh, w, b, dt) * gw),
+        argnums=(0, 1, 2))(y0, ws, bs)
+    assert _tree_max_rel(gk, gr) < 1e-5
+
+
+def test_fused_vjp_drive_gets_zero_cotangent():
+    """The drive is data, not a parameter: its cotangent is defined zero."""
+    params = mlp_init(KEY, (2, 8, 1))
+    ws = [p["w"] for p in params]
+    bs = [p["b"] for p in params]
+    T = 6
+    ts = jnp.linspace(0.0, 0.3, T + 1)
+    uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
+    y0 = jnp.full((4, 1), 0.2)
+    g = jax.grad(lambda u: jnp.sum(
+        fused_node_rollout_vjp(y0, u, ws, bs, float(ts[1] - ts[0]),
+                               4, None, None) ** 2))(uh)
+    assert g.shape == uh.shape
+    assert float(jnp.abs(g).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fused VJP vs the digital adjoint (twin level) and finite differences
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hp_grad_setup():
+    twin = make_driven_twin(1, lambda t: jnp.sin(4.0 * t))
+    params = twin.init(KEY)
+    # 23 steps with time_chunk=5 -> the loss horizon straddles 5 chunks
+    ts = jnp.linspace(0.0, 0.23, 24)
+    y0 = jnp.array([0.2])
+    return twin, params, y0, ts
+
+
+def test_fused_vjp_matches_digital_adjoint(hp_grad_setup):
+    """Same loss, same weights: continuous-adjoint grads (digital) and
+    discretise-then-optimise grads (fused) agree to <=1e-3 rel."""
+    from repro.core.backends import FusedPallasBackend
+    twin, params, y0, ts = hp_grad_setup
+    fused = twin.with_backend(FusedPallasBackend(batch_tile=1, time_chunk=5))
+
+    def loss(t):
+        return lambda p: jnp.mean(t.simulate(p, y0, ts) ** 2)
+
+    g_dig = jax.grad(loss(twin))(params)          # adjoint (O(1) memory)
+    g_fus = jax.grad(loss(fused))(params)         # reverse-time kernel
+    assert _tree_max_rel(g_fus, g_dig) < 1e-3
+
+
+def test_fused_vjp_matches_finite_differences(hp_grad_setup):
+    """Directional derivative vs central differences, <=1e-3 rel, on a
+    chunk-straddling horizon (the ISSUE acceptance gate)."""
+    from repro.core.backends import FusedPallasBackend
+    twin, params, y0, ts = hp_grad_setup
+    fused = twin.with_backend(FusedPallasBackend(batch_tile=1, time_chunk=5))
+
+    def loss(p, y):
+        return jnp.mean(fused.node.trajectory(p, y, ts) ** 2)
+
+    gp, gy = jax.grad(loss, argnums=(0, 1))(params, y0)
+
+    # params: directional derivative along the gradient itself (a random
+    # direction suffers g.v cancellation that amplifies float32 FD noise
+    # past the gate); then fd ~= |g| and the check is well conditioned
+    norm = jnp.sqrt(sum(jnp.sum(x ** 2)
+                        for x in jax.tree_util.tree_leaves(gp)))
+    v = jax.tree_util.tree_map(lambda x: x / norm, gp)
+    eps = 3e-3   # truncation ~eps^2 stays below the 1e-3 gate; float32
+                 # rounding noise in the central difference stays ~1e-5
+    shift = lambda s: jax.tree_util.tree_map(lambda p_, v_: p_ + s * v_,
+                                             params, v)
+    fd = (loss(shift(eps), y0) - loss(shift(-eps), y0)) / (2 * eps)
+    assert abs(float(fd) - float(norm)) / (abs(float(fd)) + 1e-12) < 1e-3
+
+    # y0 direction
+    fd_y = (loss(params, y0 + eps) - loss(params, y0 - eps)) / (2 * eps)
+    assert abs(float(fd_y - gy[0])) / (abs(float(fd_y)) + 1e-12) < 1e-3
+
+
+def test_fused_fleet_batch_gradients(hp_grad_setup):
+    """Gradients through rollout_batch_local, including the fleet padding
+    path (B=5 prime, batch_tile=4 -> one padded tile); padded rows must
+    contribute exactly nothing."""
+    from repro.core.backends import FusedPallasBackend
+    twin, params, _, ts = hp_grad_setup
+    y0s = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 11), (5, 1))
+    fused = twin.with_backend(FusedPallasBackend(batch_tile=4))
+
+    def loss_f(p):
+        return jnp.mean(fused.simulate_batch(p, y0s, ts) ** 2)
+
+    def loss_d(p):
+        return jnp.mean(twin.simulate_batch(p, y0s, ts) ** 2)
+
+    gf = jax.grad(loss_f)(params)
+    gd = jax.grad(loss_d)(params)
+    assert _tree_max_rel(gf, gd) < 1e-3
+
+
+def test_fused_stopgrad_detaches(hp_grad_setup):
+    """gradient='stopgrad' pins the substrate to inference: zero grads
+    instead of an autodiff error through the raw pallas_call."""
+    twin, params, y0, ts = hp_grad_setup
+    from repro.core.backends import FusedPallasBackend
+    import dataclasses
+    node = dataclasses.replace(twin.node, gradient="stopgrad",
+                               backend=FusedPallasBackend(batch_tile=1))
+    g = jax.grad(lambda p: jnp.mean(node.trajectory(p, y0, ts) ** 2))(params)
+    assert all(float(jnp.abs(x).max()) == 0.0
+               for x in jax.tree_util.tree_leaves(g))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: fit() on the fused substrate tracks the digital adjoint
+# ---------------------------------------------------------------------------
+
+def test_fit_fused_backend_matches_digital_loss_trajectory():
+    """The ISSUE acceptance: fit() trains the HP twin with
+    backend='fused_pallas' and the loss trajectory matches the
+    digital-adjoint run to <=1e-3 rel."""
+    from repro.data import hp_memristor as hp
+    from repro.train import trainer
+    from repro.train.optimizer import adam
+
+    ts, xs, _, _ = hp.generate("sine", num_points=500, dt=1e-3,
+                               amp=2.0, freq=2.0)
+    ys = xs[:, None]
+    twin = make_driven_twin(1, hp.WAVEFORMS["sine"](amp=2.0, freq=2.0),
+                            hidden=14)
+    params = twin.init(jax.random.PRNGKey(42))
+    steps = 40
+    _, h_dig = trainer.train_twin(
+        twin, params, ts, ys, optimizer=adam(1e-3), num_steps=steps,
+        segment_len=50, loss="l1", noise_std=0.002,
+        key=jax.random.PRNGKey(1))
+    _, h_fus = trainer.train_twin(
+        twin, params, ts, ys, optimizer=adam(1e-3), num_steps=steps,
+        segment_len=50, loss="l1", noise_std=0.002,
+        key=jax.random.PRNGKey(1), backend="fused_pallas")
+    rel = jnp.abs(h_fus - h_dig) / (jnp.abs(h_dig) + 1e-12)
+    assert float(rel.max()) < 1e-3
+
+
+def test_fit_fused_backend_softdtw_loss():
+    """The kernelised soft-DTW objective (wavefront forward + E-matrix
+    backward) trains on the fused substrate and tracks the digital run."""
+    from repro.data import hp_memristor as hp
+    from repro.train import trainer
+    from repro.train.optimizer import adam
+
+    ts, xs, _, _ = hp.generate("sine", num_points=200, dt=1e-3,
+                               amp=2.0, freq=2.0)
+    ys = xs[:, None]
+    twin = make_driven_twin(1, hp.WAVEFORMS["sine"](amp=2.0, freq=2.0),
+                            hidden=14)
+    params = twin.init(jax.random.PRNGKey(42))
+    _, h_dig = trainer.train_twin(
+        twin, params, ts, ys, optimizer=adam(1e-3), num_steps=6,
+        segment_len=40, loss="l1+softdtw", gamma=0.1,
+        key=jax.random.PRNGKey(1))
+    _, h_fus = trainer.train_twin(
+        twin, params, ts, ys, optimizer=adam(1e-3), num_steps=6,
+        segment_len=40, loss="l1+softdtw", gamma=0.1,
+        key=jax.random.PRNGKey(1), backend="fused_pallas")
+    rel = jnp.abs(h_fus - h_dig) / (jnp.abs(h_dig) + 1e-12)
+    assert float(rel.max()) < 1e-3
+
+
+def test_fit_fused_backend_honours_solver_config():
+    """The fused training loss must respect the twin's solver config:
+    steps_per_interval densifies the segment grid (parity vs digital),
+    and a non-RK4 method raises instead of silently coarsening."""
+    from repro.data import hp_memristor as hp
+    from repro.train import trainer
+    from repro.train.optimizer import adam
+
+    ts, xs, _, _ = hp.generate("sine", num_points=150, dt=1e-3,
+                               amp=2.0, freq=2.0)
+    ys = xs[:, None]
+    twin = make_driven_twin(1, hp.WAVEFORMS["sine"](amp=2.0, freq=2.0),
+                            hidden=14, steps_per_interval=3)
+    params = twin.init(jax.random.PRNGKey(42))
+    _, h_dig = trainer.train_twin(
+        twin, params, ts, ys, optimizer=adam(1e-3), num_steps=5,
+        segment_len=30, loss="l1", key=jax.random.PRNGKey(1))
+    _, h_fus = trainer.train_twin(
+        twin, params, ts, ys, optimizer=adam(1e-3), num_steps=5,
+        segment_len=30, loss="l1", key=jax.random.PRNGKey(1),
+        backend="fused_pallas")
+    rel = jnp.abs(h_fus - h_dig) / (jnp.abs(h_dig) + 1e-12)
+    assert float(rel.max()) < 1e-3
+
+    twin5 = make_driven_twin(1, hp.WAVEFORMS["sine"](amp=2.0, freq=2.0),
+                             hidden=14, method="dopri5")
+    with pytest.raises(ValueError, match="RK4"):
+        trainer.train_twin(twin5, params, ts, ys, optimizer=adam(1e-3),
+                           num_steps=1, segment_len=30,
+                           backend="fused_pallas")
+
+
+# ---------------------------------------------------------------------------
+# soft-DTW: kernelised E-matrix backward vs autodiff of the reference DP
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,d,gamma", [
+    (1, 1, 1, 1.0),
+    (5, 5, 1, 0.5),
+    (40, 60, 2, 0.5),
+    (300, 200, 1, 1.0),       # multi-chunk reverse sweep (n+m-1 > 256)
+])
+def test_softdtw_kernel_backward_matches_ref_autodiff(n, m, d, gamma):
+    kx, ky = jax.random.split(jax.random.fold_in(KEY, n * m + d))
+    x = jax.random.normal(kx, (2, n, d))
+    y = jax.random.normal(ky, (2, m, d))
+
+    def k_loss(a, b):
+        return ops.soft_dtw(a, b, gamma).sum()
+
+    def r_loss(a, b):
+        return jax.vmap(lambda p, q: soft_dtw_jnp(p, q, gamma))(a, b).sum()
+
+    gkx, gky = jax.grad(k_loss, argnums=(0, 1))(x, y)
+    grx, gry = jax.grad(r_loss, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gkx, grx, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gky, gry, rtol=1e-3, atol=1e-4)
+
+
+def test_softdtw_e_matrix_matches_numpy_oracle():
+    """The wavefront E-matrix kernel vs the float64 numpy reverse DP."""
+    from repro.core.losses import _pairwise_dist
+    from repro.kernels.ops import (_diag_layout_batch, _sdtw_chunk,
+                                   _undiag_batch)
+    from repro.kernels.softdtw import softdtw_bwd_pallas, softdtw_pallas
+    n, m, gamma = 17, 23, 0.7
+    x = jax.random.normal(KEY, (1, n, 2))
+    y = jax.random.normal(jax.random.fold_in(KEY, 3), (1, m, 2))
+    D = jax.vmap(_pairwise_dist)(x, y)
+    chunk = _sdtw_chunk(n, m)
+    dd = _diag_layout_batch(D, chunk)
+    _, rd = softdtw_pallas(dd, n, m, gamma=gamma, chunk=chunk, return_r=True)
+    e_dd = softdtw_bwd_pallas(dd, rd, n, m, gamma=gamma, chunk=chunk)
+    E = _undiag_batch(e_dd, n, m)[0]
+    E_ref = ref.softdtw_grad_ref(D[0], gamma)
+    np.testing.assert_allclose(np.asarray(E), E_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_softdtw_e_matrix_rows_sum_like_alignment():
+    """E is a soft alignment: entries are non-negative and the total mass
+    is at least 1 path's worth (monotone-path property of soft-DTW)."""
+    from repro.core.losses import _pairwise_dist
+    from repro.kernels.ops import (_diag_layout_batch, _sdtw_chunk,
+                                   _undiag_batch)
+    from repro.kernels.softdtw import softdtw_bwd_pallas, softdtw_pallas
+    n, m = 24, 31
+    x = jax.random.normal(KEY, (1, n, 2))
+    y = jax.random.normal(jax.random.fold_in(KEY, 1), (1, m, 2))
+    D = jax.vmap(_pairwise_dist)(x, y)
+    chunk = _sdtw_chunk(n, m)
+    dd = _diag_layout_batch(D, chunk)
+    _, rd = softdtw_pallas(dd, n, m, gamma=0.5, chunk=chunk,
+                           return_r=True)
+    e_dd = softdtw_bwd_pallas(dd, rd, n, m, gamma=0.5, chunk=chunk)
+    E = _undiag_batch(e_dd, n, m)[0]
+    assert float(E.min()) >= 0.0
+    assert float(E[-1, -1]) == pytest.approx(1.0, abs=1e-5)
+    # every anti-diagonal of a (soft) monotone alignment carries mass >= 1
+    # wherever the path must cross; check the corners chain up
+    assert float(E[0, 0]) > 0.9
