@@ -13,7 +13,9 @@ against.  Modules:
   fig4j_noise          — read/programming-noise robustness grid
   kernels              — Pallas kernel vs jnp-reference checks + ref timing
                          (incl. the fused-ODE reverse-time backward and
-                         the soft-DTW E-matrix backward)
+                         the soft-DTW E-matrix backward), plus fused
+                         fwd+bwd rows per precision policy (f32 vs bf16)
+                         with the modelled bytes-moved / achieved GB/s
   fleet_backends       — digital vs fused-Pallas vs analogue fleet rollout
                          throughput at fleet sizes {1, 64, 1024}, plus a
                          long-horizon (T=10k) time-chunked fused rollout
@@ -23,6 +25,8 @@ against.  Modules:
                          virtual multi-device subprocess
   train_throughput     — scan-compiled fit() engine vs per-step baseline,
                          plus digital-adjoint vs fused-VJP training steps
+                         and the bf16_f32acc training substrate rows
+                         (bytes-moved per step)
   roofline             — per-(arch x shape) roofline table from the dry-run
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only kernels
@@ -199,6 +203,23 @@ def bench_fig4j_noise(l96_state=None):
              0.0, f"extrap_l1 {r['extrap_l1']:.3f}")
 
 
+def _fused_hbm_bytes(T, B, D, du, wsize, precision, bwd=False):
+    """Modelled HBM bytes of one fused rollout (VJP adds the reverse
+    sweep): y0 in (always f32) + drive slab + weights in + trajectory
+    slab out, every slab at the policy's storage width; the backward
+    additionally streams the cotangent slab in and flushes the f32
+    dW/db accumulators + dy0 (boundary rows are re-read from the primal
+    trajectory, already counted).  This is the quantity the bf16
+    policies halve — the achieved-bandwidth column divides it by the
+    measured wall time."""
+    sb = 2 if precision != "f32" else 4
+    uh = (2 * T + 1) * max(du, 1)
+    n = B * D * 4 + uh * sb + wsize * sb + T * B * D * sb
+    if bwd:
+        n += T * B * D * sb + wsize * 4 + B * D * 4
+    return n
+
+
 def bench_kernels():
     import jax
     import jax.numpy as jnp
@@ -212,12 +233,31 @@ def bench_kernels():
     ts = jnp.linspace(0, 0.1, T + 1)
     uh = ops.half_step_drive(lambda t: jnp.sin(20 * t), ts)
     dt = float(ts[1] - ts[0])
-    out_k = ops.fused_node_rollout(params, y0, uh, dt)
+    out_k = ops.fused_node_rollout(params, y0, uh, dt, precision="f32")
     out_r = ops.fused_node_rollout_ref(params, y0, uh, dt)
     err = float(jnp.abs(out_k - out_r).max())
     ref_fn = jax.jit(lambda: ops.fused_node_rollout_ref(params, y0, uh, dt))
     emit("kernels/fused_node_mlp", _timeit(lambda: ref_fn()),
          f"interpret_max_err {err:.2e}")
+
+    # --- precision rows: the kernel itself (compiled on TPU, interpreter
+    # elsewhere) per policy, with the modelled bytes-moved and achieved
+    # bandwidth.  bf16 storage halves the slab traffic; the derived field
+    # carries the error vs the f32 reference (the documented error model).
+    wsize = sum(p["w"].size + p["b"].size for p in params)
+    B, D, du = y0.shape[0], y0.shape[1], uh.shape[-1]
+    scale = float(jnp.abs(out_r).max())
+    for prec in ["f32", "bf16"]:
+        pol = "bf16_f32acc" if prec == "bf16" else "f32"
+        fn = jax.jit(lambda pol=pol: ops.fused_node_rollout(
+            params, y0, uh, dt, gradient="stopgrad", precision=pol))
+        out_p = fn()
+        rel = float(jnp.abs(out_p.astype(jnp.float32) - out_r).max()) / scale
+        us = _timeit(fn, best=True)
+        nbytes = _fused_hbm_bytes(T, B, D, du, wsize, pol)
+        emit(f"kernels/fused_node_mlp/{prec}", us,
+             f"rel_err_vs_f32ref {rel:.2e} bytes_moved {nbytes} "
+             f"({nbytes / (us * 1e-6) / 1e9:.3f} GB/s)")
 
     spec = AnalogueSpec(prog_noise=0.0436)
     w = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
@@ -234,7 +274,9 @@ def bench_kernels():
 
     a = jax.random.normal(jax.random.PRNGKey(4), (2, 128, 2))
     b = jax.random.normal(jax.random.PRNGKey(5), (2, 160, 2))
-    sk = ops.soft_dtw(a, b, 0.5)
+    # precision pinned to f32: these rows gate EXACT kernel parity (the
+    # reduced policies have their own rel-err rows above)
+    sk = ops.soft_dtw(a, b, 0.5, True, "f32")
     from repro.core.losses import soft_dtw as sj
     sr = jax.vmap(lambda p, q: sj(p, q, 0.5))(a, b)
     err = float(jnp.abs(sk - sr).max())
@@ -244,7 +286,7 @@ def bench_kernels():
 
     # soft-DTW backward: the closed-form E-matrix wavefront kernel vs
     # autodiff of the reference DP (which the op no longer uses)
-    gk = jax.grad(lambda x: ops.soft_dtw(x, b, 0.5).sum())(a)
+    gk = jax.grad(lambda x: ops.soft_dtw(x, b, 0.5, True, "f32").sum())(a)
     gr = jax.grad(
         lambda x: jax.vmap(lambda p, q: sj(p, q, 0.5))(x, b).sum())(a)
     err = float(jnp.abs(gk - gr).max())
@@ -256,7 +298,8 @@ def bench_kernels():
     # fused neural-ODE backward: reverse-time checkpoint/replay kernel vs
     # backprop through the unrolled reference
     def loss_k(p):
-        return jnp.sum(ops.fused_node_rollout(p, y0, uh, dt) ** 2)
+        return jnp.sum(ops.fused_node_rollout(p, y0, uh, dt,
+                                              precision="f32") ** 2)
 
     def loss_r(p):
         return jnp.sum(ops.fused_node_rollout_ref(p, y0, uh, dt) ** 2)
@@ -268,6 +311,29 @@ def bench_kernels():
     bwd_ref = jax.jit(jax.grad(loss_r))
     emit("kernels/fused_node_mlp_bwd", _timeit(lambda: bwd_ref(params)),
          f"interpret_max_err {err:.2e}")
+
+    # --- backward precision rows: fwd+bwd through the reverse-time
+    # kernel per policy, bytes-moved model incl. the cotangent slab and
+    # the f32 gradient flush
+    g_scale = max(float(jnp.abs(x).max())
+                  for x in jax.tree_util.tree_leaves(gr))
+    for prec in ["f32", "bf16"]:
+        pol = "bf16_f32acc" if prec == "bf16" else "f32"
+
+        def loss_p(p, pol=pol):
+            traj = ops.fused_node_rollout(p, y0, uh, dt, precision=pol)
+            return jnp.sum(traj.astype(jnp.float32) ** 2)
+
+        bwd_fn = jax.jit(jax.grad(loss_p))
+        gp = bwd_fn(params)
+        rel = max(float(jnp.abs(x - y).max()) for x, y in zip(
+            jax.tree_util.tree_leaves(gp),
+            jax.tree_util.tree_leaves(gr))) / g_scale
+        us = _timeit(lambda: bwd_fn(params), best=True)
+        nbytes = _fused_hbm_bytes(T, B, D, du, wsize, pol, bwd=True)
+        emit(f"kernels/fused_node_mlp_bwd/{prec}", us,
+             f"grad_rel_err_vs_f32ref {rel:.2e} bytes_moved {nbytes} "
+             f"({nbytes / (us * 1e-6) / 1e9:.3f} GB/s)")
 
 
 def bench_fleet_backends():
@@ -507,6 +573,32 @@ def bench_train_throughput():
          f"{sps_f:.1f} steps/s (trajectory phase)")
     emit("train_throughput/fused_vs_digital", 0.0,
          f"{sps_f / sps_d:.2f}x fused-VJP over digital-adjoint "
+         f"({jax.default_backend()})")
+
+    # --- reduced-precision training substrate: same shooting loss, bf16
+    # slabs + f32 accumulation, with the per-step bytes-moved model (the
+    # quantity the policy halves; bandwidth becomes meaningful on TPU —
+    # on CPU hosts the kernels run interpreted and the ratio just tracks
+    # the interpreter overhead per platform).
+    loss_fb = trainer.segment_loss_fn(
+        twin, ts_seg, ys_seg, "l1",
+        backend=FusedPallasBackend(precision="bf16_f32acc"))
+    eng_fb = trainer.make_scan_engine(loss_fb, opt, False, donate=False)
+    us_fb = _timeit(lambda: eng_fb(params, opt_state, None, steps_t),
+                    repeats=3, best=True)
+    sps_fb = steps_t / (us_fb * 1e-6)
+    S, Lp1 = ts_seg.shape
+    wsize = sum(p["w"].size + p["b"].size for p in params)
+    for prec, us_row in [("f32", us_f / steps_t), ("bf16", us_fb / steps_t)]:
+        pol = "bf16_f32acc" if prec == "bf16" else "f32"
+        nbytes = _fused_hbm_bytes(Lp1 - 1, S, ys.shape[1], 1, wsize, pol,
+                                  bwd=True)
+        sps = sps_fb if prec == "bf16" else sps_f
+        emit(f"train_throughput/fused_vjp_step/{prec}", us_row,
+             f"{sps:.1f} steps/s bytes_moved {nbytes} "
+             f"({nbytes / (us_row * 1e-6) / 1e9:.3f} GB/s)")
+    emit("train_throughput/fused_bf16_vs_f32", 0.0,
+         f"{sps_fb / sps_f:.2f}x bf16_f32acc over f32 fused "
          f"({jax.default_backend()})")
 
 

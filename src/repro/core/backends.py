@@ -267,6 +267,14 @@ class FusedPallasBackend(BaseBackend):
     the integration state across a second grid dimension, so ``T`` is
     unbounded (serving at T>=10k works) while the weights stay resident.
     ``time_chunk=None`` auto-sizes the chunk from ``vmem_budget_bytes``.
+
+    ``precision`` selects the mixed-precision policy of the substrate
+    ("f32" | "bf16" | "bf16_f32acc"; ``None`` = auto — bf16_f32acc on
+    TPU, f32 elsewhere): the bf16 policies store weights, drive and
+    trajectory slabs at half width (the VMEM planner packs ~2x the time
+    chunk) while matmuls accumulate at f32 and gradients always come
+    back f32.  Error model: ``docs/kernels.md``.  Every ``rollout`` /
+    ``rollout_batch`` call accepts a per-call ``precision=`` override.
     """
 
     name = "fused_pallas"
@@ -274,9 +282,16 @@ class FusedPallasBackend(BaseBackend):
     time_chunk: Optional[int] = None        # None = auto from VMEM budget
     interpret: Optional[bool] = None        # None = auto (TPU -> compiled)
     vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET
+    precision: Optional[str] = None         # None = auto (TPU -> bf16_f32acc)
 
     # -- staging -----------------------------------------------------------
     def program(self, field: Callable, params: Pytree) -> ExecState:
+        """Stage full-precision (f32) master operands; the precision
+        policy rounds them to its storage dtype at solve time.  Staging
+        the masters — not pre-rounded bf16 copies — keeps the per-call
+        ``precision`` override honest: ``precision="f32"`` on a
+        bf16-policy backend really is the exact path, and bf16→f32→bf16
+        round-trips cannot double-round."""
         if params is None:
             raise ValueError("FusedPallasBackend needs the MLP params")
         weights = [p["w"].astype(jnp.float32) for p in params]
@@ -322,13 +337,15 @@ class FusedPallasBackend(BaseBackend):
             return jnp.zeros((2 * T + 1, 0), jnp.float32)
         return half_step_drive(drive, ts_fine).astype(jnp.float32)
 
-    def _solve(self, state: ExecState, y0s, uh, dt, bt, gradient):
+    def _solve(self, state: ExecState, y0s, uh, dt, bt, gradient,
+               precision=None):
         """Dispatch the fused solve in the requested gradient mode.
 
         Every differentiable mode ('adjoint'/'direct'/'fused_vjp') maps
         onto the one substrate-native VJP (reverse-time checkpoint/
         replay); 'stopgrad' detaches.  The dispatch itself lives in
         :func:`repro.kernels.ops.fused_node_rollout` — one copy.
+        ``precision=None`` falls back to the backend's policy.
 
         NOTE: under the fused VJP the drive is data (zero cotangent), so
         gradients w.r.t. per-twin ``drive_params`` are silently zero on
@@ -342,28 +359,35 @@ class FusedPallasBackend(BaseBackend):
         return ops.fused_node_rollout(
             params, y0s, uh, dt, batch_tile=bt, time_chunk=self.time_chunk,
             interpret=self.interpret,
-            vmem_budget_bytes=self.vmem_budget_bytes, gradient=mode)
+            vmem_budget_bytes=self.vmem_budget_bytes, gradient=mode,
+            precision=self.precision if precision is None else precision)
 
     # -- execution ---------------------------------------------------------
     def rollout(self, state: ExecState, y0, ts, *, method: str = "rk4",
                 steps_per_interval: int = 1,
-                gradient: str = "fused_vjp") -> jax.Array:
+                gradient: str = "fused_vjp",
+                precision: Optional[str] = None) -> jax.Array:
         if method != "rk4":
             raise ValueError(
                 f"FusedPallasBackend integrates RK4 only, got {method!r}")
         ts_fine, dt, sub = self._grid(ts, steps_per_interval)
         uh = self._u_half(getattr(state.field, "drive", None), ts_fine)
-        traj = self._solve(state, y0[None, :], uh, dt, 1, gradient)
+        traj = self._solve(state, y0[None, :], uh, dt, 1, gradient,
+                           precision)
         return traj[::sub, 0, :]
 
     def rollout_batch_local(self, state: ExecState, y0s, ts, *,
                             drive_family: Optional[Callable] = None,
                             drive_params: Optional[jax.Array] = None,
                             method: str = "rk4", steps_per_interval: int = 1,
-                            gradient: str = "fused_vjp") -> jax.Array:
+                            gradient: str = "fused_vjp",
+                            precision: Optional[str] = None) -> jax.Array:
         """Per-device fleet solve: tile the local batch across the Pallas
         grid (weights broadcast to every cell, per-twin drives sampled on
-        the half-step grid per tile)."""
+        the half-step grid per tile).  ``precision`` overrides the
+        backend's mixed-precision policy per call (it rides through
+        ``rollout_batch(mesh=...)``'s ``solver_kw``, so sharded fleets
+        serve reduced precision too)."""
         if method != "rk4":
             raise ValueError(
                 f"FusedPallasBackend integrates RK4 only, got {method!r}")
@@ -382,7 +406,7 @@ class FusedPallasBackend(BaseBackend):
         # one padded tile.
         from repro.kernels.fused_ode_mlp import pad_fleet_to_tile
         y0s, uh, bt, B = pad_fleet_to_tile(y0s, uh, self.batch_tile)
-        traj = self._solve(state, y0s, uh, dt, bt, gradient)
+        traj = self._solve(state, y0s, uh, dt, bt, gradient, precision)
         return jnp.transpose(traj[::sub, :B], (1, 0, 2))
 
 

@@ -23,12 +23,26 @@ Block layout per (i, j) cell:
   out      (C, bt, D)         chunk j's slab of the trajectory
   carry    (bt, D)            VMEM scratch, persistent across the grid
 
-VMEM per cell ~= weights + C*bt*D*4 (out slab) + (2C+1)*Du*4 (drive
-slab) + carry + activations; the horizon T no longer has to fit — only
-one chunk does.  ``time_chunk=None`` auto-picks the largest C within
-``vmem_budget_bytes``, so weights stay resident while arbitrarily long
-horizons stream chunk-by-chunk through HBM.  A ``ValueError`` is now
-raised only when the weights plus a single step genuinely cannot fit.
+VMEM per cell ~= weights + C*bt*D (out slab) + (2C+1)*Du (drive slab)
++ carry + activations, each term sized by its policy dtype; the horizon
+T no longer has to fit — only one chunk does.  ``time_chunk=None``
+auto-picks the largest C within ``vmem_budget_bytes``, so weights stay
+resident while arbitrarily long horizons stream chunk-by-chunk through
+HBM.  A ``ValueError`` is now raised only when the weights plus a
+single step genuinely cannot fit.
+
+Mixed precision: the ``precision`` policy decides the byte width of
+everything that streams through VMEM/HBM.  ``"bf16_f32acc"`` (the TPU
+default) stores weights, drive slabs and trajectory slabs in bfloat16
+— halving HBM traffic and roughly doubling the resident time chunk —
+while every ``jnp.dot`` accumulates at float32 on the MXU and the RK4
+state carry stays float32 in VMEM scratch.  ``"bf16"`` additionally
+carries the state at bfloat16 (the fully reduced substrate, mirroring
+the analogue crossbar's precision tolerance); ``"f32"`` is the exact
+float32 path.  In the bf16 policies the carried state is rounded to
+the storage dtype once per chunk boundary, so the chunk-start states
+the backward pass replays from (the stored trajectory rows) are
+bit-identical to the states the forward actually continued from.
 
 This module is the forward; :mod:`repro.kernels.fused_ode_mlp_bwd`
 walks the same grid in reverse (chunk-boundary checkpoints = trajectory
@@ -38,6 +52,7 @@ the same substrate.
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple, Sequence
 
 import jax
@@ -49,12 +64,74 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_VMEM_BUDGET = 14 * 1024 * 1024   # ~16 MB/core minus headroom
 
+#: Supported precision policies (see the module docstring's error model).
+PRECISIONS = ("f32", "bf16", "bf16_f32acc")
+
 
 def _default_interpret() -> bool:
     """Compiled lowering on TPU, interpreter everywhere else — so CPU/GPU
     hosts validate the kernel while TPU runs never silently benchmark the
-    interpreter."""
+    interpreter.  ``REPRO_FORCE_INTERPRET=1`` (or ``0``) pins the mode
+    regardless of the detected accelerator, so CI and local debugging can
+    force the interpreter (or a compiled lowering) without monkeypatching;
+    an empty/unset variable keeps the auto-detect."""
+    env = os.environ.get("REPRO_FORCE_INTERPRET", "").strip().lower()
+    if env:
+        truthy = {"1", "true", "yes", "on"}
+        falsy = {"0", "false", "no", "off"}
+        if env not in truthy | falsy:
+            raise ValueError(
+                f"REPRO_FORCE_INTERPRET={env!r} not understood; use one "
+                f"of {sorted(truthy)} / {sorted(falsy)} (or unset it for "
+                f"accelerator auto-detect)")
+        return env in truthy
     return jax.default_backend() != "tpu"
+
+
+def default_precision() -> str:
+    """``"bf16_f32acc"`` on TPU (MXU-native bf16, f32 accumulation),
+    ``"f32"`` everywhere else — CPU/GPU hosts validate exact numerics."""
+    return "bf16_f32acc" if jax.default_backend() == "tpu" else "f32"
+
+
+def resolve_precision(precision: str | None) -> str:
+    """Accept a policy name or None (auto: :func:`default_precision`)."""
+    if precision is None:
+        return default_precision()
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; have {list(PRECISIONS)}")
+    return precision
+
+
+def precision_dtypes(precision: str):
+    """``(store, compute, acc, carry)`` dtypes of a resolved policy.
+
+    store   — weights/biases, drive slabs, trajectory slabs (HBM + the
+              VMEM-resident operand blocks);
+    compute — matmul operand dtype fed to the MXU;
+    acc     — ``preferred_element_type`` of every in-kernel ``jnp.dot``;
+    carry   — the RK4 integration state in VMEM scratch.
+    """
+    if precision == "f32":
+        return (jnp.float32,) * 4
+    if precision == "bf16":
+        return (jnp.bfloat16,) * 4
+    if precision == "bf16_f32acc":
+        return jnp.bfloat16, jnp.bfloat16, jnp.float32, jnp.float32
+    raise ValueError(
+        f"unknown precision {precision!r}; have {list(PRECISIONS)}")
+
+
+def _require_float(name: str, x: jax.Array, precision: str) -> None:
+    """Clear dtype gate: a non-floating input would otherwise reach the
+    kernel and die with an opaque Mosaic lowering error."""
+    if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+        raise ValueError(
+            f"fused_node_rollout: {name} has non-floating dtype "
+            f"{jnp.asarray(x).dtype}; the precision={precision!r} policy "
+            f"stores {jnp.dtype(precision_dtypes(precision)[0]).name} — "
+            f"cast {name} to a floating dtype first")
 
 
 class ChunkPlan(NamedTuple):
@@ -64,35 +141,79 @@ class ChunkPlan(NamedTuple):
     vmem_bytes: int          # estimated per-cell VMEM footprint
 
 
+def _rk4_activation_bytes(bt: int, D: int, du: int,
+                          weights: Sequence[jax.Array],
+                          acc_itemsize: int) -> int:
+    """VMEM slack for the live RK4 temporaries of one step.
+
+    Derived from what one ``make_rk4_step`` invocation actually keeps
+    alive at its peak, all at the accumulation dtype:
+
+      6 · (bt, D)          y, k1..k4 and the perturbed state y + c·k_i
+                           (the final combination holds all four k's plus
+                           y at once — six state-width buffers)
+      (bt, in_l + out_l)   the widest adjacent (input, output) activation
+                           pair of the MLP — at any moment one layer's
+                           input and its dot output coexist; the first
+                           layer's input width already includes du + D
+                           through w_0.shape[0]
+
+    i.e. ``act = acc_itemsize · bt · (6·D + max_l(in_l + out_l))``.  This
+    replaces the old ``4 · bt · max(du + D, max width) · 6`` magic
+    constant, which over-counted narrow-state MLPs ~3x and under-counted
+    none of the tested shapes.
+    """
+    del du  # already folded into w_0.shape[0] by the caller's MLP sizes
+    widest_pair = max(w.shape[0] + w.shape[1] for w in weights)
+    return acc_itemsize * bt * (6 * D + widest_pair)
+
+
 def plan_time_chunk(T: int, bt: int, D: int, du: int, per_tile_drive: bool,
                     weights: Sequence[jax.Array], biases: Sequence[jax.Array],
                     vmem_budget_bytes: int,
-                    time_chunk: int | None = None) -> ChunkPlan:
+                    time_chunk: int | None = None,
+                    precision: str = "f32") -> ChunkPlan:
     """Pick the largest time chunk C whose per-cell working set fits the
     VMEM budget (or honour an explicit ``time_chunk`` override).
 
-    Per-cell bytes: weights + biases (resident), the (C, bt, D) output
-    slab, the (2C+1, u_width) drive slab, the (bt, D) carry, and a slack
-    term for RK4 activations (k1..k4, the widest matmul operand).
+    Per-cell bytes, each term sized by the ``precision`` policy's dtypes
+    (``sb``/``ab``/``cb`` = storage/accumulation/carry itemsize):
+
+      sb · (Σ w.size + Σ b.size)     weights + biases (resident)
+      sb · C·bt·D                    the (C, bt, D) output slab
+      sb · (2C+1)·u_width            the drive slab (u_width = Du, or
+                                     bt·Du per-twin)
+      cb · bt·D                      the carry scratch
+      ab · bt · (6·D + max(in+out))  RK4 activation slack (see
+                                     :func:`_rk4_activation_bytes`)
+
+    bf16 storage halves every per-step term, so the planned chunk is
+    ~2x the f32 one at a fixed budget (the weights-must-fit threshold
+    moves by the same factor).
     """
+    store, _, acc, carry = precision_dtypes(resolve_precision(precision))
+    sb = jnp.dtype(store).itemsize
+    ab = jnp.dtype(acc).itemsize
+    cb = jnp.dtype(carry).itemsize
     u_width = max(du, 1) * (bt if per_tile_drive else 1)
-    wbytes = sum(4 * w.size for w in weights) + sum(4 * b.size for b in biases)
-    act = 4 * bt * max(du + D, max(w.shape[1] for w in weights)) * 6
-    fixed = wbytes + act + 4 * bt * D            # + carry
-    per_step = 4 * bt * D + 8 * u_width          # out row + two u rows
+    wbytes = (sum(sb * w.size for w in weights)
+              + sum(sb * b.size for b in biases))
+    act = _rk4_activation_bytes(bt, D, du, weights, ab)
+    fixed = wbytes + act + cb * bt * D           # + carry
+    per_step = sb * bt * D + 2 * sb * u_width    # out row + two u rows
     if time_chunk is not None:
         C = max(1, min(int(time_chunk), T))
     else:
-        avail = vmem_budget_bytes - fixed - 4 * u_width   # the +1 u row
+        avail = vmem_budget_bytes - fixed - sb * u_width   # the +1 u row
         C = int(avail // per_step)
         if C < 1:
             raise ValueError(
                 f"fused kernel weights + one RK4 step need "
-                f"~{(fixed + per_step + 4 * u_width) / 2 ** 20:.1f} MiB VMEM "
+                f"~{(fixed + per_step + sb * u_width) / 2 ** 20:.1f} MiB VMEM "
                 f"(budget {vmem_budget_bytes / 2 ** 20:.1f}); shrink "
                 f"batch_tile or the MLP")
         C = min(C, T)
-    need = fixed + 4 * C * bt * D + 4 * (2 * C + 1) * u_width
+    need = fixed + sb * C * bt * D + sb * (2 * C + 1) * u_width
     if need > vmem_budget_bytes:
         # only reachable with an explicit (oversized) time_chunk — fail
         # with a clear message instead of an opaque Mosaic allocation
@@ -105,28 +226,36 @@ def plan_time_chunk(T: int, bt: int, D: int, du: int, per_tile_drive: bool,
 
 
 def make_rk4_step(num_layers: int, dt: float, drive_dim: int, bt: int,
-                  per_tile_drive: bool):
+                  per_tile_drive: bool, precision: str = "f32"):
     """One in-kernel RK4 step ``step(y, u0, um, u1, ws, bs) -> y_next``.
 
     SHARED between the forward kernel and the backward kernel's
     checkpoint replay + step VJP (:mod:`repro.kernels.fused_ode_mlp_bwd`)
     — the recompute must be bit-identical to the forward, so there is
-    exactly one definition of the step."""
+    exactly one definition of the step.
+
+    Under a bf16 ``precision`` policy the matmul operands are cast to
+    the compute dtype (MXU-native bf16) and every ``jnp.dot`` names the
+    policy's accumulation dtype via ``preferred_element_type``; the
+    surrounding RK4 arithmetic runs at the carry dtype (f32 for
+    ``"bf16_f32acc"``), so only the MXU operands are reduced."""
+    _, compute, acc, carry = precision_dtypes(resolve_precision(precision))
 
     def mlp(x, ws, bs):
         for i in range(num_layers):
-            x = jnp.dot(x, ws[i], preferred_element_type=jnp.float32)
-            x = x + bs[i][None, :]
+            x = jnp.dot(x.astype(compute), ws[i],
+                        preferred_element_type=acc)
+            x = x + bs[i][None, :].astype(acc)
             if i < num_layers - 1:
                 x = jnp.maximum(x, 0.0)
-        return x
+        return x.astype(carry)
 
     def f(u_row, y, ws, bs):
         if drive_dim > 0:
             # u_row: (drive_dim,) broadcast, or (bt, drive_dim) per-twin
             u = (u_row if per_tile_drive
                  else jnp.broadcast_to(u_row, (bt, drive_dim)))
-            inp = jnp.concatenate([u, y], axis=-1)
+            inp = jnp.concatenate([u.astype(carry), y], axis=-1)
         else:
             inp = y
         return mlp(inp, ws, bs)
@@ -164,8 +293,11 @@ def pad_fleet_to_tile(y0s: jax.Array, uh: jax.Array, batch_tile: int):
 
 
 def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
-                 bt: int, per_tile_drive: bool = False):
-    step = make_rk4_step(num_layers, dt, drive_dim, bt, per_tile_drive)
+                 bt: int, per_tile_drive: bool = False,
+                 precision: str = "f32"):
+    store, _, _, carry = precision_dtypes(resolve_precision(precision))
+    step = make_rk4_step(num_layers, dt, drive_dim, bt, per_tile_drive,
+                         precision)
 
     def kernel(*refs):
         y0_ref = refs[0]
@@ -175,10 +307,12 @@ def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
         out_ref = refs[2 + 2 * num_layers]
         carry_ref = refs[3 + 2 * num_layers]
 
-        # First chunk of a batch tile: seed the carried state from y0.
+        # First chunk of a batch tile: seed the carried state from y0,
+        # rounded through the storage dtype so the seed equals trajectory
+        # row 0 exactly (what the backward pass replays chunk 0 from).
         @pl.when(pl.program_id(1) == 0)
         def _():
-            carry_ref[...] = y0_ref[...]
+            carry_ref[...] = y0_ref[...].astype(store).astype(carry)
 
         # Load weights ONCE per cell — they stay register/VMEM-resident
         # for the whole chunk (the crossbar analogy).
@@ -188,11 +322,15 @@ def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
         def body(t, y):
             y = step(y, u_ref[0, 2 * t], u_ref[0, 2 * t + 1],
                      u_ref[0, 2 * t + 2], ws, bs)
-            out_ref[t] = y
+            out_ref[t] = y.astype(store)
             return y
 
         y = lax.fori_loop(0, C, body, carry_ref[...])
-        carry_ref[...] = y
+        # Round the chunk-boundary carry through the storage dtype: the
+        # next chunk then continues from the exact value the trajectory
+        # row stores, keeping forward and checkpoint-replay bit-identical
+        # under reduced-precision storage (no-op for f32).
+        carry_ref[...] = y.astype(store).astype(carry)
 
     return kernel
 
@@ -211,7 +349,7 @@ def _chunk_drive(u: jax.Array, C: int, num_chunks: int) -> jax.Array:
 
 
 def fused_node_rollout(
-    y0: jax.Array,                    # (B, D) f32
+    y0: jax.Array,                    # (B, D) float
     u_half: jax.Array,                # (2T+1, Du) shared or (B, 2T+1, Du)
     weights: Sequence[jax.Array],
     biases: Sequence[jax.Array],
@@ -221,8 +359,10 @@ def fused_node_rollout(
     time_chunk: int | None = None,
     interpret: bool | None = None,
     vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
+    precision: str | None = None,
 ) -> jax.Array:
-    """Full-trajectory RK4 solve; returns (T+1, B, D).  See module doc.
+    """Full-trajectory RK4 solve; returns (T+1, B, D) at the policy's
+    storage dtype.  See module doc.
 
     ``u_half`` is the drive sampled at RK4 half-steps: (2T+1, Du) shared
     by the whole batch, or (B, 2T+1, Du) with one stimulus per batch
@@ -230,10 +370,26 @@ def fused_node_rollout(
     bounds how many RK4 steps stay VMEM-resident per grid cell (None =
     auto-pick the largest chunk fitting ``vmem_budget_bytes``), so the
     horizon T is unbounded.  ``interpret=None`` auto-detects: compiled on
-    TPU, interpreter elsewhere.
+    TPU, interpreter elsewhere (``REPRO_FORCE_INTERPRET`` overrides).
+    ``precision`` picks the mixed-precision policy ("f32" | "bf16" |
+    "bf16_f32acc"; ``None`` = auto — bf16_f32acc on TPU, f32 elsewhere):
+    floating inputs are cast to the policy dtypes here, non-floating
+    inputs raise a named ``ValueError`` instead of an opaque Mosaic
+    lowering error.
     """
     if interpret is None:
         interpret = _default_interpret()
+    precision = resolve_precision(precision)
+    store, _, _, carry = precision_dtypes(precision)
+    _require_float("y0", y0, precision)
+    _require_float("u_half", u_half, precision)
+    for li, (w, b) in enumerate(zip(weights, biases)):
+        _require_float(f"weights[{li}]", w, precision)
+        _require_float(f"biases[{li}]", b, precision)
+    weights = [w.astype(store) for w in weights]
+    biases = [b.astype(store) for b in biases]
+    u_half = u_half.astype(store)
+    y0 = y0.astype(jnp.float32)       # the seed block; rounded in-kernel
     B, D = y0.shape
     per_tile_drive = u_half.ndim == 3
     if per_tile_drive and u_half.shape[0] != B:
@@ -249,10 +405,12 @@ def fused_node_rollout(
         raise ValueError(f"batch {B} not divisible by tile {bt}")
 
     plan = plan_time_chunk(T, bt, D, du, per_tile_drive, weights, biases,
-                           vmem_budget_bytes, time_chunk)
+                           vmem_budget_bytes, time_chunk,
+                           precision=precision)
     C, NC = plan.time_chunk, plan.num_chunks
 
-    kernel = _make_kernel(L, C, float(dt), du, bt, per_tile_drive)
+    kernel = _make_kernel(L, C, float(dt), du, bt, per_tile_drive,
+                          precision)
 
     grid = (B // bt, NC)                 # time minor: chunks run in order
     if per_tile_drive:
@@ -262,7 +420,7 @@ def fused_node_rollout(
         u_spec = pl.BlockSpec((1, 2 * C + 1, bt, du),
                               lambda i, j: (j, 0, i, 0))
     else:
-        u_tm = u_half if du > 0 else jnp.zeros((2 * T + 1, 1), y0.dtype)
+        u_tm = u_half if du > 0 else jnp.zeros((2 * T + 1, 1), store)
         u_in = _chunk_drive(u_tm, C, NC)                 # (NC, 2C+1, du')
         u_spec = pl.BlockSpec((1, 2 * C + 1, max(du, 1)),
                               lambda i, j: (j, 0, 0))
@@ -281,10 +439,10 @@ def fused_node_rollout(
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((NC * C, B, D), y0.dtype),
-        scratch_shapes=[pltpu.VMEM((bt, D), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((NC * C, B, D), store),
+        scratch_shapes=[pltpu.VMEM((bt, D), carry)],
         interpret=interpret,
     )(y0, u_in, *weights, *biases)
     # Row k of ``steps`` is y after step k; prepend y0, drop the padded
     # tail of a partial final chunk.
-    return jnp.concatenate([y0[None], steps[:T]], axis=0)
+    return jnp.concatenate([y0[None].astype(store), steps[:T]], axis=0)

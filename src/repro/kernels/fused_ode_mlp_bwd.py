@@ -43,6 +43,14 @@ beyond what serving already returns.
 Gradients are taken w.r.t. ``y0``, ``weights`` and ``biases``; the drive
 ``u_half`` is treated as data (zero cotangent) — it is a sampled input
 signal, not a parameter.
+
+Mixed precision mirrors the forward's ``precision`` policy: the
+boundary states, drive slabs, cotangent slabs and weight operands
+stream at the storage dtype (bf16 under the bf16 policies), the replay
+and the adjoint run at the carry dtype, and the dW/db gradient
+accumulators — both the in-loop carry and the constant-index-map VMEM
+output blocks — ALWAYS stay float32, so reduced storage never costs
+accumulation accuracy across T steps.
 """
 from __future__ import annotations
 
@@ -57,7 +65,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.fused_ode_mlp import (DEFAULT_VMEM_BUDGET, ChunkPlan,
                                          _chunk_drive, _default_interpret,
-                                         fused_node_rollout, make_rk4_step)
+                                         _rk4_activation_bytes,
+                                         fused_node_rollout, make_rk4_step,
+                                         precision_dtypes, resolve_precision)
 
 
 def plan_bwd_time_chunk(T: int, bt: int, D: int, du: int,
@@ -65,30 +75,41 @@ def plan_bwd_time_chunk(T: int, bt: int, D: int, du: int,
                         weights: Sequence[jax.Array],
                         biases: Sequence[jax.Array],
                         vmem_budget_bytes: int,
-                        time_chunk: int | None = None) -> ChunkPlan:
+                        time_chunk: int | None = None,
+                        precision: str = "f32") -> ChunkPlan:
     """Backward-pass chunk planner: same contract as ``plan_time_chunk``
-    but for the heavier reverse working set (weights appear three times —
-    operands, gradient-accumulator refs, and the fori_loop gradient
-    carry — and every chunk keeps TWO (C, bt, D) slabs resident: the
-    replayed states and the cotangents)."""
+    but for the heavier reverse working set — weights appear three times
+    (operands at the storage dtype, plus the gradient-accumulator refs
+    and the fori_loop gradient carry, both ALWAYS f32), every chunk
+    keeps TWO (C, bt, D) slabs resident (the replayed states at the
+    carry dtype and the cotangents at the storage dtype), and the step
+    VJP's activation slack is twice the forward's (primal residuals +
+    cotangents live together)."""
+    store, _, acc, carry = precision_dtypes(resolve_precision(precision))
+    sb = jnp.dtype(store).itemsize
+    ab = jnp.dtype(acc).itemsize
+    cb = jnp.dtype(carry).itemsize
     u_width = max(du, 1) * (bt if per_tile_drive else 1)
-    wbytes = sum(4 * w.size for w in weights) + sum(4 * b.size for b in biases)
-    act = 4 * bt * max(du + D, max(w.shape[1] for w in weights)) * 12
-    fixed = 3 * wbytes + act + 3 * 4 * bt * D   # + boundary, adjoint, dy0
-    per_step = 8 * bt * D + 8 * u_width         # ys row + g row + two u rows
+    wsize = sum(w.size for w in weights) + sum(b.size for b in biases)
+    # operands at storage width; dw refs + the dw loop carry stay f32
+    wbytes = sb * wsize + 2 * 4 * wsize
+    act = 2 * _rk4_activation_bytes(bt, D, du, weights, ab)
+    # + boundary row (store), adjoint carry (f32), dy0 block (f32)
+    fixed = wbytes + act + sb * bt * D + 2 * 4 * bt * D
+    per_step = (cb + sb) * bt * D + 2 * sb * u_width  # ys + g + two u rows
     if time_chunk is not None:
         C = max(1, min(int(time_chunk), T))
     else:
-        avail = vmem_budget_bytes - fixed - 4 * u_width
+        avail = vmem_budget_bytes - fixed - sb * u_width
         C = int(avail // per_step)
         if C < 1:
             raise ValueError(
                 f"fused backward: weights + one reverse RK4 step need "
-                f"~{(fixed + per_step + 4 * u_width) / 2 ** 20:.1f} MiB VMEM "
+                f"~{(fixed + per_step + sb * u_width) / 2 ** 20:.1f} MiB VMEM "
                 f"(budget {vmem_budget_bytes / 2 ** 20:.1f}); shrink "
                 f"batch_tile or the MLP")
         C = min(C, T)
-    need = fixed + 2 * 4 * C * bt * D + 4 * (2 * C + 1) * u_width
+    need = fixed + (cb + sb) * C * bt * D + sb * (2 * C + 1) * u_width
     if need > vmem_budget_bytes:
         raise ValueError(
             f"backward time_chunk={C} needs ~{need / 2 ** 20:.1f} MiB VMEM "
@@ -98,12 +119,14 @@ def plan_bwd_time_chunk(T: int, bt: int, D: int, du: int,
 
 
 def _make_bwd_kernel(num_layers: int, C: int, dt: float,
-                     drive_dim: int, bt: int, per_tile_drive: bool):
+                     drive_dim: int, bt: int, per_tile_drive: bool,
+                     precision: str = "f32"):
     L = num_layers
+    _, _, _, carry_dt = precision_dtypes(resolve_precision(precision))
     # THE step of the forward kernel — shared so the checkpoint replay
     # recomputes bit-identical states and the VJP transposes the exact
-    # update the forward applied
-    rk4 = make_rk4_step(L, dt, drive_dim, bt, per_tile_drive)
+    # update the forward applied (same precision policy included)
+    rk4 = make_rk4_step(L, dt, drive_dim, bt, per_tile_drive, precision)
 
     def kernel(*refs):
         yb_ref, u_ref, g_ref = refs[0], refs[1], refs[2]
@@ -141,11 +164,15 @@ def _make_bwd_kernel(num_layers: int, C: int, dt: float,
             return rk4(y, u_ref[0, 2 * t], u_ref[0, 2 * t + 1],
                        u_ref[0, 2 * t + 2], ws, bs)
 
-        lax.fori_loop(0, C, fwd_body, yb_ref[0])
+        lax.fori_loop(0, C, fwd_body, yb_ref[0].astype(carry_dt))
 
         # -- reverse sweep: pull the cotangent back through each step ---
-        zeros_w = [jnp.zeros_like(w) for w in ws]
-        zeros_b = [jnp.zeros_like(b) for b in bs]
+        # Per-step weight cotangents come back at the storage dtype (the
+        # VJP transposes the bf16 operands); the ACCUMULATORS stay f32 —
+        # both the fori_loop carry here and the dw_refs output blocks —
+        # so T steps of bf16-rounded increments sum without drift.
+        zeros_w = [jnp.zeros(w.shape, jnp.float32) for w in ws]
+        zeros_b = [jnp.zeros(b.shape, jnp.float32) for b in bs]
 
         def bwd_body(r, carry):
             a, dws, dbs = carry
@@ -154,19 +181,24 @@ def _make_bwd_kernel(num_layers: int, C: int, dt: float,
             u0 = u_ref[0, 2 * t]
             um = u_ref[0, 2 * t + 1]
             u1 = u_ref[0, 2 * t + 2]
-            a = a + g_ref[t]          # cotangent injected at this output row
+            # cotangent injected at this output row (adjoint stays at the
+            # carry dtype — f32 unless the policy is pure bf16)
+            a = a + g_ref[t].astype(a.dtype)
             _, vjp = jax.vjp(
                 lambda y_, ws_, bs_: rk4(y_, u0, um, u1, ws_, bs_),
                 y_t, ws, bs)
             a, dws_t, dbs_t = vjp(a)
-            dws = [acc + d for acc, d in zip(dws, dws_t)]
-            dbs = [acc + d for acc, d in zip(dbs, dbs_t)]
+            dws = [acc + d.astype(jnp.float32)
+                   for acc, d in zip(dws, dws_t)]
+            dbs = [acc + d.astype(jnp.float32)
+                   for acc, d in zip(dbs, dbs_t)]
             return a, dws, dbs
 
         a, dws, dbs = lax.fori_loop(0, C, bwd_body,
                                     (a_ref[...], zeros_w, zeros_b))
         a_ref[...] = a
-        dy0_ref[...] = a              # chunk 0 (the last j) leaves dL/dy0
+        # chunk 0 (the last j) leaves dL/dy0
+        dy0_ref[...] = a.astype(jnp.float32)
         for ref, v in zip(dw_refs, dws):
             ref[...] += v
         for ref, v in zip(db_refs, dbs):
@@ -186,16 +218,22 @@ def fused_node_rollout_bwd(
     batch_tile: int,
     time_chunk: int,                  # the C that produced y_bounds
     interpret: bool | None = None,
+    precision: str = "f32",
 ) -> tuple:
-    """Run the reverse-time kernel; returns ``(dy0, dweights, dbiases)``.
+    """Run the reverse-time kernel; returns ``(dy0, dweights, dbiases)``
+    — always f32 (the gradient accumulators never leave full precision).
 
     ``y_bounds[jj]`` must be the state at the START of chunk jj (forward
     trajectory row ``jj*C``); ``g_steps`` are the cotangents of the
     forward's per-step outputs (trajectory rows 1..T — the y0 row's
-    cotangent is added by the caller).
+    cotangent is added by the caller).  ``y_bounds``, ``u_half``,
+    ``weights``/``biases`` and ``g_steps`` are expected at the policy's
+    storage dtype (the caller casts).
     """
     if interpret is None:
         interpret = _default_interpret()
+    precision = resolve_precision(precision)
+    store, _, _, carry_dt = precision_dtypes(precision)
     NC, B, D = y_bounds.shape
     C = int(time_chunk)
     per_tile_drive = u_half.ndim == 3
@@ -214,7 +252,8 @@ def fused_node_rollout_bwd(
     if pad:
         g_steps = jnp.pad(g_steps, ((0, pad), (0, 0), (0, 0)))
 
-    kernel = _make_bwd_kernel(L, C, float(dt), du, bt, per_tile_drive)
+    kernel = _make_bwd_kernel(L, C, float(dt), du, bt, per_tile_drive,
+                              precision)
 
     grid = (B // bt, NC)
     if per_tile_drive:
@@ -223,8 +262,7 @@ def fused_node_rollout_bwd(
         u_spec = pl.BlockSpec((1, 2 * C + 1, bt, du),
                               lambda i, j: (NC - 1 - j, 0, i, 0))
     else:
-        u_tm = u_half if du > 0 else jnp.zeros((2 * T + 1, 1),
-                                               y_bounds.dtype)
+        u_tm = u_half if du > 0 else jnp.zeros((2 * T + 1, 1), store)
         u_in = _chunk_drive(u_tm, C, NC)                 # (NC, 2C+1, du')
         u_spec = pl.BlockSpec((1, 2 * C + 1, max(du, 1)),
                               lambda i, j: (NC - 1 - j, 0, 0))
@@ -255,8 +293,8 @@ def fused_node_rollout_bwd(
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shapes,
-        scratch_shapes=[pltpu.VMEM((bt, D), jnp.float32),
-                        pltpu.VMEM((C, bt, D), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bt, D), carry_dt),     # adjoint
+                        pltpu.VMEM((C, bt, D), carry_dt)], # replayed ys
         interpret=interpret,
     )(y_bounds, u_in, g_steps, *weights, *biases)
     dy0, dws, dbs = outs[0], list(outs[1:1 + L]), list(outs[1 + L:])
@@ -267,36 +305,89 @@ def fused_node_rollout_bwd(
 # The differentiable rollout: custom VJP over (y0, u_half, weights, biases)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
 def fused_node_rollout_vjp(y0, u_half, weights, biases, dt,
                            batch_tile=64, time_chunk=None, interpret=None,
-                           vmem_budget_bytes=DEFAULT_VMEM_BUDGET):
+                           vmem_budget_bytes=DEFAULT_VMEM_BUDGET,
+                           precision=None):
     """:func:`fused_node_rollout` with gradients that never leave the
     fused substrate: forward AND backward are whole-chunk Pallas kernels,
     weights pinned in VMEM both ways.  Differentiable in ``y0``,
-    ``weights`` and ``biases``; the drive gets a zero cotangent."""
+    ``weights`` and ``biases``; the drive gets a zero cotangent.
+
+    ``precision`` is a nondiff static: the forward casts the operands to
+    the policy's storage dtype internally, and the backward returns
+    cotangents at the PRIMAL dtypes — so f32 params in, f32 grads out,
+    with the f32 in-kernel accumulators never rounded on the way back.
+
+    The primal body uses the same shared (backward-planned) time chunk
+    as the VJP pair, so a plain call and the forward inside
+    ``jax.grad`` are bitwise identical even under the bf16 policies
+    (where chunk boundaries are rounding points).
+    """
     return fused_node_rollout(y0, u_half, weights, biases, dt,
-                              batch_tile=batch_tile, time_chunk=time_chunk,
+                              batch_tile=batch_tile,
+                              time_chunk=_shared_chunk(
+                                  y0, u_half, weights, biases, batch_tile,
+                                  time_chunk, vmem_budget_bytes, precision),
                               interpret=interpret,
-                              vmem_budget_bytes=vmem_budget_bytes)
+                              vmem_budget_bytes=vmem_budget_bytes,
+                              precision=precision)
+
+
+def _shared_chunk(y0, u_half, weights, biases, batch_tile, time_chunk,
+                  vmem_budget_bytes, precision):
+    """The time chunk BOTH passes of the VJP use: the backward planner's
+    (heavier) auto-pick, or the explicit override.
+
+    Sharing one C matters under the bf16 policies: the forward rounds
+    its VMEM carry through the storage dtype exactly at chunk
+    boundaries, so the chunk-start rows the backward replays from are
+    bit-identical to the states the forward continued with ONLY when
+    the two passes agree on where the boundaries are.  (Under f32 the
+    carry is never rounded and the chunking is numerically free.)"""
+    if time_chunk is not None:
+        return time_chunk
+    B, D = y0.shape
+    T = (u_half.shape[1 if u_half.ndim == 3 else 0] - 1) // 2
+    du = u_half.shape[-1]
+    per_tile = u_half.ndim == 3 and du > 0
+    plan = plan_bwd_time_chunk(T, min(batch_tile, B), D, du, per_tile,
+                               weights, biases, vmem_budget_bytes, None,
+                               precision=resolve_precision(precision))
+    return plan.time_chunk
 
 
 def _rollout_fwd(y0, u_half, weights, biases, dt, batch_tile, time_chunk,
-                 interpret, vmem_budget_bytes):
+                 interpret, vmem_budget_bytes, precision):
     traj = fused_node_rollout(y0, u_half, weights, biases, dt,
-                              batch_tile=batch_tile, time_chunk=time_chunk,
+                              batch_tile=batch_tile,
+                              time_chunk=_shared_chunk(
+                                  y0, u_half, weights, biases, batch_tile,
+                                  time_chunk, vmem_budget_bytes, precision),
                               interpret=interpret,
-                              vmem_budget_bytes=vmem_budget_bytes)
+                              vmem_budget_bytes=vmem_budget_bytes,
+                              precision=precision)
     # The trajectory IS the residual: every chunk-boundary state the
-    # backward replays from is already a row of the primal output, so
-    # checkpointing costs zero extra memory traffic.
-    return traj, (u_half, weights, biases, traj)
+    # backward replays from is already a row of the primal output (at
+    # the storage dtype — the forward rounds its chunk-boundary carry to
+    # match, so the replay is still bit-identical), and checkpointing
+    # costs zero extra memory traffic.  The empty y0-dtype marker lets
+    # the backward return dL/dy0 at the primal dtype.
+    return traj, (u_half, weights, biases, traj,
+                  jnp.zeros((0,), y0.dtype))
 
 
 def _rollout_bwd(dt, batch_tile, time_chunk, interpret, vmem_budget_bytes,
-                 res, g):
-    u_half, weights, biases, traj = res
-    u_orig = u_half
+                 precision, res, g):
+    u_half, weights, biases, traj, y0_marker = res
+    precision = resolve_precision(precision)
+    store, _, _, _ = precision_dtypes(precision)
+    u_orig, w_orig, b_orig = u_half, weights, biases
+    # the kernel consumes the storage-dtype operands the forward ran on
+    weights = [w.astype(store) for w in weights]
+    biases = [b.astype(store) for b in biases]
+    u_half = u_half.astype(store)
     B, D = traj.shape[1], traj.shape[2]
     per_tile_drive = u_half.ndim == 3
     if per_tile_drive and u_half.shape[-1] == 0:
@@ -305,15 +396,23 @@ def _rollout_bwd(dt, batch_tile, time_chunk, interpret, vmem_budget_bytes,
     du = u_half.shape[-1]
     bt = min(batch_tile, B)
     plan = plan_bwd_time_chunk(T, bt, D, du, per_tile_drive, weights,
-                               biases, vmem_budget_bytes, time_chunk)
+                               biases, vmem_budget_bytes, time_chunk,
+                               precision=precision)
     C, NC = plan.time_chunk, plan.num_chunks
     y_bounds = traj[jnp.arange(NC) * C]              # chunk-start states
-    g = g.astype(jnp.float32)
+    # the y0 row's cotangent never enters the kernel — keep it f32; only
+    # the per-step slab streams at storage width
+    g0 = g[0].astype(jnp.float32)
     dy0, dws, dbs = fused_node_rollout_bwd(
-        y_bounds, u_half, weights, biases, g[1:], dt,
-        batch_tile=batch_tile, time_chunk=C, interpret=interpret)
+        y_bounds, u_half, weights, biases, g[1:].astype(store), dt,
+        batch_tile=batch_tile, time_chunk=C, interpret=interpret,
+        precision=precision)
+    dy0 = (dy0 + g0).astype(y0_marker.dtype)
+    # cotangents must match the PRIMAL avals (f32 params stay f32)
+    dws = [d.astype(w.dtype) for d, w in zip(dws, w_orig)]
+    dbs = [d.astype(b.dtype) for d, b in zip(dbs, b_orig)]
     # drive is data, not a parameter — zero cotangent (see module doc)
-    return dy0 + g[0], jnp.zeros_like(u_orig), dws, dbs
+    return dy0, jnp.zeros_like(u_orig), dws, dbs
 
 
 fused_node_rollout_vjp.defvjp(_rollout_fwd, _rollout_bwd)

@@ -22,7 +22,10 @@ from repro.core.losses import BIG, _pairwise_dist
 from repro.kernels import ref
 from repro.kernels.crossbar_vmm import crossbar_matmul as _crossbar_pallas
 from repro.kernels.fused_ode_mlp import (DEFAULT_VMEM_BUDGET,
-                                         fused_node_rollout as _fused_pallas)
+                                         _require_float,
+                                         fused_node_rollout as _fused_pallas,
+                                         precision_dtypes,
+                                         resolve_precision)
 from repro.kernels.fused_ode_mlp_bwd import fused_node_rollout_vjp
 from repro.kernels.softdtw import (softdtw_bwd_pallas as _softdtw_bwd_pallas,
                                    softdtw_pallas as _softdtw_pallas)
@@ -39,6 +42,7 @@ def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
                        interpret: bool | None = None,
                        vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
                        gradient: str = "fused_vjp",
+                       precision: str | None = None,
                        ) -> jax.Array:
     """Solve the twin's neural ODE with the weights-stationary kernel.
 
@@ -71,10 +75,28 @@ def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
         checkpoint/replay kernel (:mod:`repro.kernels.fused_ode_mlp_bwd`)
         — the drive is data and gets a zero cotangent; ``"stopgrad"``
         detaches the solve (inference-only serving).
+      precision: mixed-precision policy — ``"f32"`` | ``"bf16"`` |
+        ``"bf16_f32acc"``, or ``None`` for the platform default
+        (bf16_f32acc on TPU, f32 elsewhere).  The bf16 policies store
+        weights, drive and trajectory slabs at half width while matmuls
+        accumulate at f32 (``bf16_f32acc``) and gradient accumulators
+        always stay f32; the error model is documented in
+        ``docs/kernels.md``.  Non-floating inputs raise a ``ValueError``
+        naming the offending input.
 
     Returns:
-      The (T+1, B, D) trajectory (y0 prepended).
+      The (T+1, B, D) trajectory (y0 prepended), at the policy's
+      storage dtype.
     """
+    precision = resolve_precision(precision)
+    named = [("y0", y0), ("u_half", u_half)]
+    named += [(f"params[{i}]['w']", p["w"]) for i, p in enumerate(params)]
+    named += [(f"params[{i}]['b']", p["b"]) for i, p in enumerate(params)]
+    for name, x in named:      # fail HERE with the dict-level input name,
+        _require_float(name, x, precision)  # not inside the kernel wrapper
+    # hand the kernels f32 master copies; the precision policy decides
+    # (inside the kernel wrappers) what is rounded to storage width, so
+    # cotangents come back at f32 regardless of the substrate dtype
     weights = [p["w"].astype(jnp.float32) for p in params]
     biases = [p["b"].astype(jnp.float32) for p in params]
     y0 = y0.astype(jnp.float32)
@@ -82,7 +104,8 @@ def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
     if gradient == "fused_vjp":
         return fused_node_rollout_vjp(y0, u_half, weights, biases,
                                       float(dt), batch_tile, time_chunk,
-                                      interpret, vmem_budget_bytes)
+                                      interpret, vmem_budget_bytes,
+                                      precision)
     if gradient == "stopgrad":
         out = _fused_pallas(lax.stop_gradient(y0),
                             lax.stop_gradient(u_half),
@@ -91,7 +114,8 @@ def fused_node_rollout(params: Sequence[dict], y0: jax.Array,
                             float(dt),
                             batch_tile=batch_tile, time_chunk=time_chunk,
                             interpret=interpret,
-                            vmem_budget_bytes=vmem_budget_bytes)
+                            vmem_budget_bytes=vmem_budget_bytes,
+                            precision=precision)
         return lax.stop_gradient(out)
     raise ValueError(
         f"unknown gradient mode {gradient!r}; have 'fused_vjp', 'stopgrad'")
@@ -173,23 +197,36 @@ def _sdtw_chunk(n: int, m: int) -> int:
     return min(256, n + m - 1)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def soft_dtw(x: jax.Array, y: jax.Array, gamma: float = 1.0,
-             interpret: bool = True) -> jax.Array:
-    """Batched soft-DTW((B,n,d),(B,m,d)) -> (B,) via the wavefront kernel."""
+def _sdtw_cost_slab(x, y, chunk, precision):
+    """Diagonal-layout cost slab at the policy's storage dtype (bf16
+    halves the only O(n·m) operand; carries/outputs stay f32)."""
     D = jax.vmap(_pairwise_dist)(x, y)
-    n, m = D.shape[1], D.shape[2]
+    store = precision_dtypes(resolve_precision(precision))[0]
+    return _diag_layout_batch(D, chunk).astype(store)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def soft_dtw(x: jax.Array, y: jax.Array, gamma: float = 1.0,
+             interpret: bool = True,
+             precision: str | None = None) -> jax.Array:
+    """Batched soft-DTW((B,n,d),(B,m,d)) -> (B,) via the wavefront kernel.
+
+    ``precision``: ``"f32"`` | ``"bf16"`` | ``"bf16_f32acc"`` (``None``
+    = platform default).  Under the bf16 policies the cost matrix
+    streams through the kernel at bfloat16 while the R/E diagonal
+    carries and the answer stay float32 (see ``docs/kernels.md``).
+    """
+    n, m = x.shape[1], y.shape[1]
     chunk = _sdtw_chunk(n, m)
-    dd = _diag_layout_batch(D, chunk)
+    dd = _sdtw_cost_slab(x, y, chunk, precision)
     return _softdtw_pallas(dd, n, m, gamma=gamma, hard=False, chunk=chunk,
                            interpret=interpret)
 
 
-def _sdtw_fwd(x, y, gamma, interpret):
-    D = jax.vmap(_pairwise_dist)(x, y)
-    n, m = D.shape[1], D.shape[2]
+def _sdtw_fwd(x, y, gamma, interpret, precision):
+    n, m = x.shape[1], y.shape[1]
     chunk = _sdtw_chunk(n, m)
-    dd = _diag_layout_batch(D, chunk)
+    dd = _sdtw_cost_slab(x, y, chunk, precision)
     ans, rd = _softdtw_pallas(dd, n, m, gamma=gamma, hard=False, chunk=chunk,
                               interpret=interpret, return_r=True)
     # residuals: only R must come from the forward kernel; the cost slab
@@ -197,7 +234,7 @@ def _sdtw_fwd(x, y, gamma, interpret):
     return ans, (x, y, rd)
 
 
-def _sdtw_bwd(gamma, interpret, res, g):
+def _sdtw_bwd(gamma, interpret, precision, res, g):
     # Closed-form E-matrix reverse DP as a second wavefront kernel
     # (kernels/softdtw.py) — dSDTW/dD = E, then an elementwise pullback
     # through the |x_i - y_j| cost.  The old autodiff-of-the-reference-DP
@@ -205,12 +242,13 @@ def _sdtw_bwd(gamma, interpret, res, g):
     x, y, rd = res
     n, m = x.shape[1], y.shape[1]
     chunk = _sdtw_chunk(n, m)
+    store = precision_dtypes(resolve_precision(precision))[0]
     D, dist_vjp = jax.vjp(lambda a, b: jax.vmap(_pairwise_dist)(a, b), x, y)
-    dd = _diag_layout_batch(D, chunk)
+    dd = _diag_layout_batch(D, chunk).astype(store)
     e_dd = _softdtw_bwd_pallas(dd, rd, n, m, gamma=gamma, chunk=chunk,
                                interpret=interpret)
     dD = g[:, None, None] * _undiag_batch(e_dd, n, m)
-    gx, gy = dist_vjp(dD)
+    gx, gy = dist_vjp(dD.astype(D.dtype))
     return gx, gy
 
 

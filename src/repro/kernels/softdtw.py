@@ -27,6 +27,15 @@ involved anywhere.
 
 Grid: (batch, num_k_chunks); the backward's chunk grid dimension is
 index-mapped in reverse.
+
+Mixed precision: the cost matrix ``dd`` — the only O(n·m) input — may
+arrive in bfloat16 (the ``"bf16"``/``"bf16_f32acc"`` policies halve its
+VMEM/HBM traffic); each wavefront row is upcast once on read and the
+R/E/D diagonal carries, the accumulated answer and the emitted R and E
+matrices ALWAYS stay float32 — the sequential DP recurrences are where
+reduced precision would compound.  The BIG padding sentinel is detected
+with a half-BIG threshold because bf16 rounds ``1e10`` slightly DOWN
+(an exact ``>= BIG`` compare would mistake padded cells for real ones).
 """
 from __future__ import annotations
 
@@ -39,6 +48,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.losses import BIG
+
+# padding-sentinel threshold: robust to BIG's bf16 rounding (see module
+# docstring); real costs are pairwise distances, orders of magnitude
+# below BIG/2
+BIG_CUT = BIG * 0.5
 
 
 def _kernel(dd_ref, *refs, n: int, m: int, chunk: int, nkc: int,
@@ -68,14 +82,14 @@ def _kernel(dd_ref, *refs, n: int, m: int, chunk: int, nkc: int,
 
     def body(r, _):
         k = kc * chunk + r
-        d_k = dd_ref[0, r]
+        d_k = dd_ref[0, r].astype(jnp.float32)   # bf16 slab upcast once
         rp = rp_ref[...]
         rp2 = rp2_ref[...]
         up = rp
         left = jnp.concatenate([big_head, rp[:-1]])
         diag = jnp.concatenate([big_head, rp2[:-1]])
         best = minop(up, left, diag)
-        invalid = d_k >= BIG
+        invalid = d_k >= BIG_CUT
         r_k = d_k + jnp.where(invalid, 0.0, best)
         r_k = jnp.where(k == 0, d_k, r_k)          # (0,0) has no predecessor
         r_k = jnp.where(invalid, BIG, r_k)
@@ -105,8 +119,11 @@ def softdtw_pallas(
 ):
     """Batched accumulated (soft-)DTW from diagonal-layout costs -> (B,).
 
-    ``return_r=True`` also returns the accumulated-cost matrix R in the
-    same (B, KD_pad, n) diagonal layout — the backward pass's residual.
+    ``dd`` may be float32 or bfloat16 (the reduced-precision policies
+    stream the cost slab at half width); the DP carries and the output
+    are always float32.  ``return_r=True`` also returns the
+    accumulated-cost matrix R (float32) in the same (B, KD_pad, n)
+    diagonal layout — the backward pass's residual.
     """
     B, kd_pad, n_ = dd.shape
     assert n_ == n and kd_pad % chunk == 0
@@ -167,7 +184,7 @@ def _bwd_kernel(dd_ref, rd_ref, e_dd_ref, e1_ref, e2_ref, r1_ref, r2_ref,
     def body(s, _):
         r = chunk - 1 - s
         k = (nkc - 1 - kc_rev) * chunk + r
-        d_k = dd_ref[0, r]
+        d_k = dd_ref[0, r].astype(jnp.float32)   # bf16 slab upcast once
         r_k = rd_ref[0, r]
         e1, e2 = e1_ref[...], e2_ref[...]
         r1, r2 = r1_ref[...], r2_ref[...]
@@ -175,12 +192,12 @@ def _bwd_kernel(dd_ref, rd_ref, e_dd_ref, e1_ref, e2_ref, r1_ref, r2_ref,
 
         def term(ev, rv, dv):
             w = jnp.exp((rv - r_k - dv) * inv_g)
-            return jnp.where(dv < BIG, ev * w, 0.0)
+            return jnp.where(dv < BIG_CUT, ev * w, 0.0)
 
         e_k = (term(shift(e1, 0.0), shift(r1, BIG), shift(d1, BIG))  # down
                + term(e1, r1, d1)                                    # right
                + term(shift(e2, 0.0), shift(r2, BIG), shift(d2, BIG)))  # diag
-        e_k = jnp.where(d_k < BIG, e_k, 0.0)
+        e_k = jnp.where(d_k < BIG_CUT, e_k, 0.0)
         # seed: dF/dR[n-1,m-1] = 1 (F = R[n-1,m-1])
         e_k = e_k + jnp.where(k == n + m - 2, seed_row, 0.0)
         e2_ref[...] = e1
@@ -204,7 +221,11 @@ def softdtw_bwd_pallas(
     chunk: int = 256,
     interpret: bool = True,
 ) -> jax.Array:
-    """E-matrix (dSDTW/dD) in diagonal layout, (B, KD_pad, n)."""
+    """E-matrix (dSDTW/dD) in diagonal layout, (B, KD_pad, n) float32.
+
+    ``dd`` may be bfloat16 (matching the forward's reduced-precision
+    cost slab); ``rd`` is the forward's float32 R and the E/R/D diagonal
+    carries stay float32."""
     B, kd_pad, n_ = dd.shape
     assert n_ == n and kd_pad % chunk == 0 and rd.shape == dd.shape
     nkc = kd_pad // chunk

@@ -116,6 +116,12 @@ def shard_rollout_batch(backend, state, y0s: jax.Array, ts: jax.Array, *,
     program is exactly the single-device one.  N that does not divide the
     shard count is padded (see :func:`pad_fleet_inputs`) and the padded
     trajectories are dropped before returning (N, T+1, D).
+
+    ``solver_kw`` forwards verbatim to every device's
+    ``rollout_batch_local`` — including the fused backend's
+    ``precision=`` override, so a sharded fleet can serve the bf16
+    substrate (half the replicated-weight bytes and per-device slab
+    traffic) with one keyword.
     """
     n_shards = twin_shard_count(mesh)
     n = y0s.shape[0]
@@ -233,17 +239,30 @@ def main(argv=None):
                     help="request batches to stream")
     ap.add_argument("--backend", default="fused_pallas",
                     choices=["digital", "fused_pallas"])
+    ap.add_argument("--precision", default=None,
+                    choices=["f32", "bf16", "bf16_f32acc"],
+                    help="fused-substrate mixed-precision policy "
+                         "(default: auto — bf16_f32acc on TPU, f32 "
+                         "elsewhere)")
     ap.add_argument("--ckpt-dir", default="",
                     help="trained-twin checkpoint (default: untrained "
                          "weights saved to a temp dir — substrate smoke)")
     args = ap.parse_args(argv)
 
     from repro.train import recipes
-    fleet = recipes.make_l96_fleet(backend=args.backend)
+    backend = args.backend
+    if args.precision is not None:
+        if backend != "fused_pallas":
+            ap.error("--precision is a fused-substrate policy; it does "
+                     "not apply to --backend digital")
+        from repro.core.backends import FusedPallasBackend
+        backend = FusedPallasBackend(precision=args.precision)
+    fleet = recipes.make_l96_fleet(backend=backend)
     ts = recipes.l96_fleet_ts(horizon=args.horizon)
     mesh = make_twin_mesh()
     print(f"mesh: {twin_shard_count(mesh)} device(s) on axis '{TWIN_AXIS}'; "
-          f"backend {args.backend}")
+          f"backend {args.backend} precision "
+          f"{'n/a' if args.backend == 'digital' else args.precision or 'auto'}")
 
     ckpt_dir = args.ckpt_dir
     if not ckpt_dir:

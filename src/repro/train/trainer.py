@@ -195,17 +195,21 @@ def make_segments(ts: jax.Array, ys: jax.Array, segment_len: int):
 
 
 def _segment_objective(loss: str, gamma: float, preds, ys_seg,
-                       kernelised: bool = False, interpret=None):
+                       kernelised: bool = False, interpret=None,
+                       precision=None):
     """Shared loss combinators over (S, L+1, D) predictions/targets.
 
     ``kernelised=True`` (the fused training path) routes soft-DTW through
     the wavefront Pallas kernels — forward AND the closed-form E-matrix
-    backward — instead of the pure-jnp reference DP."""
+    backward — instead of the pure-jnp reference DP; ``precision``
+    threads the backend's mixed-precision policy into the soft-DTW cost
+    slab (the R/E carries stay f32 — see ``docs/kernels.md``)."""
+    preds = preds.astype(jnp.float32)      # bf16 rollouts meet f32 targets
     if kernelised and loss != "l1":
         from repro.kernels import ops
         from repro.kernels.fused_ode_mlp import _default_interpret
         itp = _default_interpret() if interpret is None else interpret
-        sdtw = jnp.mean(ops.soft_dtw(preds, ys_seg, gamma, itp))
+        sdtw = jnp.mean(ops.soft_dtw(preds, ys_seg, gamma, itp, precision))
     elif loss != "l1":
         per_seg = jax.vmap(lambda p, t: soft_dtw(p, t, gamma))(preds, ys_seg)
         sdtw = jnp.mean(per_seg)
@@ -273,11 +277,12 @@ def _fused_segment_loss_fn(twin, backend, ts_seg, ys_seg, loss: str,
             params, y0p, uhp, dt / sub, batch_tile=bt,
             time_chunk=backend.time_chunk, interpret=backend.interpret,
             vmem_budget_bytes=backend.vmem_budget_bytes,
-            gradient="fused_vjp")
+            gradient="fused_vjp", precision=backend.precision)
         preds = jnp.transpose(traj[::sub, :S], (1, 0, 2))  # (S, L+1, D)
         return _segment_objective(loss, gamma, preds, ys_seg,
                                   kernelised=True,
-                                  interpret=backend.interpret)
+                                  interpret=backend.interpret,
+                                  precision=backend.precision)
 
     return loss_fn
 
@@ -324,7 +329,11 @@ def train_twin(twin, params, ts: jax.Array, ys: jax.Array, *,
     ``backend`` selects the training substrate (see
     :func:`segment_loss_fn`): ``backend="fused_pallas"`` (or a
     ``FusedPallasBackend`` instance) runs every forward AND backward
-    solve through the weights-stationary Pallas kernels.
+    solve through the weights-stationary Pallas kernels.  The backend's
+    ``precision`` policy rides along — e.g.
+    ``backend=FusedPallasBackend(precision="bf16_f32acc")`` trains on
+    the reduced-precision substrate (bf16 slabs, f32 accumulation; the
+    loss and optimizer state stay f32).
     """
     ts_seg, ys_seg = make_segments(ts, ys, segment_len)
     loss_fn = segment_loss_fn(twin, ts_seg, ys_seg, loss, gamma, noise_std,

@@ -11,6 +11,8 @@ from repro.core.losses import soft_dtw as soft_dtw_jnp
 from repro.core.node import mlp_init
 from repro.core.twin import make_autonomous_twin, make_driven_twin
 from repro.kernels import ops, ref
+from repro.core.backends import FusedPallasBackend
+from repro.kernels.fused_ode_mlp import DEFAULT_VMEM_BUDGET
 from repro.kernels.fused_ode_mlp_bwd import fused_node_rollout_vjp
 
 KEY = jax.random.PRNGKey(0)
@@ -56,7 +58,8 @@ def test_fused_vjp_matches_ref_autodiff(sizes, drive_dim, T, chunk, bt):
     gw = jax.random.normal(k3, (T + 1, B, D))
 
     gk = jax.grad(lambda y, w, b: jnp.sum(
-        fused_node_rollout_vjp(y, uh, w, b, dt, bt, chunk, None) * gw),
+        fused_node_rollout_vjp(y, uh, w, b, dt, bt, chunk, None,
+                               DEFAULT_VMEM_BUDGET, "f32") * gw),
         argnums=(0, 1, 2))(y0, ws, bs)
     gr = jax.grad(lambda y, w, b: jnp.sum(
         ref.fused_node_rollout_ref(y, uh, w, b, dt) * gw),
@@ -79,7 +82,8 @@ def test_fused_vjp_per_tile_drives():
     gw = jax.random.normal(jax.random.fold_in(KEY, 6), (T + 1, B, 1))
     dt = float(ts[1] - ts[0])
     gk = jax.grad(lambda y, w, b: jnp.sum(
-        fused_node_rollout_vjp(y, uh, w, b, dt, 4, 3, None) * gw),
+        fused_node_rollout_vjp(y, uh, w, b, dt, 4, 3, None,
+                               DEFAULT_VMEM_BUDGET, "f32") * gw),
         argnums=(0, 1, 2))(y0, ws, bs)
     gr = jax.grad(lambda y, w, b: jnp.sum(
         ref.fused_node_rollout_ref(y, uh, w, b, dt) * gw),
@@ -122,7 +126,8 @@ def test_fused_vjp_matches_digital_adjoint(hp_grad_setup):
     discretise-then-optimise grads (fused) agree to <=1e-3 rel."""
     from repro.core.backends import FusedPallasBackend
     twin, params, y0, ts = hp_grad_setup
-    fused = twin.with_backend(FusedPallasBackend(batch_tile=1, time_chunk=5))
+    fused = twin.with_backend(
+        FusedPallasBackend(batch_tile=1, time_chunk=5, precision="f32"))
 
     def loss(t):
         return lambda p: jnp.mean(t.simulate(p, y0, ts) ** 2)
@@ -137,7 +142,8 @@ def test_fused_vjp_matches_finite_differences(hp_grad_setup):
     chunk-straddling horizon (the ISSUE acceptance gate)."""
     from repro.core.backends import FusedPallasBackend
     twin, params, y0, ts = hp_grad_setup
-    fused = twin.with_backend(FusedPallasBackend(batch_tile=1, time_chunk=5))
+    fused = twin.with_backend(
+        FusedPallasBackend(batch_tile=1, time_chunk=5, precision="f32"))
 
     def loss(p, y):
         return jnp.mean(fused.node.trajectory(p, y, ts) ** 2)
@@ -169,7 +175,8 @@ def test_fused_fleet_batch_gradients(hp_grad_setup):
     from repro.core.backends import FusedPallasBackend
     twin, params, _, ts = hp_grad_setup
     y0s = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 11), (5, 1))
-    fused = twin.with_backend(FusedPallasBackend(batch_tile=4))
+    fused = twin.with_backend(
+        FusedPallasBackend(batch_tile=4, precision="f32"))
 
     def loss_f(p):
         return jnp.mean(fused.simulate_batch(p, y0s, ts) ** 2)
@@ -221,7 +228,8 @@ def test_fit_fused_backend_matches_digital_loss_trajectory():
     _, h_fus = trainer.train_twin(
         twin, params, ts, ys, optimizer=adam(1e-3), num_steps=steps,
         segment_len=50, loss="l1", noise_std=0.002,
-        key=jax.random.PRNGKey(1), backend="fused_pallas")
+        key=jax.random.PRNGKey(1),
+        backend=FusedPallasBackend(precision="f32"))
     rel = jnp.abs(h_fus - h_dig) / (jnp.abs(h_dig) + 1e-12)
     assert float(rel.max()) < 1e-3
 
@@ -246,7 +254,8 @@ def test_fit_fused_backend_softdtw_loss():
     _, h_fus = trainer.train_twin(
         twin, params, ts, ys, optimizer=adam(1e-3), num_steps=6,
         segment_len=40, loss="l1+softdtw", gamma=0.1,
-        key=jax.random.PRNGKey(1), backend="fused_pallas")
+        key=jax.random.PRNGKey(1),
+        backend=FusedPallasBackend(precision="f32"))
     rel = jnp.abs(h_fus - h_dig) / (jnp.abs(h_dig) + 1e-12)
     assert float(rel.max()) < 1e-3
 
@@ -271,7 +280,7 @@ def test_fit_fused_backend_honours_solver_config():
     _, h_fus = trainer.train_twin(
         twin, params, ts, ys, optimizer=adam(1e-3), num_steps=5,
         segment_len=30, loss="l1", key=jax.random.PRNGKey(1),
-        backend="fused_pallas")
+        backend=FusedPallasBackend(precision="f32"))
     rel = jnp.abs(h_fus - h_dig) / (jnp.abs(h_dig) + 1e-12)
     assert float(rel.max()) < 1e-3
 
@@ -281,6 +290,117 @@ def test_fit_fused_backend_honours_solver_config():
         trainer.train_twin(twin5, params, ts, ys, optimizer=adam(1e-3),
                            num_steps=1, segment_len=30,
                            backend="fused_pallas")
+
+
+# ---------------------------------------------------------------------------
+# mixed precision: reduced-storage substrate still trains
+# ---------------------------------------------------------------------------
+
+def test_fused_vjp_bf16_matches_f32_gradients():
+    """bf16_f32acc gradients: bf16 slabs + f32 accumulators must land
+    within ~bf16 rounding of the f32-substrate gradients, and come back
+    as f32 arrays (the accumulators never round on the way out)."""
+    params = mlp_init(KEY, (2, 14, 14, 1))
+    T, B = 23, 8
+    ts = jnp.linspace(0.0, 0.23, T + 1)
+    uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
+    y0 = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 21), (B, 1))
+    dt = float(ts[1] - ts[0])
+
+    def loss(p, prec):
+        traj = ops.fused_node_rollout(p, y0, uh, dt, batch_tile=4,
+                                      time_chunk=5, precision=prec)
+        return jnp.mean(traj.astype(jnp.float32) ** 2)
+
+    g32 = jax.grad(lambda p: loss(p, "f32"))(params)
+    gbf = jax.grad(lambda p: loss(p, "bf16_f32acc"))(params)
+    assert all(x.dtype == jnp.float32
+               for x in jax.tree_util.tree_leaves(gbf))
+    assert _tree_max_rel(gbf, g32) < 2e-2
+
+
+def test_fused_vjp_bf16_matches_finite_differences():
+    """The ISSUE gate: bf16_f32acc fused-VJP directional derivative vs
+    central differences OF THE SAME reduced-precision loss."""
+    params = mlp_init(KEY, (2, 14, 14, 1))
+    T, B = 23, 4
+    ts = jnp.linspace(0.0, 0.23, T + 1)
+    uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
+    y0 = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 22), (B, 1))
+    dt = float(ts[1] - ts[0])
+
+    def loss(p):
+        traj = ops.fused_node_rollout(p, y0, uh, dt, batch_tile=4,
+                                      time_chunk=5,
+                                      precision="bf16_f32acc")
+        return jnp.mean(traj.astype(jnp.float32) ** 2)
+
+    gp = jax.grad(loss)(params)
+    norm = jnp.sqrt(sum(jnp.sum(x ** 2)
+                        for x in jax.tree_util.tree_leaves(gp)))
+    v = jax.tree_util.tree_map(lambda x: x / norm, gp)
+    # eps larger than the f32 test: the bf16-stored loss is itself only
+    # ~3 decimal digits deep, so the FD noise floor sits higher
+    eps = 3e-2
+    shift = lambda s: jax.tree_util.tree_map(lambda p_, v_: p_ + s * v_,
+                                             params, v)
+    fd = (loss(shift(eps)) - loss(shift(-eps))) / (2 * eps)
+    assert abs(float(fd) - float(norm)) / (abs(float(fd)) + 1e-12) < 3e-2
+
+
+def test_fit_bf16_tracks_f32_loss_trajectory():
+    """The ISSUE acceptance: fit on the bf16_f32acc substrate tracks the
+    f32-substrate loss trajectory within 5e-2 rel (measured ~1.4e-2) and
+    genuinely descends."""
+    from repro.core.backends import FusedPallasBackend
+    from repro.data import hp_memristor as hp
+    from repro.train import trainer
+    from repro.train.optimizer import adam
+
+    ts, xs, _, _ = hp.generate("sine", num_points=500, dt=1e-3,
+                               amp=2.0, freq=2.0)
+    ys = xs[:, None]
+    twin = make_driven_twin(1, hp.WAVEFORMS["sine"](amp=2.0, freq=2.0),
+                            hidden=14)
+    params = twin.init(jax.random.PRNGKey(42))
+    steps = 40
+    _, h32 = trainer.train_twin(
+        twin, params, ts, ys, optimizer=adam(1e-3), num_steps=steps,
+        segment_len=50, loss="l1", noise_std=0.002,
+        key=jax.random.PRNGKey(1),
+        backend=FusedPallasBackend(precision="f32"))
+    _, hbf = trainer.train_twin(
+        twin, params, ts, ys, optimizer=adam(1e-3), num_steps=steps,
+        segment_len=50, loss="l1", noise_std=0.002,
+        key=jax.random.PRNGKey(1),
+        backend=FusedPallasBackend(precision="bf16_f32acc"))
+    rel = jnp.abs(hbf - h32) / (jnp.abs(h32) + 1e-12)
+    assert float(rel.max()) < 5e-2
+    assert float(hbf[-1]) < 0.5 * float(hbf[0])
+
+
+def test_fit_bf16_softdtw_objective_descends():
+    """End-to-end reduced precision incl. the kernelised soft-DTW loss
+    (bf16 cost slab, f32 E-matrix carries): the objective must descend
+    and stay finite."""
+    from repro.core.backends import FusedPallasBackend
+    from repro.data import hp_memristor as hp
+    from repro.train import trainer
+    from repro.train.optimizer import adam
+
+    ts, xs, _, _ = hp.generate("sine", num_points=200, dt=1e-3,
+                               amp=2.0, freq=2.0)
+    ys = xs[:, None]
+    twin = make_driven_twin(1, hp.WAVEFORMS["sine"](amp=2.0, freq=2.0),
+                            hidden=14)
+    params = twin.init(jax.random.PRNGKey(42))
+    _, h = trainer.train_twin(
+        twin, params, ts, ys, optimizer=adam(1e-3), num_steps=12,
+        segment_len=40, loss="l1+softdtw", gamma=0.1,
+        key=jax.random.PRNGKey(1),
+        backend=FusedPallasBackend(precision="bf16_f32acc"))
+    assert bool(jnp.isfinite(h).all())
+    assert float(h[-1]) < float(h[0])
 
 
 # ---------------------------------------------------------------------------
@@ -299,7 +419,7 @@ def test_softdtw_kernel_backward_matches_ref_autodiff(n, m, d, gamma):
     y = jax.random.normal(ky, (2, m, d))
 
     def k_loss(a, b):
-        return ops.soft_dtw(a, b, gamma).sum()
+        return ops.soft_dtw(a, b, gamma, True, "f32").sum()
 
     def r_loss(a, b):
         return jax.vmap(lambda p, q: soft_dtw_jnp(p, q, gamma))(a, b).sum()

@@ -33,7 +33,8 @@ def test_fused_node_matches_ref(sizes, drive_dim, state_dim, batch, T):
         uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
     else:
         uh = jnp.zeros((2 * T + 1, 0))
-    out_k = ops.fused_node_rollout(params, y0, uh, dt, batch_tile=8)
+    out_k = ops.fused_node_rollout(params, y0, uh, dt, batch_tile=8,
+                                   precision="f32")
     out_r = ops.fused_node_rollout_ref(params, y0, uh, dt)
     np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
     assert out_k.shape == (T + 1, batch, state_dim)
@@ -56,7 +57,8 @@ def test_fused_node_time_chunks_match_ref(T, chunk):
     ts = jnp.linspace(0.0, 0.5, T + 1)
     uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
     out_k = ops.fused_node_rollout(params, y0, uh, float(ts[1] - ts[0]),
-                                   batch_tile=4, time_chunk=chunk)
+                                   batch_tile=4, time_chunk=chunk,
+                                   precision="f32")
     out_r = ops.fused_node_rollout_ref(params, y0, uh, float(ts[1] - ts[0]))
     assert out_k.shape == (T + 1, 8, 1)
     np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
@@ -72,7 +74,8 @@ def test_fused_node_time_chunks_per_tile_drive():
                     for a in amps])                       # (B, 2T+1, 1)
     y0 = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 5), (B, 1))
     out_k = ops.fused_node_rollout(params, y0, uh, float(ts[1] - ts[0]),
-                                   batch_tile=4, time_chunk=3)
+                                   batch_tile=4, time_chunk=3,
+                                   precision="f32")
     out_r = ops.fused_node_rollout_ref(params, y0, uh, float(ts[1] - ts[0]))
     np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
 
@@ -92,10 +95,128 @@ def test_fused_node_long_horizon_no_vmem_error():
     assert plan.vmem_bytes <= DEFAULT_VMEM_BUDGET
     y0 = 0.1 * jax.random.normal(jax.random.fold_in(KEY, 9), (64, 6))
     uh = jnp.zeros((2 * T + 1, 0))
-    out_k = ops.fused_node_rollout(params, y0, uh, 1e-4)   # no ValueError
+    out_k = ops.fused_node_rollout(params, y0, uh, 1e-4,
+                                   precision="f32")   # no ValueError
     out_r = ops.fused_node_rollout_ref(params, y0, uh, 1e-4)
     assert out_k.shape == (T + 1, 64, 6)
     assert float(jnp.abs(out_k - out_r).max()) <= 1e-4
+
+
+# ---------------------------------------------------------------------------
+# mixed precision (the bf16 streaming policies)
+# ---------------------------------------------------------------------------
+
+# documented per-policy tolerances for the HP-shaped rollout (see
+# docs/kernels.md "Precision policy"): bf16 storage rounds each stored
+# row to ~2^-8 relative, and the chunk-boundary carry re-rounds once per
+# chunk; f32 accumulation keeps the in-chunk integration exact.
+PRECISION_REL_TOL = {"f32": 1e-5, "bf16_f32acc": 1e-2, "bf16": 4e-2}
+
+
+@pytest.mark.parametrize("precision", ["f32", "bf16_f32acc", "bf16"])
+def test_fused_node_precision_parity(precision):
+    """Reduced-precision rollouts track the f32 reference within the
+    documented per-policy tolerance (HP-twin config, chunk-straddling)."""
+    params = mlp_init(KEY, (2, 14, 14, 1))
+    y0 = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 77), (8, 1))
+    T = 50
+    ts = jnp.linspace(0.0, 0.5, T + 1)
+    uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
+    dt = float(ts[1] - ts[0])
+    out_k = ops.fused_node_rollout(params, y0, uh, dt, batch_tile=4,
+                                   time_chunk=7, precision=precision)
+    out_r = ops.fused_node_rollout_ref(params, y0, uh, dt)
+    if precision == "f32":
+        assert out_k.dtype == jnp.float32
+    else:
+        assert out_k.dtype == jnp.bfloat16   # half the HBM bytes
+    rel = float(jnp.abs(out_k.astype(jnp.float32) - out_r).max()
+                / jnp.abs(out_r).max())
+    assert rel <= PRECISION_REL_TOL[precision]
+
+
+def test_plan_time_chunk_bf16_doubles_chunk():
+    """The ISSUE acceptance: dtype-aware planning must give bf16 >= 1.8x
+    the f32 time chunk at the default VMEM budget (and the plan must
+    actually fit it)."""
+    from repro.kernels.fused_ode_mlp import (DEFAULT_VMEM_BUDGET,
+                                             plan_time_chunk)
+    params = mlp_init(KEY, (6, 64, 64, 6))
+    w = [p["w"].astype(jnp.float32) for p in params]
+    b = [p["b"].astype(jnp.float32) for p in params]
+    T = 10 ** 9                       # never clamp C at the horizon
+    p32 = plan_time_chunk(T, 64, 6, 0, False, w, b, DEFAULT_VMEM_BUDGET)
+    for bf in ["bf16", "bf16_f32acc"]:
+        pbf = plan_time_chunk(T, 64, 6, 0, False, w, b,
+                              DEFAULT_VMEM_BUDGET, precision=bf)
+        assert pbf.time_chunk >= 1.8 * p32.time_chunk
+        assert pbf.vmem_bytes <= DEFAULT_VMEM_BUDGET
+    # the weights-must-fit threshold moves too: a budget that rejects
+    # f32 weights can still fit the bf16-stored ones
+    big = mlp_init(jax.random.fold_in(KEY, 1), (64, 256, 256, 64))
+    wb = [p["w"].astype(jnp.float32) for p in big]
+    bb = [p["b"].astype(jnp.float32) for p in big]
+    budget = 300 * 1024
+    with pytest.raises(ValueError, match="VMEM"):
+        plan_time_chunk(100, 8, 64, 0, False, wb, bb, budget)
+    plan = plan_time_chunk(100, 8, 64, 0, False, wb, bb, budget,
+                           precision="bf16_f32acc")
+    assert plan.time_chunk >= 1
+
+
+def test_fused_node_rejects_non_float_inputs():
+    """Clear ValueError naming the offending input instead of an opaque
+    Mosaic lowering failure (ISSUE satellite)."""
+    params = mlp_init(KEY, (2, 8, 1))
+    y0 = jnp.zeros((4, 1))
+    uh = jnp.zeros((11, 1))
+    with pytest.raises(ValueError, match="y0"):
+        ops.fused_node_rollout(params, y0.astype(jnp.int32), uh, 1e-2)
+    with pytest.raises(ValueError, match="u_half"):
+        ops.fused_node_rollout(params, y0, uh.astype(jnp.int32), 1e-2)
+    bad = [dict(p) for p in params]
+    bad[1]["w"] = bad[1]["w"].astype(jnp.int8)
+    with pytest.raises(ValueError, match=r"params\[1\]\['w'\]"):
+        ops.fused_node_rollout(bad, y0, uh, 1e-2)
+
+
+def test_force_interpret_env_override(monkeypatch):
+    """REPRO_FORCE_INTERPRET pins the lowering mode for BOTH kernel
+    modules without monkeypatching jax (ISSUE satellite)."""
+    from repro.kernels import fused_ode_mlp, fused_ode_mlp_bwd
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    assert fused_ode_mlp._default_interpret() is True
+    assert fused_ode_mlp_bwd._default_interpret() is True
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "0")
+    assert fused_ode_mlp._default_interpret() is False
+    assert fused_ode_mlp_bwd._default_interpret() is False
+    # common boolean-env spellings work; garbage names the variable
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "true")
+    assert fused_ode_mlp._default_interpret() is True
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "off")
+    assert fused_ode_mlp._default_interpret() is False
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "maybe")
+    with pytest.raises(ValueError, match="REPRO_FORCE_INTERPRET"):
+        fused_ode_mlp._default_interpret()
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "")
+    assert (fused_ode_mlp._default_interpret()
+            is (jax.default_backend() != "tpu"))
+
+
+@pytest.mark.parametrize("precision", ["bf16_f32acc", "bf16"])
+def test_softdtw_bf16_cost_matrix(precision):
+    """The wavefront kernels accept a bf16 cost slab; f32 R/E carries
+    keep the DP well-conditioned (forward AND E-matrix backward)."""
+    x = jax.random.normal(KEY, (2, 60, 2))
+    y = jax.random.normal(jax.random.fold_in(KEY, 7), (2, 80, 2))
+    sk = ops.soft_dtw(x, y, 0.5, True, precision)
+    sr = jax.vmap(lambda a, b: soft_dtw_jnp(a, b, 0.5))(x, y)
+    assert sk.dtype == jnp.float32            # answer stays full precision
+    np.testing.assert_allclose(sk, sr, rtol=2e-3, atol=1e-3)
+    gk = jax.grad(lambda a: ops.soft_dtw(a, y, 0.5, True, precision).sum())(x)
+    gr = jax.grad(
+        lambda a: jax.vmap(lambda p, q: soft_dtw_jnp(p, q, 0.5))(a, y).sum())(x)
+    np.testing.assert_allclose(gk, gr, rtol=3e-2, atol=2e-2)
 
 
 def test_fused_node_vmem_guard_only_when_weights_dont_fit():
@@ -127,7 +248,7 @@ def test_fused_node_matches_odeint():
     ys = odeint(field, y0[0], ts, params, method="rk4")
     uh = ops.half_step_drive(lambda t: jnp.sin(4 * t), ts)
     out = ops.fused_node_rollout(params, y0, uh, float(ts[1] - ts[0]),
-                                 batch_tile=1)
+                                 batch_tile=1, precision="f32")
     np.testing.assert_allclose(out[:, 0, :], ys, rtol=1e-5, atol=1e-6)
 
 
@@ -197,7 +318,7 @@ def test_softdtw_shapes(n, m, d):
     kx, ky = jax.random.split(jax.random.fold_in(KEY, n * m))
     x = jax.random.normal(kx, (2, n, d))
     y = jax.random.normal(ky, (2, m, d))
-    sk = ops.soft_dtw(x, y, 0.7)
+    sk = ops.soft_dtw(x, y, 0.7, True, "f32")
     sr = jax.vmap(lambda a, b: soft_dtw_jnp(a, b, 0.7))(x, y)
     np.testing.assert_allclose(sk, sr, rtol=1e-4, atol=1e-4)
     hk = ops.dtw_distance(x, y)
@@ -208,7 +329,7 @@ def test_softdtw_shapes(n, m, d):
 def test_softdtw_grad_matches_ref():
     x = jax.random.normal(KEY, (2, 40, 2))
     y = jax.random.normal(jax.random.fold_in(KEY, 7), (2, 60, 2))
-    gk = jax.grad(lambda a: ops.soft_dtw(a, y, 0.5).sum())(x)
+    gk = jax.grad(lambda a: ops.soft_dtw(a, y, 0.5, True, "f32").sum())(x)
     gr = jax.grad(
         lambda a: jax.vmap(lambda p, q: soft_dtw_jnp(p, q, 0.5))(a, y).sum())(x)
     np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5)
