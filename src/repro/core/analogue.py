@@ -45,12 +45,37 @@ def weight_scale(w: jax.Array, spec: AnalogueSpec) -> jax.Array:
     return g_range / jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
 
 
-def conductance_pair(w: jax.Array, spec: AnalogueSpec):
+def _require_programmable(w: jax.Array, name: str) -> jax.Array:
+    """Gate conductance programming on a sane weight tensor.
+
+    Conductances are continuous physical quantities: integer weights
+    cannot be mapped, and a NaN weight would silently poison every
+    downstream VMM through the differential pair.  Raises a
+    ``ValueError`` naming the offending input (mirrors the ops-level
+    validation of the fused kernels); the NaN check only runs on
+    concrete values — traced programming (inside jit) skips it.
+    """
+    w = jnp.asarray(w)
+    if not jnp.issubdtype(w.dtype, jnp.floating):
+        raise ValueError(
+            f"analogue programming: {name} has non-floating dtype "
+            f"{w.dtype}; crossbar conductances are continuous — cast "
+            f"{name} to a floating dtype first")
+    if not isinstance(w, jax.core.Tracer) and bool(jnp.isnan(w).any()):
+        raise ValueError(
+            f"analogue programming: {name} contains NaN — a NaN weight "
+            f"has no conductance representation and would propagate "
+            f"through every crossbar read")
+    return w
+
+
+def conductance_pair(w: jax.Array, spec: AnalogueSpec, name: str = "w"):
     """Map weights to a differential conductance pair.
 
     w >= 0: G+ carries the value, G- parked at g_min (and vice versa), so
     G+ - G- = scale * w exactly (before quantisation/noise).
     """
+    w = _require_programmable(w, name)
     scale = weight_scale(w, spec)
     mag = jnp.abs(w) * scale
     gp = jnp.where(w >= 0, spec.g_min + mag, spec.g_min)
@@ -67,13 +92,14 @@ def quantize_conductance(g: jax.Array, spec: AnalogueSpec) -> jax.Array:
     return spec.g_min + jnp.clip(q, 0, spec.levels - 1) * step
 
 
-def program_tensor(key: jax.Array, w: jax.Array, spec: AnalogueSpec) -> dict:
+def program_tensor(key: jax.Array, w: jax.Array, spec: AnalogueSpec,
+                   name: str = "w") -> dict:
     """Program a weight tensor onto a (simulated) crossbar.
 
     Quantisation then multiplicative programming noise, frozen — this is
     the post-programming conductance of Fig. 2k.
     """
-    gp, gm, scale = conductance_pair(w, spec)
+    gp, gm, scale = conductance_pair(w, spec, name)
     gp = quantize_conductance(gp, spec)
     gm = quantize_conductance(gm, spec)
     if spec.prog_noise > 0:
@@ -100,10 +126,55 @@ def _read_key(key: jax.Array, t: jax.Array) -> jax.Array:
     return jax.random.fold_in(key, tick)
 
 
+#: Crossbar reads with at least this many cells (K x N) route through the
+#: blocked Pallas kernel instead of plain jnp dots — below it the kernel's
+#: tile padding (everything rounds up to 128x128) costs more than the
+#: fused epilogue saves.  HP-sized arrays (15x14) stay jnp; hidden >= 128
+#: twins dispatch.
+KERNEL_DISPATCH_MIN_CELLS = 16384
+
+
+def _kernel_dispatchable(prog: dict, x: jax.Array, spec: AnalogueSpec,
+                         key: Optional[jax.Array]) -> bool:
+    """Route noise-free 2-D reads of large arrays through the kernel.
+
+    Noisy reads stay on the jnp path: their perturbation stream is keyed
+    by ``jax.random`` (the kernel's counter-derived stream is a different
+    — deterministic — sequence, used by the fused rollout)."""
+    if spec.read_noise > 0 and key is not None:
+        return False
+    if x.ndim != 2:
+        return False
+    K, N = prog["gp"].shape
+    return K * N >= KERNEL_DISPATCH_MIN_CELLS
+
+
 def analogue_matmul(prog: dict, x: jax.Array, spec: AnalogueSpec,
                     key: Optional[jax.Array] = None) -> jax.Array:
     """x @ W through the differential crossbar: I = V G+ - V G- (Ohm +
-    Kirchhoff), rescaled back to weight units."""
+    Kirchhoff), rescaled back to weight units.
+
+    Large noise-free reads execute on the blocked Pallas kernel
+    (:mod:`repro.kernels.crossbar_vmm`) — uint8 level indices with fused
+    dequant when the program was staged quantised (``gp_idx`` present),
+    float conductances otherwise; small or noisy reads keep the plain
+    jnp path (identical semantics)."""
+    if _kernel_dispatchable(prog, x, spec, key):
+        # deferred import: repro.kernels.ops imports this module
+        from repro.kernels.crossbar_vmm import crossbar_matmul
+        if "gp_idx" in prog:
+            g_step = (spec.g_max - spec.g_min) / (spec.levels - 1)
+            y = crossbar_matmul(x, prog["gp_idx"], prog["gm_idx"],
+                                inv_scale=1.0,
+                                g_step=float(g_step)) / prog["scale"]
+        else:
+            y = crossbar_matmul(x, prog["gp"], prog["gm"],
+                                inv_scale=1.0) / prog["scale"]
+        # the clamp acts in post-scale units and scale is traced, so it
+        # cannot ride the kernel epilogue here
+        if spec.v_clamp is not None:
+            y = jnp.clip(y, -spec.v_clamp, spec.v_clamp)
+        return y
     gp, gm = prog["gp"], prog["gm"]
     if spec.read_noise > 0 and key is not None:
         kp, km = jax.random.split(key)
@@ -126,8 +197,30 @@ def _fold_bias(layer: dict) -> jax.Array:
 def program_mlp(key: jax.Array, params: list[dict],
                 spec: AnalogueSpec) -> list[dict]:
     keys = jax.random.split(key, len(params))
-    return [program_tensor(k, _fold_bias(layer), spec)
-            for k, layer in zip(keys, params)]
+    return [program_tensor(k, _fold_bias(layer), spec,
+                           name=f"params[{i}] (w|b folded)")
+            for i, (k, layer) in enumerate(zip(keys, params))]
+
+
+def stage_uint8(prog: dict, spec: AnalogueSpec) -> dict:
+    """Add uint8 level-index storage (``gp_idx``/``gm_idx``) to a
+    noise-free quantised program — the device's native 6-bit state,
+    4x less weight traffic, dequant fused into the kernel read.
+
+    Only exact for programs whose conductances still sit ON the level
+    grid: programming noise moves them off-grid, so it must be disabled.
+    """
+    if spec.prog_noise > 0:
+        raise ValueError(
+            "uint8 staging requires prog_noise=0: programming noise "
+            "moves conductances off the 6-bit level grid, so level "
+            "indices cannot represent them")
+    if not spec.quantize:
+        raise ValueError("uint8 staging requires quantize=True")
+    step = (spec.g_max - spec.g_min) / (spec.levels - 1)
+    to_idx = lambda g: jnp.clip(jnp.round((g - spec.g_min) / step),
+                                0, spec.levels - 1).astype(jnp.uint8)
+    return dict(prog, gp_idx=to_idx(prog["gp"]), gm_idx=to_idx(prog["gm"]))
 
 
 def analogue_mlp_apply(progs: list[dict], x: jax.Array, spec: AnalogueSpec,

@@ -43,7 +43,7 @@ import numpy as np
 
 from repro.core.adjoint import odeint_adjoint
 from repro.core.analogue import (AnalogueMLPVectorField, AnalogueSpec,
-                                 program_mlp)
+                                 program_mlp, stage_uint8)
 from repro.core.ode import make_odeint, odeint
 from repro.kernels.fused_ode_mlp import DEFAULT_VMEM_BUDGET
 
@@ -210,6 +210,12 @@ class AnalogueBackend(BaseBackend):
 
     ``progs`` short-circuits programming with already-written crossbars
     (the ``deploy_analogue`` legacy shim uses this).
+
+    ``storage="uint8"`` additionally stages each array's 6-bit level
+    indices (requires ``prog_noise=0`` — noise moves conductances off
+    the level grid): large noise-free reads then execute on the blocked
+    Pallas kernel with dequant fused into the MXU feed instead of
+    reading float conductances (see ``analogue_matmul``'s dispatch).
     """
 
     name = "analogue"
@@ -217,8 +223,13 @@ class AnalogueBackend(BaseBackend):
     prog_key: Optional[jax.Array] = None
     read_key: Optional[jax.Array] = None
     progs: Optional[tuple] = None
+    storage: str = "float"          # "float" | "uint8" level indices
 
     def program(self, field: Callable, params: Pytree) -> ExecState:
+        if self.storage not in ("float", "uint8"):
+            raise ValueError(
+                f"AnalogueBackend storage={self.storage!r}; have "
+                f"'float', 'uint8'")
         progs = self.progs
         if progs is None:
             if params is None:
@@ -228,6 +239,8 @@ class AnalogueBackend(BaseBackend):
             key = (self.prog_key if self.prog_key is not None
                    else jax.random.PRNGKey(0))
             progs = tuple(program_mlp(key, params, self.spec))
+        if self.storage == "uint8":
+            progs = tuple(stage_uint8(p, self.spec) for p in progs)
         a_field = AnalogueMLPVectorField(
             progs=progs, spec=self.spec,
             drive=getattr(field, "drive", None), key=self.read_key)
@@ -410,6 +423,95 @@ class FusedPallasBackend(BaseBackend):
         return jnp.transpose(traj[::sub, :B], (1, 0, 2))
 
 
+# ---------------------------------------------------------------------------
+# Fused-analogue backend — crossbar semantics on the weights-stationary kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FusedAnalogueBackend(FusedPallasBackend):
+    """The analogue substrate on the fused kernel: one ``pallas_call``
+    runs the whole RK4 trajectory with the *crossbar* read semantics
+    traced in-kernel (:mod:`repro.kernels.fused_analogue`) — the jnp
+    simulator's per-step dispatch is gone, while ``program`` stays the
+    paper's deployment exactly (same ``program_mlp``, bitwise-identical
+    conductances to :class:`AnalogueBackend`).
+
+    ``program`` is the one-time deployment step — run it once per set of
+    weights (outside any per-request jit) so the frozen conductances are
+    concrete, like a physical array would be; serving then closes over
+    them.  ``storage="uint8"`` deploys the 6-bit level indices instead
+    of float conductances (4x less stationary weight traffic, dequant
+    fused into the MXU feed; requires ``prog_noise=0``).
+
+    Read noise (``spec.read_noise``) is re-sampled per crossbar
+    evaluation from a counter-derived stream keyed on ``read_seed`` —
+    deterministic and replayable, but a *different* sequence from the
+    ``jax.random`` stream of :class:`AnalogueBackend` (equal in
+    distribution, not bitwise).
+
+    Inference-only: the analogue substrate does not backpropagate (the
+    paper trains digitally, then deploys), so every gradient mode
+    detaches; and always float32 — conductances are physical quantities,
+    the mixed-precision policies do not apply.
+
+    ``apply`` (single vector-field evaluations) keeps the jnp simulator
+    path of the programmed field — only the rollouts are fused.
+    """
+
+    name = "analogue_fused"
+    spec: AnalogueSpec = AnalogueSpec()
+    prog_key: Optional[jax.Array] = None
+    read_seed: int = 0
+    storage: str = "float"          # "float" | "uint8" level indices
+
+    # -- deployment --------------------------------------------------------
+    def program(self, field: Callable, params: Pytree) -> ExecState:
+        if self.storage not in ("float", "uint8"):
+            raise ValueError(
+                f"FusedAnalogueBackend storage={self.storage!r}; have "
+                f"'float', 'uint8'")
+        if params is None:
+            raise ValueError(
+                "FusedAnalogueBackend needs params to program the "
+                "crossbars")
+        key = (self.prog_key if self.prog_key is not None
+               else jax.random.PRNGKey(0))
+        progs = tuple(program_mlp(key, params, self.spec))
+        staged = {
+            "scales": jnp.stack([p["scale"] for p in progs]),
+            "g_step": None,
+            "g_min": self.spec.g_min,
+            "v_clamp": self.spec.v_clamp,
+        }
+        if self.storage == "uint8":
+            progs = tuple(stage_uint8(p, self.spec) for p in progs)
+            staged["gps"] = [p["gp_idx"] for p in progs]
+            staged["gms"] = [p["gm_idx"] for p in progs]
+            staged["g_step"] = ((self.spec.g_max - self.spec.g_min)
+                                / (self.spec.levels - 1))
+        else:
+            staged["gps"] = [p["gp"].astype(jnp.float32) for p in progs]
+            staged["gms"] = [p["gm"].astype(jnp.float32) for p in progs]
+        a_field = AnalogueMLPVectorField(
+            progs=progs, spec=self.spec,
+            drive=getattr(field, "drive", None), key=None)
+        return ExecState(field=a_field, params=None, extra=staged)
+
+    # -- execution ---------------------------------------------------------
+    def _solve(self, state: ExecState, y0s, uh, dt, bt, gradient,
+               precision=None):
+        """Dispatch the fused analogue solve.  ``gradient`` is ignored
+        (always detached — see class docstring) and so is ``precision``
+        (the substrate is float32)."""
+        del gradient, precision
+        from repro.kernels import ops
+        return ops.fused_analogue_rollout(
+            state.extra, y0s, uh, dt, batch_tile=bt,
+            time_chunk=self.time_chunk, interpret=self.interpret,
+            vmem_budget_bytes=self.vmem_budget_bytes,
+            read_noise=self.spec.read_noise, noise_seed=self.read_seed)
+
+
 DEFAULT_BACKEND = DigitalBackend()
 
 #: Registry of substrate names accepted anywhere a Backend is expected
@@ -418,6 +520,7 @@ BACKENDS = {
     "digital": DigitalBackend,
     "analogue": AnalogueBackend,
     "fused_pallas": FusedPallasBackend,
+    "analogue_fused": FusedAnalogueBackend,
 }
 
 

@@ -85,6 +85,29 @@ def _e_mac_pj(hidden: int) -> float:
     return max(E_MAC_A_PJ / hidden + E_MAC_B_PJ, E_MAC_FLOOR_PJ)
 
 
+def project_from_macs(system: str, macs: float, hidden: int, n_steps: int):
+    """Project (time_us, energy_uj) for a *digital* system from a MAC
+    count — the bridge between this calibrated model and measured op
+    counts (the roofline HLO parser feeds compiled-program MACs straight
+    in here; see :mod:`repro.core.scorecard`).
+
+    ``macs`` is the whole-trajectory count; ``hidden`` only sets the
+    utilisation-dependent energy per MAC; ``n_steps`` sets the per-step
+    launch/framework overhead (``node_gpu`` additionally pays the ODE
+    solver's per-f-eval overhead, 4 per RK4 step).
+    """
+    if system == "analogue_node":
+        raise ValueError(
+            "project_from_macs models digital substrates only — analogue "
+            "time/energy follow array physics, not MAC counts; use "
+            "project()")
+    t_us = macs * T_MAC_US + n_steps * T_EVAL_US
+    if system == "node_gpu":
+        t_us += 4 * n_steps * T_SOLVER_US
+    e_uj = macs * _e_mac_pj(hidden) * 1e-6
+    return t_us, e_uj
+
+
 def project(system: str, hidden: int, in_dim: int = 2, out_dim: int = 1,
             n_layers: int = 3, n_steps: int = 500):
     """Project (time_us, energy_uj) for one inference trajectory.
@@ -103,20 +126,13 @@ def project(system: str, hidden: int, in_dim: int = 2, out_dim: int = 1,
         return t_us, e_uj
     if system == "node_gpu":
         macs = _mlp_macs(sizes) * 4 * n_steps        # RK4: 4 f-evals/step
-        t_us = macs * T_MAC_US + n_steps * T_EVAL_US + 4 * n_steps * T_SOLVER_US
-        e_uj = macs * _e_mac_pj(hidden) * 1e-6
-        return t_us, e_uj
-    if system == "resnet_gpu":
+    elif system == "resnet_gpu":
         macs = _mlp_macs(sizes) * n_steps            # one block/step
-        t_us = macs * T_MAC_US + n_steps * T_EVAL_US
-        e_uj = macs * _e_mac_pj(hidden) * 1e-6
-        return t_us, e_uj
-    if system in _GATES:
+    elif system in _GATES:
         macs = _recurrent_macs(hidden, in_dim, _GATES[system]) * n_steps
-        t_us = macs * T_MAC_US + n_steps * T_EVAL_US
-        e_uj = macs * _e_mac_pj(hidden) * 1e-6
-        return t_us, e_uj
-    raise ValueError(f"unknown system {system!r}")
+    else:
+        raise ValueError(f"unknown system {system!r}")
+    return project_from_macs(system, macs, hidden, n_steps)
 
 
 def gains_table(hidden_sizes, **kw):

@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Active kernels: fused_ode_mlp (+ _bwd), fused_analogue, crossbar_vmm,
+# softdtw, noise (counter-derived streams), all fronted by ops.py with
+# jnp oracles in ref.py.  LM-era kernels that are not part of the
+# neural-ODE twin stack live in legacy/ (technique references only).

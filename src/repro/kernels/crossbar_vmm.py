@@ -8,14 +8,32 @@ Two storage modes:
   * float mode — conductances as float (carries programming noise);
   * quantised mode — uint8 level indices (the device's 6-bit states),
     dequantised on the fly inside the kernel ((idx_p - idx_m) * g_step —
-    the G_min offsets cancel in the differential pair).  This is the
-    memristive analogue of an int-quantised weight GEMM: 4x less weight
-    traffic than f32, dequant fused into the MXU feed.
+    the G_min offsets cancel in the noise-free differential pair).  This
+    is the memristive analogue of an int-quantised weight GEMM: 4x less
+    weight traffic than f32, dequant fused into the MXU feed.
+
+Optional per-read noise: ``read_noise`` > 0 perturbs each conductance
+multiplicatively with a counter-derived Gaussian stream
+(:mod:`repro.kernels.noise`) keyed on ``noise_seed`` and the element's
+global (k, n) coordinates — deterministic, so the same seed reproduces
+the same read bitwise.  In quantised mode the full conductances
+``g_min + idx * g_step`` are reconstructed first, because the G_min
+offsets only cancel when both halves of the pair are noise-free.
 
 Classic (M/bm, N/bn, K/bk) blocked matmul: fp32 accumulator scratch in
 VMEM, K as the innermost (sequential, revisiting) grid dim; the
-differential subtraction, dequant, rescale and clamp are all epilogue-
+differential subtraction, dequant, noise, rescale and clamp are all
 fused so the pair never materialises in HBM.
+
+Padding follows the masked-padding discipline of the fleet tiles
+(:func:`pad_accumulator_neutral`): pad rows/columns must be
+*accumulator-neutral*, i.e. contribute exactly zero partial sums in
+every mode.  Zero-padding alone guarantees that for the noise-free
+paths (0 - 0 = 0 in float mode, (0 - 0) * g_step = 0 in quantised
+mode), but NOT for noisy quantised reads — a zero level index still
+reconstructs to ``g_min`` and the pair's noise does not cancel — so the
+kernel masks reconstructed conductances against the true (K, N) extent
+before accumulating.
 """
 from __future__ import annotations
 
@@ -26,18 +44,69 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.fused_ode_mlp import _default_interpret
+from repro.kernels.noise import counter_normal
 
-def _kernel(x_ref, gp_ref, gm_ref, o_ref, acc_ref, *, nk: int,
-            g_step: float | None, inv_scale: float, clamp: float | None):
+
+def pad_accumulator_neutral(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    """Pad ``axis`` up to a multiple of ``mult`` with accumulator-neutral
+    values (zeros).
+
+    This is the same discipline the fused fleet tiles use
+    (``fused_ode_mlp.pad_fleet_to_tile``): padding must never change what
+    the kernel accumulates for real elements.  For the crossbar operands
+    zero *values* are neutral in both storage modes — float conductances
+    pad as G+ = G- = 0, and uint8 level indices pad as idx_p = idx_m = 0
+    whose dequant ``(0 - 0) * g_step`` is exactly 0.  Reads that
+    reconstruct absolute conductances (the noisy quantised path) must
+    additionally mask by the true extent; the kernel does.
+    """
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _kernel(x_ref, gp_ref, gm_ref, o_ref, acc_ref, *, nk: int, bk: int,
+            bn: int, K: int, N: int, g_step: float | None,
+            g_min: float, inv_scale: float, clamp: float | None,
+            read_noise: float, noise_seed: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     gp = gp_ref[...].astype(jnp.float32)
     gm = gm_ref[...].astype(jnp.float32)
-    g = gp - gm
-    if g_step is not None:          # quantised mode: dequant level indices
-        g = g * g_step
+    if read_noise > 0.0:
+        if g_step is not None:
+            # Quantised storage: reconstruct the absolute conductances —
+            # G_min offsets cancel only in the noise-free pair.
+            gp = g_min + gp * g_step
+            gm = g_min + gm * g_step
+        # One salt per (k-tile, n-tile, pair): the element iota inside
+        # counter_normal then decorrelates within the tile, so the full
+        # (K, N) stream is deterministic in noise_seed alone.
+        salt = (pl.program_id(2) * (2 * 65536)
+                + pl.program_id(1) * 2)
+        gp = gp * (1.0 + read_noise * counter_normal(
+            noise_seed, salt, (bk, bn)))
+        gm = gm * (1.0 + read_noise * counter_normal(
+            noise_seed, salt + 1, (bk, bn)))
+        # Masked-padding discipline: reconstructed pads sit at ~g_min and
+        # their noise does not cancel — zero everything past the true
+        # (K, N) extent so pads stay accumulator-neutral.
+        kk = pl.program_id(2) * bk + jax.lax.broadcasted_iota(
+            jnp.int32, (bk, bn), 0)
+        nn = pl.program_id(1) * bn + jax.lax.broadcasted_iota(
+            jnp.int32, (bk, bn), 1)
+        valid = (kk < K) & (nn < N)
+        g = jnp.where(valid, gp - gm, 0.0)
+    else:
+        g = gp - gm
+        if g_step is not None:      # quantised mode: dequant level indices
+            g = g * g_step
     x = x_ref[...].astype(jnp.float32)
     acc_ref[...] += jnp.dot(x, g, preferred_element_type=jnp.float32)
 
@@ -49,15 +118,6 @@ def _kernel(x_ref, gp_ref, gm_ref, o_ref, acc_ref, *, nk: int,
         o_ref[...] = y.astype(o_ref.dtype)
 
 
-def _pad_to(x, mult, axis):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
 def crossbar_matmul(
     x: jax.Array,          # (M, K)
     gp: jax.Array,         # (K, N) float conductances or uint8 level indices
@@ -66,28 +126,50 @@ def crossbar_matmul(
     inv_scale: float,
     g_step: float | None = None,   # set => quantised (uint8) mode
     clamp: float | None = None,
+    read_noise: float = 0.0,
+    noise_seed: int = 0,
+    g_min: float = 0.0,            # needed for noisy quantised reconstruction
     bm: int = 128, bk: int = 128, bn: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
     out_dtype=jnp.float32,
 ) -> jax.Array:
-    """Fused differential-pair VMM.  Pads every dim to its tile multiple
-    (hardware 8x128 alignment) and slices the result back."""
+    """Fused differential-pair VMM.
+
+    Pads every dim to its tile multiple (hardware 8x128 alignment) with
+    accumulator-neutral values and slices the result back.
+    ``interpret=None`` auto-detects the accelerator (compiled on TPU,
+    interpreter elsewhere; ``REPRO_FORCE_INTERPRET`` pins the mode).
+    ``read_noise`` > 0 applies the deterministic counter-derived read
+    perturbation described in the module docstring.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
     M, K = x.shape
     K2, N = gp.shape
     assert K == K2 and gm.shape == gp.shape
+    if read_noise > 0.0 and g_step is not None and g_min <= 0.0:
+        raise ValueError(
+            "crossbar_matmul: noisy quantised reads need the absolute "
+            "conductance floor — pass g_min > 0 (spec.g_min)")
 
     bm = min(bm, max(8, M))
     bn = min(bn, max(128, 128))
     bk = min(bk, max(128, 128))
-    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
-    gpp = _pad_to(_pad_to(gp, bk, 0), bn, 1)
-    gmp = _pad_to(_pad_to(gm, bk, 0), bn, 1)
+    xp = pad_accumulator_neutral(
+        pad_accumulator_neutral(x, bm, 0), bk, 1)
+    gpp = pad_accumulator_neutral(
+        pad_accumulator_neutral(gp, bk, 0), bn, 1)
+    gmp = pad_accumulator_neutral(
+        pad_accumulator_neutral(gm, bk, 0), bn, 1)
     Mp, Kp = xp.shape
     _, Np = gpp.shape
     nk = Kp // bk
 
-    kernel = functools.partial(_kernel, nk=nk, g_step=g_step,
-                               inv_scale=float(inv_scale), clamp=clamp)
+    kernel = functools.partial(_kernel, nk=nk, bk=bk, bn=bn, K=K, N=N,
+                               g_step=g_step, g_min=float(g_min),
+                               inv_scale=float(inv_scale), clamp=clamp,
+                               read_noise=float(read_noise),
+                               noise_seed=int(noise_seed))
     out = pl.pallas_call(
         kernel,
         grid=(Mp // bm, Np // bn, nk),

@@ -1,0 +1,9 @@
+"""LEGACY kernels — not part of the neural-ODE twin stack.
+
+``flash_attention`` and ``ssm_scan`` are LM-era state-resident kernels
+kept as technique references (online-softmax streaming, chunked
+state-space scan).  Nothing in the twin/fleet/analogue pipeline imports
+them; their parity tests live in ``tests/test_legacy_kernels.py``.  New
+work belongs in the active kernels one package up
+(``fused_ode_mlp``, ``fused_analogue``, ``crossbar_vmm``, ``softdtw``).
+"""

@@ -6,7 +6,7 @@ The pure-XLA flash schedule (models/flash.py) re-materialises the
 every kv step.  Here the accumulator/max/denominator live in VMEM scratch
 across the sequential kv grid dimension and scores never leave VMEM —
 per-layer HBM traffic collapses to Q/K/V in + O out, the same
-state-resident structure as kernels/ssm_scan.py (and the paper's
+state-resident structure as kernels/legacy/ssm_scan.py (and the paper's
 crossbar loop).
 
 Grid: (batch, q_heads, nq, nk) with nk innermost (sequential, scratch

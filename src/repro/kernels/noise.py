@@ -1,0 +1,69 @@
+"""Counter-derived Gaussian noise for in-kernel analogue read modelling.
+
+The analogue substrate re-samples multiplicative read noise on every
+crossbar evaluation.  Inside a Pallas kernel we cannot thread a
+``jax.random`` key through the RK4 loop (keys don't live in VMEM refs and
+splitting is not Mosaic-lowerable), so the kernels derive noise from a
+*counter*: every (seed, salt, element) triple is hashed independently to
+a normal sample.  Properties the kernels rely on:
+
+* deterministic — same seed => bitwise-identical noise, so a noisy
+  analogue rollout is exactly replayable (and its tests are exact);
+* stateless — sample (step t, eval s, layer l, element ij) is a pure
+  function of its coordinates; the reverse-sweep or a resumed chunk
+  regenerates the same stream without carrying RNG state;
+* portable — integer mixing + Box-Muller only, identical results under
+  the Pallas interpreter (CPU/GPU hosts) and the compiled TPU lowering
+  (unlike ``pltpu.prng_random_bits``, which has no interpreter analogue).
+
+The mixer is the splitmix32 finaliser — full avalanche, 4 int ops — and
+uniforms come from the standard exponent-trick bitcast
+(``(bits >> 9) | 0x3f800000`` is a float in [1, 2)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_U32 = jnp.uint32
+
+
+def splitmix32(x: jax.Array) -> jax.Array:
+    """Splitmix32 finaliser: uint32 -> well-mixed uint32 (full avalanche)."""
+    x = jnp.asarray(x, _U32)
+    x = (x ^ (x >> 16)) * _U32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * _U32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def _bits_to_unit(bits: jax.Array) -> jax.Array:
+    """uint32 -> float32 uniform in (0, 1] (never 0, safe under log)."""
+    f = jax.lax.bitcast_convert_type((bits >> 9) | _U32(0x3F800000),
+                                     jnp.float32)
+    return jnp.float32(2.0) - f          # [1,2) -> (0,1]
+
+
+def counter_normal(seed, salt, shape: tuple[int, ...]) -> jax.Array:
+    """Standard-normal float32 samples indexed purely by coordinates.
+
+    ``seed``/``salt`` are python ints or scalar integer arrays (traced is
+    fine); ``shape`` must be static.  Each element's sample is
+    ``BoxMuller(hash(seed, salt, flat_index))`` — decorrelated across
+    elements, salts and seeds by the splitmix32 avalanche.
+    """
+    # Flat element index from per-axis broadcasted iotas — TPU Mosaic has
+    # no 1-D iota, so build the index at the target rank directly (works
+    # identically in the interpreter).
+    idx = jnp.zeros(shape, _U32)
+    stride = 1
+    for axis in range(len(shape) - 1, -1, -1):
+        idx = idx + jax.lax.broadcasted_iota(_U32, shape, axis) * _U32(stride)
+        stride *= int(shape[axis])
+    base = splitmix32(jnp.asarray(seed, _U32) * _U32(0x9E3779B9)
+                      + splitmix32(jnp.asarray(salt, _U32)))
+    h1 = splitmix32(base ^ idx)
+    h2 = splitmix32(h1 ^ _U32(0x85EBCA6B))
+    u1 = _bits_to_unit(h1)
+    u2 = _bits_to_unit(h2)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos(jnp.float32(2.0 * 3.14159265358979) * u2)

@@ -21,6 +21,8 @@ from repro.core.analogue import AnalogueSpec
 from repro.core.losses import BIG, _pairwise_dist
 from repro.kernels import ref
 from repro.kernels.crossbar_vmm import crossbar_matmul as _crossbar_pallas
+from repro.kernels.fused_analogue import (
+    fused_analogue_rollout as _fused_analogue)
 from repro.kernels.fused_ode_mlp import (DEFAULT_VMEM_BUDGET,
                                          _require_float,
                                          fused_node_rollout as _fused_pallas,
@@ -142,25 +144,117 @@ def half_step_drive(drive, ts: jax.Array) -> jax.Array:
 # Crossbar VMM
 # ---------------------------------------------------------------------------
 
+def _require_2d_float(op: str, name: str, x: jax.Array) -> None:
+    x = jnp.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"{op}: {name} must be 2-D, got shape {x.shape}")
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        raise ValueError(
+            f"{op}: {name} has non-floating dtype {x.dtype}; cast it to "
+            f"a floating dtype first")
+
+
 def crossbar_vmm(prog: dict, x: jax.Array, spec: AnalogueSpec,
-                 *, interpret: bool = True) -> jax.Array:
-    """Analogue crossbar read through the fused kernel (float mode)."""
-    return _crossbar_pallas(
+                 *, interpret: bool | None = None,
+                 read_noise: float | None = None,
+                 noise_seed: int = 0) -> jax.Array:
+    """Analogue crossbar read through the fused kernel (float mode).
+
+    ``interpret=None`` auto-detects (compiled on TPU, interpreter
+    elsewhere; ``REPRO_FORCE_INTERPRET`` pins the mode).  ``read_noise``
+    overrides ``spec.read_noise`` (None = take the spec's value) with
+    the deterministic counter-derived stream keyed on ``noise_seed``.
+    """
+    _require_2d_float("crossbar_vmm", "x", x)
+    _require_2d_float("crossbar_vmm", "prog['gp']", prog["gp"])
+    _require_2d_float("crossbar_vmm", "prog['gm']", prog["gm"])
+    sigma = spec.read_noise if read_noise is None else read_noise
+    # scale is traced (programming may run under jit), so the rescale —
+    # and therefore the clamp, which acts in post-scale units — happens
+    # outside the kernel here; the fused rollout kernel, whose scales
+    # ride in as an operand, clamps in-kernel.
+    y = _crossbar_pallas(
         x, prog["gp"], prog["gm"],
-        inv_scale=1.0, g_step=None, clamp=spec.v_clamp,
+        inv_scale=1.0, g_step=None, clamp=None,
+        read_noise=float(sigma), noise_seed=noise_seed,
         interpret=interpret) / prog["scale"]
+    if spec.v_clamp is not None:
+        y = jnp.clip(y, -spec.v_clamp, spec.v_clamp)
+    return y
 
 
 def crossbar_vmm_quantized(x: jax.Array, gp_idx: jax.Array,
                            gm_idx: jax.Array, spec: AnalogueSpec,
                            scale: jax.Array | float,
-                           *, interpret: bool = True) -> jax.Array:
-    """Quantised-storage read: uint8 level indices, dequant fused in-kernel."""
+                           *, interpret: bool | None = None,
+                           read_noise: float | None = None,
+                           noise_seed: int = 0) -> jax.Array:
+    """Quantised-storage read: uint8 level indices, dequant fused in-kernel.
+
+    Same interpret auto-detect and noise contract as ``crossbar_vmm``;
+    noisy reads reconstruct the absolute conductances from
+    ``spec.g_min`` in-kernel (the differential offsets only cancel
+    noise-free).
+    """
+    _require_2d_float("crossbar_vmm_quantized", "x", x)
+    for name, idx in (("gp_idx", gp_idx), ("gm_idx", gm_idx)):
+        idx = jnp.asarray(idx)
+        if idx.ndim != 2 or idx.dtype != jnp.uint8:
+            raise ValueError(
+                f"crossbar_vmm_quantized: {name} must be 2-D uint8 level "
+                f"indices, got shape {idx.shape} dtype {idx.dtype}")
+    sigma = spec.read_noise if read_noise is None else read_noise
     g_step = (spec.g_max - spec.g_min) / (spec.levels - 1)
     y = _crossbar_pallas(x, gp_idx, gm_idx, inv_scale=1.0,
-                         g_step=float(g_step), clamp=spec.v_clamp,
-                         interpret=interpret)
-    return y / scale
+                         g_step=float(g_step), clamp=None,
+                         read_noise=float(sigma), noise_seed=noise_seed,
+                         g_min=spec.g_min, interpret=interpret) / scale
+    if spec.v_clamp is not None:
+        y = jnp.clip(y, -spec.v_clamp, spec.v_clamp)
+    return y
+
+
+def fused_analogue_rollout(staged: dict, y0: jax.Array, u_half: jax.Array,
+                           dt: float, *, batch_tile: int = 64,
+                           time_chunk: int | None = None,
+                           interpret: bool | None = None,
+                           vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
+                           read_noise: float = 0.0,
+                           noise_seed: int = 0) -> jax.Array:
+    """Whole-trajectory analogue RK4 solve on the fused crossbar kernel.
+
+    ``staged`` is the deployment dict built by
+    ``FusedAnalogueBackend.program`` (or assembled by hand):
+
+      gps, gms — per-layer (K_l+1, N_l) conductance pairs, float32 or
+                 uint8 level indices (bias folded as the last row);
+      scales   — (L,) per-tensor programming scales;
+      g_step   — dequant step for uint8 storage (None = float);
+      g_min    — conductance floor (needed for noisy quantised reads);
+      v_clamp  — optional peripheral output clamp.
+
+    The solve is inference-only (the analogue substrate does not
+    backpropagate — train digitally, deploy analogue): all inputs are
+    detached and the trajectory returns with zero cotangent.  See
+    :mod:`repro.kernels.fused_analogue` for the kernel itself and the
+    deterministic read-noise stream.
+    """
+    _require_2d_float("fused_analogue_rollout", "y0", y0)
+    if not jnp.issubdtype(jnp.asarray(u_half).dtype, jnp.floating):
+        raise ValueError(
+            f"fused_analogue_rollout: u_half has non-floating dtype "
+            f"{jnp.asarray(u_half).dtype}; cast it to a floating dtype")
+    out = _fused_analogue(
+        [lax.stop_gradient(g) for g in staged["gps"]],
+        [lax.stop_gradient(g) for g in staged["gms"]],
+        lax.stop_gradient(jnp.asarray(staged["scales"])),
+        lax.stop_gradient(y0), lax.stop_gradient(u_half), float(dt),
+        g_step=staged.get("g_step"), g_min=staged.get("g_min", 0.0),
+        v_clamp=staged.get("v_clamp"), read_noise=float(read_noise),
+        noise_seed=int(noise_seed), batch_tile=batch_tile,
+        time_chunk=time_chunk, interpret=interpret,
+        vmem_budget_bytes=vmem_budget_bytes)
+    return lax.stop_gradient(out)
 
 
 def quantize_to_levels(w: jax.Array, spec: AnalogueSpec):

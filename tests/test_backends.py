@@ -413,3 +413,142 @@ def test_digital_backend_adjoint_gradients(hp_setup):
     flat = jax.tree_util.tree_leaves(grads)
     assert all(jnp.all(jnp.isfinite(g)) for g in flat)
     assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+# ---------------------------------------------------------------------------
+# (g) fused-analogue backend: crossbar semantics on the fused kernel
+# ---------------------------------------------------------------------------
+
+QUANT_CLEAN = AnalogueSpec(prog_noise=0.0)   # quantised, no noise
+
+
+def test_resolve_analogue_fused():
+    from repro.core.backends import BACKENDS, FusedAnalogueBackend
+    assert "analogue_fused" in BACKENDS
+    assert isinstance(resolve_backend("analogue_fused"),
+                      FusedAnalogueBackend)
+
+
+def _analogue_pair(twin, params, spec, **fused_kw):
+    """(jnp-sim state+backend, fused state+backend) with the SAME
+    programming key — bitwise-identical crossbar programs."""
+    from repro.core.backends import FusedAnalogueBackend
+    sim = AnalogueBackend(spec=spec, prog_key=KEY)
+    fused = FusedAnalogueBackend(spec=spec, prog_key=KEY, **fused_kw)
+    return (sim, sim.program(twin.node.field, params),
+            fused, fused.program(twin.node.field, params))
+
+
+def test_analogue_fused_matches_sim_hp(hp_setup):
+    """Noise-free fused rollout == jnp crossbar simulator (<=1e-5 rel)."""
+    twin, params, y0, ts = hp_setup
+    sim, st_s, fused, st_f = _analogue_pair(twin, params, QUANT_CLEAN)
+    want = sim.rollout(st_s, y0, ts)
+    got = fused.rollout(st_f, y0, ts)
+    rel = float(jnp.abs(got - want).max() / jnp.abs(want).max())
+    assert rel <= 1e-5
+
+
+def test_analogue_fused_matches_sim_l96(l96_setup):
+    twin, params, y0, ts = l96_setup
+    sim, st_s, fused, st_f = _analogue_pair(twin, params, QUANT_CLEAN)
+    want = sim.rollout(st_s, y0, ts)
+    got = fused.rollout(st_f, y0, ts)
+    rel = float(jnp.abs(got - want).max() / jnp.abs(want).max())
+    assert rel <= 1e-5
+
+
+def test_analogue_fused_uint8_matches_float(hp_setup):
+    """Noise-free conductances sit exactly ON the 6-bit level grid, so
+    the uint8 level-index deployment represents the float program
+    exactly; the rollouts agree to float32 rounding (the dequant
+    computes (i - j) * step where float mode subtracts the absolute
+    conductances — one ulp apart)."""
+    twin, params, y0, ts = hp_setup
+    _, _, f_float, st_float = _analogue_pair(twin, params, QUANT_CLEAN)
+    _, _, f_u8, st_u8 = _analogue_pair(twin, params, QUANT_CLEAN,
+                                       storage="uint8")
+    assert st_u8.extra["gps"][0].dtype == jnp.uint8
+    a = f_float.rollout(st_float, y0, ts)
+    b = f_u8.rollout(st_u8, y0, ts)
+    rel = float(jnp.abs(a - b).max() / jnp.abs(a).max())
+    assert rel <= 1e-6
+
+
+def test_analogue_fused_fleet_per_twin_drives(hp_setup):
+    """Fleet tiling + per-twin drives on the fused-analogue grid must
+    match the jnp simulator's vmap path."""
+    from repro.core.backends import FusedAnalogueBackend
+    twin, params, _, ts = hp_setup
+
+    def family(t, theta):
+        return theta[0] * jnp.sin(theta[1] * t)
+
+    y0s = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 11), (4, 1))
+    thetas = jnp.array([[1.0, 4.0], [0.5, 8.0], [2.0, 2.0], [1.5, 6.0]])
+    fleet = TwinFleet(twin, drive_family=family)
+    sim = fleet.with_backend(
+        AnalogueBackend(spec=QUANT_CLEAN, prog_key=KEY)).simulate(
+            params, y0s, ts, thetas)
+    fused = fleet.with_backend(
+        FusedAnalogueBackend(spec=QUANT_CLEAN, prog_key=KEY,
+                             batch_tile=2)).simulate(
+            params, y0s, ts, thetas)
+    np.testing.assert_allclose(fused, sim, atol=1e-5, rtol=1e-5)
+
+
+def test_analogue_fused_read_noise_deterministic(hp_setup):
+    """Counter-derived read noise: same seed => bitwise-identical
+    rollout; different seed => different trajectory; noise visibly
+    perturbs vs the clean solve."""
+    import dataclasses
+    from repro.core.backends import FusedAnalogueBackend
+    twin, params, y0, ts = hp_setup
+    spec = AnalogueSpec(prog_noise=0.0, read_noise=0.01)
+    be = FusedAnalogueBackend(spec=spec, prog_key=KEY, read_seed=42)
+    st = be.program(twin.node.field, params)
+    o1 = be.rollout(st, y0, ts)
+    o2 = be.rollout(st, y0, ts)
+    assert jnp.array_equal(o1, o2)
+    be2 = dataclasses.replace(be, read_seed=43)
+    o3 = be2.rollout(be2.program(twin.node.field, params), y0, ts)
+    assert not jnp.array_equal(o1, o3)
+    clean = FusedAnalogueBackend(spec=QUANT_CLEAN, prog_key=KEY)
+    o_clean = clean.rollout(clean.program(twin.node.field, params), y0, ts)
+    assert float(jnp.abs(o1 - o_clean).max()) > 0.0
+
+
+def test_analogue_fused_is_detached(hp_setup):
+    """The analogue substrate is inference-only: gradients through the
+    fused rollout are zero, never an error."""
+    from repro.core.backends import FusedAnalogueBackend
+    twin, params, y0, ts = hp_setup
+    be = FusedAnalogueBackend(spec=QUANT_CLEAN, prog_key=KEY)
+    st = be.program(twin.node.field, params)
+
+    g = jax.grad(lambda y: jnp.sum(be.rollout(st, y, ts) ** 2))(y0)
+    assert float(jnp.abs(g).max()) == 0.0
+
+
+@pytest.mark.parametrize("bad,match", [
+    (jnp.array([[1, 2], [3, 4]]), "non-floating"),
+    (jnp.array([[jnp.nan, 1.0], [0.0, 2.0]]), "NaN"),
+])
+def test_analogue_programming_validation(bad, match):
+    """Programming rejects unprogrammable weights with an error naming
+    the offending input."""
+    from repro.core.analogue import program_tensor
+    with pytest.raises(ValueError, match=match):
+        program_tensor(KEY, bad, QUANT_CLEAN, name="w_bad")
+    try:
+        program_tensor(KEY, bad, QUANT_CLEAN, name="w_bad")
+    except ValueError as e:
+        assert "w_bad" in str(e)
+
+
+def test_analogue_fused_storage_validation(hp_setup):
+    from repro.core.backends import FusedAnalogueBackend
+    twin, params, _, _ = hp_setup
+    be = FusedAnalogueBackend(spec=QUANT_CLEAN, storage="int4")
+    with pytest.raises(ValueError, match="storage"):
+        be.program(twin.node.field, params)

@@ -1,0 +1,95 @@
+"""Energy scorecard: paper anchors (CI-gated) + HLO-count plumbing."""
+import pytest
+
+from repro.core import energy, scorecard
+
+
+# ---------------------------------------------------------------------------
+# anchor gates — the paper's four headline ratios within 20%
+# ---------------------------------------------------------------------------
+
+def test_anchor_rows_within_tolerance():
+    rows = scorecard.assert_anchors()          # raises on drift
+    assert len(rows) == 4
+    names = {(r["workload"], r["name"]) for r in rows}
+    assert names == {
+        ("hp", "speedup_vs_node_gpu"),
+        ("hp", "energy_gain_vs_node_gpu"),
+        ("lorenz96", "speed_gain_vs_node_gpu"),
+        ("lorenz96", "energy_gain_vs_node_gpu"),
+    }
+    for r in rows:
+        assert r["within_tol"] and r["rel_err"] <= scorecard.ANCHOR_TOL
+
+
+def test_assert_anchors_raises_on_drift():
+    rows = scorecard.anchor_rows()
+    rows[0] = dict(rows[0], within_tol=False, rel_err=0.5)
+    with pytest.raises(AssertionError, match="out of tolerance"):
+        scorecard.assert_anchors(rows)
+
+
+def test_project_from_macs_matches_project():
+    """The factored digital projection must reproduce project() when fed
+    the analytic MAC count."""
+    for system, hidden in [("node_gpu", 64), ("resnet_gpu", 64),
+                           ("lstm_gpu", 512)]:
+        t_ref, e_ref = energy.project(system, hidden, in_dim=2, out_dim=1,
+                                      n_layers=3, n_steps=500)
+        sizes = [2, hidden, hidden, 1]
+        if system == "node_gpu":
+            macs = sum(a * b for a, b in zip(sizes[:-1], sizes[1:])) * 4 * 500
+        elif system == "resnet_gpu":
+            macs = sum(a * b for a, b in zip(sizes[:-1], sizes[1:])) * 500
+        else:
+            macs = 4.0 * hidden * (hidden + 2) * 500
+        t, e = energy.project_from_macs(system, macs, hidden, 500)
+        assert t == pytest.approx(t_ref)
+        assert e == pytest.approx(e_ref)
+
+
+def test_project_from_macs_rejects_analogue():
+    with pytest.raises(ValueError, match="digital"):
+        energy.project_from_macs("analogue_node", 1e6, 64, 500)
+
+
+# ---------------------------------------------------------------------------
+# HLO plumbing — small sizes, all four backends
+# ---------------------------------------------------------------------------
+
+def test_backend_rows_small_plumbing():
+    """Compile + parse every registered substrate at plumbing size; the
+    digital backend's measured MACs must equal the analytic count
+    exactly, and the analogue simulator's must show the differential
+    pair's ~2x."""
+    rows = scorecard.backend_rows(workloads=[scorecard.HP], hidden=16,
+                                  n_steps=10)
+    by_name = {r["backend"]: r for r in rows}
+    assert set(by_name) == {"digital", "analogue", "fused_pallas",
+                            "analogue_fused"}
+    dig = by_name["digital"]
+    assert dig["hlo"]["macs"] == pytest.approx(dig["model_macs"])
+    ana = by_name["analogue"]
+    assert ana["hlo"]["macs"] > 1.5 * ana["model_macs"]
+    for r in rows:
+        assert r["projected"]["time_us"] > 0
+        assert r["projected"]["energy_uj"] > 0
+        assert r["substrate"] == scorecard.BACKEND_SUBSTRATE[r["backend"]]
+    # analogue substrates project from array physics -> identical rows
+    assert (by_name["analogue"]["projected"]
+            == by_name["analogue_fused"]["projected"])
+
+
+def test_scorecard_shape_without_measurement():
+    sc = scorecard.scorecard(measure=False)
+    assert len(sc["anchors"]) == 4
+    assert len(sc["backends"]) == 2 * len(scorecard.BACKEND_SUBSTRATE)
+    for r in sc["backends"]:
+        assert "hlo" not in r and "projected" in r
+
+
+def test_workload_definitions_match_paper():
+    assert scorecard.HP.mlp_sizes() == (2, 64, 64, 1)
+    assert scorecard.HP.n_steps == 500
+    assert scorecard.LORENZ96.mlp_sizes() == (6, 512, 512, 6)
+    assert scorecard.LORENZ96.n_steps == 1800

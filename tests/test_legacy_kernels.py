@@ -1,0 +1,101 @@
+"""Parity tests for the LEGACY LM-era kernels (repro.kernels.legacy).
+
+These kernels are technique references only — nothing in the
+twin/fleet/analogue pipeline uses them; see the legacy package
+docstring.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+# ---------------------------------------------------------------------------
+# state-resident SSM scan (Mamba recurrence)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bsz,s,di,n,d_tile", [
+    (1, 8, 16, 4, 16), (2, 32, 64, 16, 32), (1, 64, 128, 16, 128),
+])
+def test_ssm_scan_matches_ref(bsz, s, di, n, d_tile):
+    from repro.kernels.legacy.ssm_scan import ssm_scan, ssm_scan_ref
+    key = jax.random.PRNGKey(di + s)
+    ks = jax.random.split(key, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (bsz, s, di))) * 0.1
+    b = jax.random.normal(ks[1], (bsz, s, n))
+    c = jax.random.normal(ks[2], (bsz, s, n))
+    x = jax.random.normal(ks[3], (bsz, s, di))
+    a = -jnp.exp(jax.random.normal(ks[4], (di, n)) * 0.3)
+    yk, hk = ssm_scan(dt, b, c, x, a, d_tile=d_tile)
+    yr, hr = ssm_scan_ref(dt, b, c, x, a)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ssm_scan_matches_mamba_prefill_core():
+    """The kernel must agree with the model's chunked-scan mamba path."""
+    from repro.kernels.legacy.ssm_scan import ssm_scan
+    from repro.models.mamba import MambaConfig, mamba_init, mamba_prefill
+    cfg = MambaConfig(d_model=32, d_state=4, d_conv=4, expand=2, chunk=8)
+    params = mamba_init(jax.random.PRNGKey(0), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    out_model, state = mamba_prefill(params, cfg, u)
+    # recompute y via the kernel on the same intermediate quantities
+    import repro.models.mamba as M
+    xz = u @ params["in_proj"]
+    x_, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(M._causal_conv(params, cfg, x_))
+    dt, b_, c_ = M._dbc(params, cfg, xc)
+    a = -jnp.exp(params["A_log"])
+    yk, hk = ssm_scan(dt, b_, c_, xc.astype(jnp.float32), a, d_tile=64)
+    y = yk + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(u.dtype) * jax.nn.silu(z)
+    out_kernel = y @ params["out_proj"]
+    np.testing.assert_allclose(np.asarray(out_kernel),
+                               np.asarray(out_model), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(state["ssm"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused causal flash attention (VMEM-resident accumulator)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,s,d,bq,bk", [
+    (1, 2, 2, 32, 16, 16, 16),
+    (2, 4, 2, 64, 32, 32, 16),   # GQA group 2
+    (1, 8, 2, 128, 64, 64, 64),  # GQA group 4
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_pallas_matches_ref(b, h, hkv, s, d, bq, bk, dtype):
+    from repro.kernels.legacy.flash_attention import (
+        flash_attention_pallas, flash_attention_pallas_ref)
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    out = flash_attention_pallas(q, k, v, bq=bq, bk=bk)
+    ref = flash_attention_pallas_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_pallas_matches_model_flash():
+    """Kernel vs the XLA flash schedule used by the models."""
+    from repro.kernels.legacy.flash_attention import flash_attention_pallas
+    from repro.models.flash import flash_attention
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, h, hkv, s, d = 1, 4, 2, 64, 32
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    xla_out = flash_attention([q], [k], v, scale=d ** -0.5,
+                              q_chunk=16, kv_chunk=16)
+    kern_out = flash_attention_pallas(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                      v.swapaxes(1, 2), bq=16, bk=16)
+    np.testing.assert_allclose(np.asarray(kern_out.swapaxes(1, 2)),
+                               np.asarray(xla_out), rtol=2e-5, atol=2e-5)
