@@ -38,6 +38,23 @@ class AnalogueSpec:
     v_clamp: Optional[float] = None  # output clamp (model units), None = off
     quantize: bool = True
 
+    def __post_init__(self):
+        # Degenerate-but-positive ranges (g_on ~ g_off) are legal — they
+        # model a worn array and the fault tests exercise them — but a
+        # zero/negative range has no differential representation at all.
+        if not self.g_max > self.g_min:
+            raise ValueError(
+                f"AnalogueSpec: g_max ({self.g_max}) must exceed g_min "
+                f"({self.g_min}); the differential range g_max - g_min "
+                f"is the weight-mapping denominator")
+        if self.levels < 2:
+            raise ValueError(
+                f"AnalogueSpec: levels must be >= 2, got {self.levels}")
+        if self.prog_noise < 0 or self.read_noise < 0:
+            raise ValueError(
+                f"AnalogueSpec: noise sigmas must be >= 0, got "
+                f"prog_noise={self.prog_noise} read_noise={self.read_noise}")
+
 
 def weight_scale(w: jax.Array, spec: AnalogueSpec) -> jax.Array:
     """Per-tensor scale mapping max|w| to the full differential range."""
@@ -221,6 +238,182 @@ def stage_uint8(prog: dict, spec: AnalogueSpec) -> dict:
     to_idx = lambda g: jnp.clip(jnp.round((g - spec.g_min) / step),
                                 0, spec.levels - 1).astype(jnp.uint8)
     return dict(prog, gp_idx=to_idx(prog["gp"]), gm_idx=to_idx(prog["gm"]))
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop write–verify programming (read-back, retry, repair report)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VerifyConfig:
+    """Write–verify loop knobs.
+
+    ``tol`` is the per-cell acceptance threshold on the *differential*
+    read-back error, in units of the full conductance range (the same
+    normalisation as :func:`programming_error`); the default is one
+    quantisation step of a 6-bit array.  ``backoff`` shrinks the write
+    pulse's noise sigma each retry — the physics of fine-tuning pulses:
+    later pulses move the filament less, so they land more precisely.
+    """
+    tol: float = 1.0 / 63.0
+    max_retries: int = 6
+    backoff: float = 0.5
+
+    def __post_init__(self):
+        if self.tol <= 0:
+            raise ValueError(f"VerifyConfig.tol must be > 0, got {self.tol}")
+        if self.max_retries < 0:
+            raise ValueError(f"VerifyConfig.max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+        if not 0.0 < self.backoff <= 1.0:
+            raise ValueError(f"VerifyConfig.backoff must be in (0, 1], "
+                             f"got {self.backoff}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairReport:
+    """What write–verify could and could not fix for one tensor.
+
+    ``unrepairable`` marks cells still outside tolerance after the last
+    retry — with stuck faults these are cells whose partner-device
+    compensation clipped against the conductance range.
+    ``projected_rollout_error`` is the first-order estimate of the
+    rollout impact: ``||W_realised - W||_F / ||W||_F`` (realised weights
+    read back in weight units).  Fields are arrays when programming runs
+    traced (inside jit) and concrete numbers otherwise.
+    """
+    name: str
+    attempts: int
+    tol: float
+    unrepairable: jax.Array        # bool, weight-shaped
+    n_cells: int
+    n_unrepairable: jax.Array      # int32 scalar
+    max_error: jax.Array           # float32, programming_error units
+    mean_error: jax.Array
+    projected_rollout_error: jax.Array
+
+    def summary(self) -> dict:
+        """Plain-python scalars for logs / bench artifacts (concrete
+        reports only)."""
+        return {
+            "name": self.name,
+            "attempts": int(self.attempts),
+            "n_cells": int(self.n_cells),
+            "n_unrepairable": int(self.n_unrepairable),
+            "max_error": float(self.max_error),
+            "mean_error": float(self.mean_error),
+            "projected_rollout_error": float(self.projected_rollout_error),
+        }
+
+
+def _simulate_write(key: jax.Array, current: jax.Array, target: jax.Array,
+                    sigma: float, spec: AnalogueSpec, faults,
+                    salt: int) -> jax.Array:
+    """One programming pulse against the (simulated) faulty physics:
+    quantise the target, land with multiplicative noise ``sigma``, keep
+    the previous state where the pulse failed to switch, and pin stuck
+    cells — the same stuck stream the kernels re-derive in-kernel."""
+    g = quantize_conductance(target, spec)
+    if sigma > 0:
+        g = g * (1.0 + sigma * jax.random.normal(key, g.shape))
+        g = jnp.clip(g, 0.0, spec.g_max * 1.5)
+    if faults is not None and faults.write_fail_rate > 0:
+        u = jax.random.uniform(jax.random.fold_in(key, 0x57F), g.shape)
+        g = jnp.where(u < faults.write_fail_rate, current, g)
+    if faults is not None and faults.stuck_rate > 0:
+        from repro.core.faults import apply_stuck
+        g = apply_stuck(g, faults.seed, salt, faults.stuck_rate,
+                        faults.stuck.on_frac, spec.g_max, spec.g_min)
+    return g
+
+
+def program_with_verify(key: jax.Array, w: jax.Array, spec: AnalogueSpec,
+                        *, faults=None, verify: VerifyConfig = VerifyConfig(),
+                        name: str = "w", layer: int = 0):
+    """Closed-loop programming: write, read back, retry out-of-tolerance
+    cells, report what stayed broken.
+
+    Each retry re-reads the realised differential conductance and
+    rewrites only the failing cells, alternating which side of the pair
+    it corrects (G+ on even retries, G- on odd) — the rewritten side is
+    retargeted against the *actual* value of its partner, so a stuck G+
+    is compensated by moving G- to ``G+_stuck - scale*w`` (clipped to the
+    device range; cells where the clip bites are the unrepairable ones).
+    Write noise backs off geometrically per retry
+    (``sigma_k = prog_noise * backoff**k``), modelling fine-tuning
+    pulses.  jit-safe: when ``w`` is traced the loop runs all
+    ``max_retries`` iterations with masked updates; concrete programming
+    exits as soon as every cell verifies.
+
+    Returns ``(prog, report)`` where ``prog`` is a standard program dict
+    (drop-in for :func:`analogue_matmul`) and ``report`` is a
+    :class:`RepairReport`.
+    """
+    from repro.core.faults import fault_salt
+    gp_t, gm_t, scale = conductance_pair(w, spec, name)
+    gp_t = quantize_conductance(gp_t, spec)
+    gm_t = quantize_conductance(gm_t, spec)
+    target = gp_t - gm_t
+    g_range = spec.g_max - spec.g_min
+    salt_p, salt_m = fault_salt(layer, 0), fault_salt(layer, 1)
+    traced = isinstance(jnp.asarray(w), jax.core.Tracer)
+
+    # Initial pulses from the pristine (erased, g_min) array.
+    key, kp, km = jax.random.split(key, 3)
+    pristine = jnp.full_like(gp_t, spec.g_min)
+    gp = _simulate_write(kp, pristine, gp_t, spec.prog_noise, spec,
+                         faults, salt_p)
+    gm = _simulate_write(km, pristine, gm_t, spec.prog_noise, spec,
+                         faults, salt_m)
+
+    attempts = 1
+    for k in range(verify.max_retries):
+        err = jnp.abs((gp - gm) - target) / g_range
+        need = err > verify.tol
+        if not traced and not bool(need.any()):
+            break
+        attempts += 1
+        sigma = spec.prog_noise * verify.backoff ** (k + 1)
+        key, kw = jax.random.split(key)
+        if k % 2 == 0:
+            # retarget G+ against the partner's actual value
+            want = jnp.clip(gm + target, spec.g_min, spec.g_max)
+            wrote = _simulate_write(kw, gp, want, sigma, spec, faults, salt_p)
+            gp = jnp.where(need, wrote, gp)
+        else:
+            want = jnp.clip(gp - target, spec.g_min, spec.g_max)
+            wrote = _simulate_write(kw, gm, want, sigma, spec, faults, salt_m)
+            gm = jnp.where(need, wrote, gm)
+
+    err = jnp.abs((gp - gm) - target) / g_range
+    unrepairable = err > verify.tol
+    w_realised = (gp - gm) / scale
+    w_norm = jnp.maximum(jnp.linalg.norm(jnp.ravel(w)), 1e-12)
+    report = RepairReport(
+        name=name, attempts=attempts, tol=verify.tol,
+        unrepairable=unrepairable, n_cells=int(w.size),
+        n_unrepairable=jnp.sum(unrepairable).astype(jnp.int32),
+        max_error=jnp.max(err), mean_error=jnp.mean(err),
+        projected_rollout_error=(
+            jnp.linalg.norm(jnp.ravel(w_realised - w)) / w_norm))
+    return {"gp": gp, "gm": gm, "scale": scale}, report
+
+
+def program_mlp_with_verify(key: jax.Array, params: list[dict],
+                            spec: AnalogueSpec, *, faults=None,
+                            verify: VerifyConfig = VerifyConfig()):
+    """Per-layer :func:`program_with_verify` over an MLP (bias folded as
+    the constant-1 row, as in :func:`program_mlp`).  Returns
+    ``(progs, reports)``."""
+    keys = jax.random.split(key, len(params))
+    progs, reports = [], []
+    for i, (k, layer) in enumerate(zip(keys, params)):
+        prog, rep = program_with_verify(
+            k, _fold_bias(layer), spec, faults=faults, verify=verify,
+            name=f"params[{i}] (w|b folded)", layer=i)
+        progs.append(prog)
+        reports.append(rep)
+    return progs, reports
 
 
 def analogue_mlp_apply(progs: list[dict], x: jax.Array, spec: AnalogueSpec,

@@ -43,7 +43,9 @@ import numpy as np
 
 from repro.core.adjoint import odeint_adjoint
 from repro.core.analogue import (AnalogueMLPVectorField, AnalogueSpec,
-                                 program_mlp, stage_uint8)
+                                 VerifyConfig, program_mlp,
+                                 program_mlp_with_verify, stage_uint8)
+from repro.core.faults import FaultModel, apply_faults_to_mlp
 from repro.core.ode import make_odeint, odeint
 from repro.kernels.fused_ode_mlp import DEFAULT_VMEM_BUDGET
 
@@ -216,6 +218,18 @@ class AnalogueBackend(BaseBackend):
     the level grid): large noise-free reads then execute on the blocked
     Pallas kernel with dequant fused into the MXU feed instead of
     reading float conductances (see ``analogue_matmul``'s dispatch).
+
+    Robustness knobs (see :mod:`repro.core.faults` and
+    ``docs/robustness.md``): ``faults`` degrades the array with the
+    composed device-fault model — stuck cells pinned, single-pulse write
+    failures, and a conductance-drift snapshot after ``n_reads``
+    evaluations; ``verify`` switches programming to the closed-loop
+    write–verify routine (:func:`repro.core.analogue.program_with_verify`
+    — read-back, bounded retry with backoff, differential-pair remap of
+    stuck cells).  Either one makes ``program`` simulate the write
+    physics pulse-by-pulse and surface the per-layer
+    :class:`repro.core.analogue.RepairReport` list through
+    ``ExecState.extra["repair_reports"]``.
     """
 
     name = "analogue"
@@ -224,13 +238,23 @@ class AnalogueBackend(BaseBackend):
     read_key: Optional[jax.Array] = None
     progs: Optional[tuple] = None
     storage: str = "float"          # "float" | "uint8" level indices
+    faults: Optional[FaultModel] = None
+    verify: Optional[VerifyConfig] = None
+    n_reads: int = 0                # drift snapshot: reads already served
 
     def program(self, field: Callable, params: Pytree) -> ExecState:
         if self.storage not in ("float", "uint8"):
             raise ValueError(
                 f"AnalogueBackend storage={self.storage!r}; have "
                 f"'float', 'uint8'")
-        progs = self.progs
+        if (self.storage == "uint8" and self.faults is not None
+                and self.faults.drift is not None):
+            raise ValueError(
+                "AnalogueBackend: conductance drift moves cells off the "
+                "6-bit level grid, so storage='uint8' cannot carry a "
+                "drift snapshot — use float storage, or "
+                "FusedAnalogueBackend whose kernel drifts in-kernel")
+        progs, reports = self.progs, None
         if progs is None:
             if params is None:
                 raise ValueError(
@@ -238,13 +262,29 @@ class AnalogueBackend(BaseBackend):
                     "(or pre-programmed `progs`)")
             key = (self.prog_key if self.prog_key is not None
                    else jax.random.PRNGKey(0))
-            progs = tuple(program_mlp(key, params, self.spec))
+            if self.faults is not None or self.verify is not None:
+                # One code path simulates the write physics: 'naive'
+                # faulty programming is the same routine with zero
+                # retries (a single uncorrected pulse train).
+                vc = (self.verify if self.verify is not None
+                      else VerifyConfig(max_retries=0))
+                progs, reports = program_mlp_with_verify(
+                    key, params, self.spec, faults=self.faults, verify=vc)
+                progs = tuple(progs)
+                if self.faults is not None and self.faults.drift is not None:
+                    drift_only = dataclasses.replace(
+                        self.faults, stuck=None, write_fail=None)
+                    progs = tuple(apply_faults_to_mlp(
+                        progs, drift_only, self.spec, n_reads=self.n_reads))
+            else:
+                progs = tuple(program_mlp(key, params, self.spec))
         if self.storage == "uint8":
             progs = tuple(stage_uint8(p, self.spec) for p in progs)
         a_field = AnalogueMLPVectorField(
             progs=progs, spec=self.spec,
             drive=getattr(field, "drive", None), key=self.read_key)
-        return ExecState(field=a_field, params=None)
+        extra = None if reports is None else {"repair_reports": reports}
+        return ExecState(field=a_field, params=None, extra=extra)
 
 
 # ---------------------------------------------------------------------------
@@ -463,6 +503,9 @@ class FusedAnalogueBackend(FusedPallasBackend):
     prog_key: Optional[jax.Array] = None
     read_seed: int = 0
     storage: str = "float"          # "float" | "uint8" level indices
+    faults: Optional[FaultModel] = None
+    verify: Optional[VerifyConfig] = None
+    n_reads: int = 0                # reads already served before t0 (drift)
 
     # -- deployment --------------------------------------------------------
     def program(self, field: Callable, params: Pytree) -> ExecState:
@@ -476,13 +519,31 @@ class FusedAnalogueBackend(FusedPallasBackend):
                 "crossbars")
         key = (self.prog_key if self.prog_key is not None
                else jax.random.PRNGKey(0))
-        progs = tuple(program_mlp(key, params, self.spec))
+        reports = None
+        if self.faults is not None or self.verify is not None:
+            # Same write-physics simulation as AnalogueBackend: stuck
+            # cells and failed pulses are baked into the deployed
+            # conductances (that IS the physical array); the kernel then
+            # re-derives the same stuck masks in-kernel (idempotent) and
+            # advances the drift decay live with the step count.
+            vc = (self.verify if self.verify is not None
+                  else VerifyConfig(max_retries=0))
+            progs, reports = program_mlp_with_verify(
+                key, params, self.spec, faults=self.faults, verify=vc)
+            progs = tuple(progs)
+        else:
+            progs = tuple(program_mlp(key, params, self.spec))
         staged = {
             "scales": jnp.stack([p["scale"] for p in progs]),
             "g_step": None,
             "g_min": self.spec.g_min,
+            "g_max": self.spec.g_max,
             "v_clamp": self.spec.v_clamp,
         }
+        if self.faults is not None:
+            staged["fault"] = self.faults.kernel_args(self.n_reads)
+        if reports is not None:
+            staged["repair_reports"] = reports
         if self.storage == "uint8":
             progs = tuple(stage_uint8(p, self.spec) for p in progs)
             staged["gps"] = [p["gp_idx"] for p in progs]

@@ -1,0 +1,253 @@
+"""Composable device-fault models for the analogue substrate.
+
+Real memristor crossbars are not the healthy arrays the paper's headline
+numbers assume: cells get stuck at G_on/G_off, conductances relax as
+they are read, and programming pulses fail outright.  This module is the
+single source of truth for those fault mechanisms, shared by three
+consumers that must agree bitwise on *which* cells are faulty:
+
+* program-time injection — :func:`apply_faults_to_prog` degrades a
+  programmed conductance pair the way the physical array would
+  (``AnalogueBackend(faults=...)``, the jnp simulator path);
+* closed-loop repair — :func:`repro.core.analogue.program_with_verify`
+  writes against the same simulated physics (stuck cells ignore writes,
+  write attempts fail stochastically) and reports what it could not fix;
+* in-kernel injection — :mod:`repro.kernels.crossbar_vmm` and
+  :mod:`repro.kernels.fused_analogue` re-derive the same stuck masks
+  from the counter stream *inside* the kernel
+  (:func:`repro.kernels.noise.counter_uniform_at` over global cell
+  ids), so serving a faulty array costs zero extra HBM traffic — the
+  mask never materialises in memory.
+
+Fault identity is counter-derived: a cell (layer l, pair p, row k,
+col n) is stuck iff ``hash(seed, salt(l, p), k * N + n) < rate`` — a
+pure function of coordinates, independent of tiling, replayable from
+``seed`` alone.  Write failures are the one *stochastic* mechanism
+(each attempt redraws), keyed by ``jax.random`` like programming noise.
+
+Models compose through :class:`FaultModel` (any subset active) and are
+constructible by name through the :data:`FAULTS` registry::
+
+    model = make_fault_model(("stuck", dict(rate=0.01)), ("drift", {}),
+                             seed=7)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.noise import (POLARITY_SALT_OFFSET, stuck_cell_masks as
+                                 stuck_masks)
+
+#: Salt space for fault masks — disjoint from the read-noise salts of the
+#: fused kernels (which count up from 0 per (step, stage, layer, pair)).
+FAULT_SALT_BASE = 0x0F00_0000
+
+
+def fault_salt(layer: int, pair: int) -> int:
+    """Salt of device array (layer, pair): pair 0 = G+, 1 = G-."""
+    return FAULT_SALT_BASE + 2 * int(layer) + int(pair)
+
+
+# ---------------------------------------------------------------------------
+# Fault mechanisms (the registry entries)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StuckCells:
+    """Hard faults: a fraction ``rate`` of cells is pinned, ``on_frac``
+    of them at G_on (= g_max, forming/over-SET failures) and the rest at
+    G_off (= g_min, broken filaments).  Stuck cells ignore programming
+    writes — the repair loop can only compensate through the partner
+    device of the differential pair."""
+    rate: float = 0.01
+    on_frac: float = 0.5
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"StuckCells.rate must be in [0, 1], "
+                             f"got {self.rate}")
+        if not 0.0 <= self.on_frac <= 1.0:
+            raise ValueError(f"StuckCells.on_frac must be in [0, 1], "
+                             f"got {self.on_frac}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConductanceDrift:
+    """Read-disturb relaxation: after ``n`` reads every conductance has
+    decayed to ``g * drift_factor(n)`` with the standard power law
+    ``(1 + n / tau) ** -nu``.  Both halves of the differential pair
+    drift together, so the realised weight scales by the same factor —
+    a slow, global gain droop rather than per-cell corruption."""
+    nu: float = 0.01
+    tau: float = 1e4
+
+    def __post_init__(self):
+        if self.nu < 0:
+            raise ValueError(f"ConductanceDrift.nu must be >= 0, "
+                             f"got {self.nu}")
+        if self.tau <= 0:
+            raise ValueError(f"ConductanceDrift.tau must be > 0, "
+                             f"got {self.tau}")
+
+
+@dataclasses.dataclass(frozen=True)
+class WriteFailures:
+    """Stochastic programming failures: each write attempt independently
+    leaves the cell at its previous value with probability ``rate``
+    (pulse did not switch the device).  Redraws every attempt — this is
+    exactly what bounded write–verify retries repair."""
+    rate: float = 0.1
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"WriteFailures.rate must be in [0, 1], "
+                             f"got {self.rate}")
+
+
+#: Registry of fault mechanisms by name (the composable vocabulary).
+FAULTS = {
+    "stuck": StuckCells,
+    "drift": ConductanceDrift,
+    "write_fail": WriteFailures,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """A composition of fault mechanisms over one device (any subset
+    active; ``seed`` keys every counter-derived mask)."""
+    stuck: Optional[StuckCells] = None
+    drift: Optional[ConductanceDrift] = None
+    write_fail: Optional[WriteFailures] = None
+    seed: int = 0
+
+    @property
+    def stuck_rate(self) -> float:
+        return 0.0 if self.stuck is None else self.stuck.rate
+
+    @property
+    def write_fail_rate(self) -> float:
+        return 0.0 if self.write_fail is None else self.write_fail.rate
+
+    def kernel_args(self, n_reads: int = 0) -> dict:
+        """The static scalars the Pallas kernels consume (in-kernel
+        fault injection): stuck mask parameters + drift schedule."""
+        return {
+            "stuck_rate": self.stuck_rate,
+            "stuck_on_frac": (self.stuck.on_frac if self.stuck else 0.5),
+            "fault_seed": int(self.seed),
+            "salt_base": FAULT_SALT_BASE,
+            "drift_nu": (self.drift.nu if self.drift else 0.0),
+            "drift_tau": (self.drift.tau if self.drift else 1.0),
+            "drift_n0": int(n_reads),
+        }
+
+
+def make_fault_model(*mechanisms, seed: int = 0) -> FaultModel:
+    """Compose a :class:`FaultModel` from registry names.
+
+    ``mechanisms``: each a name from :data:`FAULTS` or a
+    ``(name, kwargs)`` pair, e.g. ``make_fault_model("drift",
+    ("stuck", dict(rate=0.02)), seed=3)``.
+    """
+    fields = {}
+    for m in mechanisms:
+        name, kw = (m, {}) if isinstance(m, str) else m
+        if name not in FAULTS:
+            raise ValueError(
+                f"unknown fault mechanism {name!r}; have {sorted(FAULTS)}")
+        if name in fields:
+            raise ValueError(f"fault mechanism {name!r} given twice")
+        fields[name] = FAULTS[name](**kw)
+    return FaultModel(seed=seed, **fields)
+
+
+# ---------------------------------------------------------------------------
+# Counter-derived stuck masks (shared by jnp and in-kernel consumers;
+# the mask primitive itself lives in kernels/noise.py — re-exported here
+# as ``stuck_masks`` — so the Pallas kernels can use it without importing
+# core)
+# ---------------------------------------------------------------------------
+
+def apply_stuck(g: jax.Array, seed, salt, rate: float, on_frac: float,
+                g_on: float, g_off: float, *, row0=0, col0=0,
+                ncols: Optional[int] = None) -> jax.Array:
+    """Pin the stuck cells of one device array to their fault values.
+
+    Works in conductance space (``g_on = spec.g_max``/``g_off =
+    spec.g_min``) or in level-index space (``g_on = levels - 1``,
+    ``g_off = 0``) — the caller chooses the representation.  Idempotent:
+    re-applying the same model is a no-op, so a verified program and an
+    in-kernel re-injection cannot double-fault.
+    """
+    if rate <= 0.0:
+        return g
+    is_stuck, stuck_on = stuck_masks(seed, salt, g.shape, rate, on_frac,
+                                     row0=row0, col0=col0, ncols=ncols)
+    stuck_val = jnp.where(stuck_on, jnp.float32(g_on), jnp.float32(g_off))
+    return jnp.where(is_stuck, stuck_val.astype(g.dtype), g)
+
+
+def drift_factor(model: Optional[FaultModel], n_reads) -> jax.Array:
+    """Multiplicative conductance decay after ``n_reads`` evaluations:
+    ``(1 + n / tau) ** -nu`` (1.0 when no drift mechanism is active)."""
+    if model is None or model.drift is None or model.drift.nu == 0.0:
+        return jnp.float32(1.0)
+    n = jnp.asarray(n_reads, jnp.float32)
+    return (1.0 + n / jnp.float32(model.drift.tau)) ** jnp.float32(
+        -model.drift.nu)
+
+
+# ---------------------------------------------------------------------------
+# Program-time fault application (the jnp simulator path)
+# ---------------------------------------------------------------------------
+
+def apply_faults_to_prog(prog: dict, model: Optional[FaultModel], spec,
+                         layer: int = 0, *, n_reads: int = 0) -> dict:
+    """Degrade a programmed conductance pair as the physical array would.
+
+    Stuck cells are pinned at g_max/g_min (and their uint8 level indices,
+    when staged, at ``levels-1``/0 — stuck values sit exactly on the
+    level grid), then the drift snapshot after ``n_reads`` evaluations
+    scales both halves.  Returns a new prog dict; ``model=None`` is the
+    identity.  The masks match the in-kernel injection bitwise (same
+    counter stream, same :func:`fault_salt` convention).
+    """
+    if model is None:
+        return prog
+    out = dict(prog)
+    if model.stuck is not None and model.stuck.rate > 0.0:
+        r, f = model.stuck.rate, model.stuck.on_frac
+        for pair, key_ in ((0, "gp"), (1, "gm")):
+            salt = fault_salt(layer, pair)
+            out[key_] = apply_stuck(out[key_], model.seed, salt, r, f,
+                                    spec.g_max, spec.g_min)
+            idx_key = key_ + "_idx"
+            if idx_key in out:
+                out[idx_key] = apply_stuck(
+                    out[idx_key].astype(jnp.float32), model.seed, salt, r,
+                    f, spec.levels - 1, 0).astype(jnp.uint8)
+    factor = drift_factor(model, n_reads)
+    if model.drift is not None and model.drift.nu > 0.0:
+        out["gp"] = out["gp"] * factor
+        out["gm"] = out["gm"] * factor
+        if "gp_idx" in out:
+            raise ValueError(
+                "drift moves conductances off the 6-bit level grid; "
+                "uint8-staged programs cannot carry a drift snapshot — "
+                "apply drift in-kernel (FusedAnalogueBackend(faults=...)) "
+                "or use float storage")
+    return out
+
+
+def apply_faults_to_mlp(progs, model: Optional[FaultModel], spec, *,
+                        n_reads: int = 0) -> list:
+    """Per-layer :func:`apply_faults_to_prog` over a programmed MLP."""
+    if model is None:
+        return list(progs)
+    return [apply_faults_to_prog(p, model, spec, layer=i, n_reads=n_reads)
+            for i, p in enumerate(progs)]

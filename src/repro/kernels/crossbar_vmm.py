@@ -45,7 +45,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.fused_ode_mlp import _default_interpret
-from repro.kernels.noise import counter_normal
+from repro.kernels.noise import counter_normal, stuck_cell_masks
 
 
 def pad_accumulator_neutral(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -71,20 +71,40 @@ def pad_accumulator_neutral(x: jax.Array, mult: int, axis: int) -> jax.Array:
 
 def _kernel(x_ref, gp_ref, gm_ref, o_ref, acc_ref, *, nk: int, bk: int,
             bn: int, K: int, N: int, g_step: float | None,
-            g_min: float, inv_scale: float, clamp: float | None,
-            read_noise: float, noise_seed: int):
+            g_min: float, g_max: float, inv_scale: float,
+            clamp: float | None, read_noise: float, noise_seed: int,
+            stuck_rate: float, stuck_on_frac: float, fault_seed: int,
+            salt_p: int, salt_m: int, drift: float):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     gp = gp_ref[...].astype(jnp.float32)
     gm = gm_ref[...].astype(jnp.float32)
+    stuck = stuck_rate > 0.0
+    if g_step is not None and (read_noise > 0.0 or stuck):
+        # Quantised storage: reconstruct the absolute conductances —
+        # G_min offsets cancel only in the clean (noise- and fault-free)
+        # pair; stuck overrides and read noise both act on absolutes.
+        gp = g_min + gp * g_step
+        gm = g_min + gm * g_step
+    if stuck:
+        # Stuck cells pin to G_on/G_off at their GLOBAL coordinates —
+        # bitwise the mask core/faults.py applies at program time, so
+        # in-kernel injection (zero extra HBM traffic: the mask is
+        # counter-derived, never materialised) matches a baked program.
+        row0 = pl.program_id(2) * bk
+        col0 = pl.program_id(1) * bn
+        for arr, salt in ((0, salt_p), (1, salt_m)):
+            is_stuck, stuck_on = stuck_cell_masks(
+                fault_seed, salt, (bk, bn), stuck_rate, stuck_on_frac,
+                row0=row0, col0=col0, ncols=N)
+            val = jnp.where(stuck_on, jnp.float32(g_max), jnp.float32(g_min))
+            if arr == 0:
+                gp = jnp.where(is_stuck, val, gp)
+            else:
+                gm = jnp.where(is_stuck, val, gm)
     if read_noise > 0.0:
-        if g_step is not None:
-            # Quantised storage: reconstruct the absolute conductances —
-            # G_min offsets cancel only in the noise-free pair.
-            gp = g_min + gp * g_step
-            gm = g_min + gm * g_step
         # One salt per (k-tile, n-tile, pair): the element iota inside
         # counter_normal then decorrelates within the tile, so the full
         # (K, N) stream is deterministic in noise_seed alone.
@@ -94,9 +114,11 @@ def _kernel(x_ref, gp_ref, gm_ref, o_ref, acc_ref, *, nk: int, bk: int,
             noise_seed, salt, (bk, bn)))
         gm = gm * (1.0 + read_noise * counter_normal(
             noise_seed, salt + 1, (bk, bn)))
-        # Masked-padding discipline: reconstructed pads sit at ~g_min and
-        # their noise does not cancel — zero everything past the true
-        # (K, N) extent so pads stay accumulator-neutral.
+    if read_noise > 0.0 or stuck:
+        # Masked-padding discipline: reconstructed pads sit at ~g_min
+        # (and stuck overrides would pin pad cells to real conductances)
+        # — zero everything past the true (K, N) extent so pads stay
+        # accumulator-neutral.
         kk = pl.program_id(2) * bk + jax.lax.broadcasted_iota(
             jnp.int32, (bk, bn), 0)
         nn = pl.program_id(1) * bn + jax.lax.broadcasted_iota(
@@ -107,6 +129,10 @@ def _kernel(x_ref, gp_ref, gm_ref, o_ref, acc_ref, *, nk: int, bk: int,
         g = gp - gm
         if g_step is not None:      # quantised mode: dequant level indices
             g = g * g_step
+    if drift != 1.0:
+        # Read-disturb relaxation scales both halves of the pair equally,
+        # so the differential scales by the same (static) factor.
+        g = g * jnp.float32(drift)
     x = x_ref[...].astype(jnp.float32)
     acc_ref[...] += jnp.dot(x, g, preferred_element_type=jnp.float32)
 
@@ -129,6 +155,12 @@ def crossbar_matmul(
     read_noise: float = 0.0,
     noise_seed: int = 0,
     g_min: float = 0.0,            # needed for noisy quantised reconstruction
+    g_max: float = 0.0,            # needed for stuck-cell overrides
+    stuck_rate: float = 0.0,
+    stuck_on_frac: float = 0.5,
+    fault_seed: int = 0,
+    fault_salts: tuple[int, int] = (0, 1),   # (G+ salt, G- salt)
+    drift: float = 1.0,
     bm: int = 128, bk: int = 128, bn: int = 128,
     interpret: bool | None = None,
     out_dtype=jnp.float32,
@@ -141,6 +173,13 @@ def crossbar_matmul(
     interpreter elsewhere; ``REPRO_FORCE_INTERPRET`` pins the mode).
     ``read_noise`` > 0 applies the deterministic counter-derived read
     perturbation described in the module docstring.
+
+    Device faults are injected in-kernel (counter-derived, zero extra
+    HBM traffic — see :mod:`repro.core.faults` for the model and the
+    salt convention): ``stuck_rate`` > 0 pins that fraction of cells to
+    ``g_max``/``g_min`` at their global coordinates, bitwise-identical
+    to program-time baking, and ``drift`` scales every conductance by a
+    static read-disturb relaxation factor.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -151,6 +190,11 @@ def crossbar_matmul(
         raise ValueError(
             "crossbar_matmul: noisy quantised reads need the absolute "
             "conductance floor — pass g_min > 0 (spec.g_min)")
+    if stuck_rate > 0.0 and not g_max > g_min:
+        raise ValueError(
+            "crossbar_matmul: stuck-cell injection pins cells to the "
+            "absolute G_on/G_off values — pass g_max > g_min "
+            "(spec.g_max/spec.g_min)")
 
     bm = min(bm, max(8, M))
     bn = min(bn, max(128, 128))
@@ -167,9 +211,16 @@ def crossbar_matmul(
 
     kernel = functools.partial(_kernel, nk=nk, bk=bk, bn=bn, K=K, N=N,
                                g_step=g_step, g_min=float(g_min),
+                               g_max=float(g_max),
                                inv_scale=float(inv_scale), clamp=clamp,
                                read_noise=float(read_noise),
-                               noise_seed=int(noise_seed))
+                               noise_seed=int(noise_seed),
+                               stuck_rate=float(stuck_rate),
+                               stuck_on_frac=float(stuck_on_frac),
+                               fault_seed=int(fault_seed),
+                               salt_p=int(fault_salts[0]),
+                               salt_m=int(fault_salts[1]),
+                               drift=float(drift))
     out = pl.pallas_call(
         kernel,
         grid=(Mp // bm, Np // bn, nk),

@@ -52,13 +52,35 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.fused_ode_mlp import (DEFAULT_VMEM_BUDGET,
                                          _chunk_drive, _default_interpret,
                                          plan_time_chunk)
-from repro.kernels.noise import counter_normal
+from repro.kernels.noise import counter_normal, stuck_cell_masks
+
+#: Static fault parameters the kernel understands (subset optional);
+#: produced by ``FaultModel.kernel_args()`` in :mod:`repro.core.faults`.
+_FAULT_DEFAULTS = {
+    "stuck_rate": 0.0, "stuck_on_frac": 0.5, "fault_seed": 0,
+    "salt_base": 0, "drift_nu": 0.0, "drift_tau": 1.0, "drift_n0": 0,
+}
 
 
 def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
                  bt: int, per_tile_drive: bool, g_step: float | None,
-                 g_min: float, v_clamp: float | None, read_noise: float,
-                 noise_seed: int):
+                 g_min: float, g_max: float, v_clamp: float | None,
+                 read_noise: float, noise_seed: int, stuck_rate: float,
+                 stuck_on_frac: float, fault_seed: int, salt_base: int,
+                 drift_nu: float, drift_tau: float, drift_n0: int):
+    stuck = stuck_rate > 0.0
+
+    def apply_stuck(g, li, pair):
+        # Stationary arrays are whole (unblocked), so local coordinates
+        # ARE the global cell ids — the mask matches program-time baking
+        # (core/faults.py) bitwise, derived from the counter stream with
+        # zero extra HBM traffic.
+        is_stuck, stuck_on = stuck_cell_masks(
+            fault_seed, salt_base + 2 * li + pair, g.shape, stuck_rate,
+            stuck_on_frac)
+        val = jnp.where(stuck_on, jnp.float32(g_max), jnp.float32(g_min))
+        return jnp.where(is_stuck, val, g)
+
     def kernel(*refs):
         y0_ref = refs[0]
         u_ref = refs[1]
@@ -83,16 +105,28 @@ def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
             else:
                 gps = [r[...].astype(jnp.float32) for r in gp_refs]
                 gms = [r[...].astype(jnp.float32) for r in gm_refs]
+            if stuck:
+                gps = [apply_stuck(g, li, 0) for li, g in enumerate(gps)]
+                gms = [apply_stuck(g, li, 1) for li, g in enumerate(gms)]
         else:
             # Noise-free fast path: combine the pair once per cell.  The
             # G_min offsets cancel exactly (quantised) / by construction
             # (float), so the inner loop is a single dot per layer.
+            # Stuck cells pin to ABSOLUTE conductances, so with faults
+            # active the quantised pair must be reconstructed first.
             ws, bs = [], []
             for li in range(num_layers):
-                g = (gp_refs[li][...].astype(jnp.float32)
-                     - gm_refs[li][...].astype(jnp.float32))
-                if g_step is not None:
-                    g = g * g_step
+                gp_a = gp_refs[li][...].astype(jnp.float32)
+                gm_a = gm_refs[li][...].astype(jnp.float32)
+                if stuck:
+                    if g_step is not None:
+                        gp_a = g_min + gp_a * g_step
+                        gm_a = g_min + gm_a * g_step
+                    g = apply_stuck(gp_a, li, 0) - apply_stuck(gm_a, li, 1)
+                else:
+                    g = gp_a - gm_a
+                    if g_step is not None:
+                        g = g * g_step
                 g = g * inv_scales[li]
                 ws.append(g[:-1])        # (K, N) weight rows
                 bs.append(g[-1])         # the constant-1 bias row
@@ -101,7 +135,7 @@ def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
         # inside a captured loop jaxpr on the interpreter path.
         chunk_step0 = pl.program_id(1) * C
 
-        def layer_out(x, li, salt):
+        def layer_out(x, li, salt, dfac):
             """One crossbar read: differential dot, rescale, clamp."""
             if read_noise > 0.0:
                 shape = gps[li].shape
@@ -114,11 +148,15 @@ def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
             else:
                 y = jnp.dot(x, ws[li],
                             preferred_element_type=jnp.float32) + bs[li]
+            if dfac is not None:
+                # drift scales every conductance of the pair, hence the
+                # whole differential read (bias row included)
+                y = y * dfac
             if v_clamp is not None:
                 y = jnp.clip(y, -v_clamp, v_clamp)
             return y
 
-        def f(u_row, y, eval_salt):
+        def f(u_row, y, eval_salt, dfac):
             if drive_dim > 0:
                 u = (u_row if per_tile_drive
                      else jnp.broadcast_to(u_row, (bt, drive_dim)))
@@ -126,7 +164,7 @@ def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
             else:
                 x = y
             for li in range(num_layers):
-                x = layer_out(x, li, eval_salt + 2 * li)
+                x = layer_out(x, li, eval_salt + 2 * li, dfac)
                 if li < num_layers - 1:
                     x = jnp.maximum(x, 0.0)
             return x
@@ -135,13 +173,25 @@ def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
             # Global step index -> unique salt block per (step, stage).
             step_salt = ((chunk_step0 + t) * salts_per_step
                          if read_noise > 0.0 else 0)
-            k1 = f(u_ref[0, 2 * t], y, step_salt)
+            if drift_nu > 0.0:
+                # Live read-disturb relaxation: every RK4 step costs 4
+                # reads of each array, so the decay exponent advances
+                # with the GLOBAL step count — chunked rollouts drift
+                # exactly like unchunked ones.  exp/log1p instead of a
+                # float pow for a clean Mosaic lowering.
+                n = jnp.asarray(drift_n0 + 4 * (chunk_step0 + t),
+                                jnp.float32)
+                dfac = jnp.exp(jnp.float32(-drift_nu)
+                               * jnp.log1p(n / jnp.float32(drift_tau)))
+            else:
+                dfac = None
+            k1 = f(u_ref[0, 2 * t], y, step_salt, dfac)
             k2 = f(u_ref[0, 2 * t + 1], y + (dt / 2) * k1,
-                   step_salt + 2 * num_layers)
+                   step_salt + 2 * num_layers, dfac)
             k3 = f(u_ref[0, 2 * t + 1], y + (dt / 2) * k2,
-                   step_salt + 4 * num_layers)
+                   step_salt + 4 * num_layers, dfac)
             k4 = f(u_ref[0, 2 * t + 2], y + dt * k3,
-                   step_salt + 6 * num_layers)
+                   step_salt + 6 * num_layers, dfac)
             y = y + (dt / 6) * (k1 + 2 * k2 + 2 * k3 + k4)
             out_ref[t] = y
             return y
@@ -161,9 +211,11 @@ def fused_analogue_rollout(
     *,
     g_step: float | None = None,  # set => uint8 quantised storage
     g_min: float = 0.0,           # conductance floor (noisy quantised reads)
+    g_max: float = 0.0,           # conductance ceiling (stuck overrides)
     v_clamp: float | None = None,
     read_noise: float = 0.0,
     noise_seed: int = 0,
+    fault: dict | None = None,    # FaultModel.kernel_args(); None = healthy
     batch_tile: int = 64,
     time_chunk: int | None = None,
     interpret: bool | None = None,
@@ -175,6 +227,12 @@ def fused_analogue_rollout(
     drive, batch tiling, VMEM-budgeted time chunking) with the crossbar
     read semantics of ``core.analogue.analogue_mlp_apply`` traced
     in-kernel.  See the module docstring for the noise model.
+
+    ``fault`` (a ``FaultModel.kernel_args()`` dict of static scalars)
+    injects device faults in-kernel: stuck cells pinned at their global
+    coordinates (bitwise the program-time masks of
+    :mod:`repro.core.faults`) and live read-disturb drift whose decay
+    exponent advances with the global step count.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -182,6 +240,17 @@ def fused_analogue_rollout(
         raise ValueError(
             "fused_analogue_rollout: noisy quantised reads need the "
             "absolute conductance floor — pass g_min > 0 (spec.g_min)")
+    fa = dict(_FAULT_DEFAULTS, **(fault or {}))
+    if set(fa) != set(_FAULT_DEFAULTS):
+        raise ValueError(
+            f"fused_analogue_rollout: unknown fault keys "
+            f"{sorted(set(fa) - set(_FAULT_DEFAULTS))}; have "
+            f"{sorted(_FAULT_DEFAULTS)}")
+    if fa["stuck_rate"] > 0.0 and not g_max > g_min:
+        raise ValueError(
+            "fused_analogue_rollout: stuck-cell injection pins cells to "
+            "the absolute G_on/G_off values — pass g_max > g_min "
+            "(spec.g_max/spec.g_min)")
     y0 = y0.astype(jnp.float32)
     u_half = u_half.astype(jnp.float32)
     scales = jnp.asarray(scales, jnp.float32)
@@ -216,8 +285,13 @@ def fused_analogue_rollout(
 
     kernel = _make_kernel(L, C, float(dt), du, bt, per_tile_drive,
                           None if g_step is None else float(g_step),
-                          float(g_min), v_clamp, float(read_noise),
-                          int(noise_seed))
+                          float(g_min), float(g_max), v_clamp,
+                          float(read_noise), int(noise_seed),
+                          float(fa["stuck_rate"]),
+                          float(fa["stuck_on_frac"]),
+                          int(fa["fault_seed"]), int(fa["salt_base"]),
+                          float(fa["drift_nu"]), float(fa["drift_tau"]),
+                          int(fa["drift_n0"]))
 
     grid = (B // bt, NC)
     if per_tile_drive:

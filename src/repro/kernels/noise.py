@@ -43,6 +43,60 @@ def _bits_to_unit(bits: jax.Array) -> jax.Array:
     return jnp.float32(2.0) - f          # [1,2) -> (0,1]
 
 
+def counter_uniform_at(seed, salt, idx: jax.Array) -> jax.Array:
+    """Uniform (0, 1] float32 samples indexed by explicit element ids.
+
+    Unlike :func:`counter_normal` (which derives ids from the *local*
+    block shape), ``idx`` carries caller-chosen — typically global —
+    element coordinates, so a blocked kernel and an unblocked jnp
+    computation draw bitwise-identical samples for the same logical
+    element.  This is the primitive behind the device-fault masks
+    (:mod:`repro.core.faults`): a stuck cell is a property of the
+    physical array, not of the tile decomposition reading it.
+    """
+    idx = jnp.asarray(idx, _U32)
+    base = splitmix32(jnp.asarray(seed, _U32) * _U32(0x9E3779B9)
+                      + splitmix32(jnp.asarray(salt, _U32)))
+    return _bits_to_unit(splitmix32(base ^ idx))
+
+
+def global_cell_index(shape: tuple[int, int], row0, col0, ncols) -> jax.Array:
+    """Global flat ids for a 2-D block at offset (row0, col0) of a
+    logically (nrows, ncols) array — the id each element would get from
+    ``arange(nrows * ncols).reshape(nrows, ncols)``.  ``row0``/``col0``
+    may be traced (grid-derived); built from per-axis broadcasted iotas
+    (TPU Mosaic has no 1-D iota)."""
+    rr = jax.lax.broadcasted_iota(_U32, shape, 0) + jnp.asarray(row0, _U32)
+    cc = jax.lax.broadcasted_iota(_U32, shape, 1) + jnp.asarray(col0, _U32)
+    return rr * jnp.asarray(ncols, _U32) + cc
+
+
+#: Offset separating a stuck-cell decision draw from its polarity draw
+#: (see :func:`stuck_cell_masks`; the salt space itself is allocated by
+#: :mod:`repro.core.faults`).
+POLARITY_SALT_OFFSET = 0x0080_0000
+
+
+def stuck_cell_masks(seed, salt, shape: tuple[int, int], rate: float,
+                     on_frac: float = 0.5, *, row0=0, col0=0, ncols=None):
+    """(is_stuck, stuck_on) boolean fields for one device array.
+
+    Pure function of (seed, salt, global cell coordinates): a blocked
+    kernel evaluating a (row0, col0)-offset tile of a logically
+    (?, ncols) array and an unblocked jnp caller (``row0=col0=0``,
+    ``ncols=shape[1]``) see bitwise-identical masks — a stuck cell is a
+    property of the physical array, not of the tile decomposition
+    reading it.  ``rate``/``on_frac`` must be static (they parameterise
+    the comparison, not the stream).
+    """
+    idx = global_cell_index(shape, row0, col0,
+                            shape[1] if ncols is None else ncols)
+    is_stuck = counter_uniform_at(seed, salt, idx) < jnp.float32(rate)
+    stuck_on = (counter_uniform_at(seed, salt + POLARITY_SALT_OFFSET, idx)
+                < jnp.float32(on_frac))
+    return is_stuck, stuck_on
+
+
 def counter_normal(seed, salt, shape: tuple[int, ...]) -> jax.Array:
     """Standard-normal float32 samples indexed purely by coordinates.
 

@@ -154,16 +154,47 @@ def _require_2d_float(op: str, name: str, x: jax.Array) -> None:
             f"a floating dtype first")
 
 
+def _fault_kernel_kwargs(fault: dict | None, spec: AnalogueSpec,
+                         layer: int) -> dict:
+    """Translate a ``FaultModel.kernel_args()`` dict into the static
+    scalars of :func:`repro.kernels.crossbar_vmm.crossbar_matmul`: the
+    per-(layer, pair) stuck salts of the core convention, plus the drift
+    snapshot factor — a single VMM has a fixed read count, so the
+    power-law decay collapses to one static multiplier here (only the
+    fused rollout kernel advances it live)."""
+    if not fault:
+        return {}
+    drift = 1.0
+    if fault.get("drift_nu", 0.0) > 0.0:
+        drift = (1.0 + fault.get("drift_n0", 0)
+                 / fault["drift_tau"]) ** (-fault["drift_nu"])
+    base = fault.get("salt_base", 0)
+    return {
+        "stuck_rate": fault.get("stuck_rate", 0.0),
+        "stuck_on_frac": fault.get("stuck_on_frac", 0.5),
+        "fault_seed": fault.get("fault_seed", 0),
+        "fault_salts": (base + 2 * layer, base + 2 * layer + 1),
+        "drift": drift,
+        "g_max": spec.g_max,
+    }
+
+
 def crossbar_vmm(prog: dict, x: jax.Array, spec: AnalogueSpec,
                  *, interpret: bool | None = None,
                  read_noise: float | None = None,
-                 noise_seed: int = 0) -> jax.Array:
+                 noise_seed: int = 0,
+                 fault: dict | None = None,
+                 layer: int = 0) -> jax.Array:
     """Analogue crossbar read through the fused kernel (float mode).
 
     ``interpret=None`` auto-detects (compiled on TPU, interpreter
     elsewhere; ``REPRO_FORCE_INTERPRET`` pins the mode).  ``read_noise``
     overrides ``spec.read_noise`` (None = take the spec's value) with
     the deterministic counter-derived stream keyed on ``noise_seed``.
+    ``fault`` (a ``FaultModel.kernel_args()`` dict) injects stuck cells
+    and a drift snapshot in-kernel at the device array addressed by
+    ``layer`` — bitwise the program-time masks of
+    :mod:`repro.core.faults`, at zero extra HBM traffic.
     """
     _require_2d_float("crossbar_vmm", "x", x)
     _require_2d_float("crossbar_vmm", "prog['gp']", prog["gp"])
@@ -177,7 +208,8 @@ def crossbar_vmm(prog: dict, x: jax.Array, spec: AnalogueSpec,
         x, prog["gp"], prog["gm"],
         inv_scale=1.0, g_step=None, clamp=None,
         read_noise=float(sigma), noise_seed=noise_seed,
-        interpret=interpret) / prog["scale"]
+        g_min=spec.g_min, interpret=interpret,
+        **_fault_kernel_kwargs(fault, spec, layer)) / prog["scale"]
     if spec.v_clamp is not None:
         y = jnp.clip(y, -spec.v_clamp, spec.v_clamp)
     return y
@@ -188,13 +220,15 @@ def crossbar_vmm_quantized(x: jax.Array, gp_idx: jax.Array,
                            scale: jax.Array | float,
                            *, interpret: bool | None = None,
                            read_noise: float | None = None,
-                           noise_seed: int = 0) -> jax.Array:
+                           noise_seed: int = 0,
+                           fault: dict | None = None,
+                           layer: int = 0) -> jax.Array:
     """Quantised-storage read: uint8 level indices, dequant fused in-kernel.
 
-    Same interpret auto-detect and noise contract as ``crossbar_vmm``;
-    noisy reads reconstruct the absolute conductances from
-    ``spec.g_min`` in-kernel (the differential offsets only cancel
-    noise-free).
+    Same interpret auto-detect, noise and fault contract as
+    ``crossbar_vmm``; noisy or faulty reads reconstruct the absolute
+    conductances from ``spec.g_min`` in-kernel (the differential offsets
+    only cancel clean, and stuck cells pin to absolute G_on/G_off).
     """
     _require_2d_float("crossbar_vmm_quantized", "x", x)
     for name, idx in (("gp_idx", gp_idx), ("gm_idx", gm_idx)):
@@ -208,7 +242,8 @@ def crossbar_vmm_quantized(x: jax.Array, gp_idx: jax.Array,
     y = _crossbar_pallas(x, gp_idx, gm_idx, inv_scale=1.0,
                          g_step=float(g_step), clamp=None,
                          read_noise=float(sigma), noise_seed=noise_seed,
-                         g_min=spec.g_min, interpret=interpret) / scale
+                         g_min=spec.g_min, interpret=interpret,
+                         **_fault_kernel_kwargs(fault, spec, layer)) / scale
     if spec.v_clamp is not None:
         y = jnp.clip(y, -spec.v_clamp, spec.v_clamp)
     return y
@@ -231,7 +266,11 @@ def fused_analogue_rollout(staged: dict, y0: jax.Array, u_half: jax.Array,
       scales   — (L,) per-tensor programming scales;
       g_step   — dequant step for uint8 storage (None = float);
       g_min    — conductance floor (needed for noisy quantised reads);
-      v_clamp  — optional peripheral output clamp.
+      g_max    — conductance ceiling (needed for stuck-cell injection);
+      v_clamp  — optional peripheral output clamp;
+      fault    — optional ``FaultModel.kernel_args()`` dict: stuck cells
+                 and live read-disturb drift injected in-kernel (see
+                 :mod:`repro.core.faults`).
 
     The solve is inference-only (the analogue substrate does not
     backpropagate — train digitally, deploy analogue): all inputs are
@@ -250,6 +289,7 @@ def fused_analogue_rollout(staged: dict, y0: jax.Array, u_half: jax.Array,
         lax.stop_gradient(jnp.asarray(staged["scales"])),
         lax.stop_gradient(y0), lax.stop_gradient(u_half), float(dt),
         g_step=staged.get("g_step"), g_min=staged.get("g_min", 0.0),
+        g_max=staged.get("g_max", 0.0), fault=staged.get("fault"),
         v_clamp=staged.get("v_clamp"), read_noise=float(read_noise),
         noise_seed=int(noise_seed), batch_tile=batch_tile,
         time_chunk=time_chunk, interpret=interpret,

@@ -52,6 +52,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core.backends import (AnalogueBackend, DigitalBackend,
+                                 FusedAnalogueBackend, resolve_backend)
 from repro.launch.mesh import TWIN_AXIS, make_twin_mesh, twin_shard_count
 from repro.launch.sharding import (fleet_input_shardings,
                                    fleet_param_shardings)
@@ -59,6 +61,50 @@ from repro.train import checkpoint as ckpt_lib
 
 Pytree = Any
 Request = Union[jax.Array, tuple]
+
+
+# ---------------------------------------------------------------------------
+# Front-door input validation
+# ---------------------------------------------------------------------------
+
+def validate_fleet_request(caller: str, y0s=None, ts=None,
+                           drive_params=None) -> None:
+    """Reject malformed serving inputs with errors naming the offending
+    argument — a NaN initial condition or a backwards time grid would
+    otherwise propagate silently through the whole rollout and surface
+    as garbage trajectories.
+
+    Value checks only run on concrete arrays: traced inputs (the jitted
+    serving path) skip them, so this is free inside jit — callers
+    validate at the host-side front door (``FleetServer.serve``) where
+    values exist.
+    """
+    for name, x in (("y0s", y0s), ("drive_params", drive_params)):
+        if x is None:
+            continue
+        x = jnp.asarray(x)
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            raise ValueError(
+                f"{caller}: {name} has non-floating dtype {x.dtype}")
+        if (not isinstance(x, jax.core.Tracer)
+                and not bool(jnp.isfinite(x).all())):
+            bad = int(jnp.sum(~jnp.isfinite(x)))
+            raise ValueError(
+                f"{caller}: {name} contains {bad} non-finite "
+                f"(NaN/Inf) value(s) — rejecting the request instead of "
+                f"rolling garbage through the fleet")
+    if ts is not None and not isinstance(jnp.asarray(ts), jax.core.Tracer):
+        tsn = np.asarray(ts)
+        if tsn.ndim != 1 or tsn.size < 2:
+            raise ValueError(
+                f"{caller}: ts must be a 1-D time grid with >= 2 points, "
+                f"got shape {tsn.shape}")
+        if not bool(np.isfinite(tsn).all()):
+            raise ValueError(f"{caller}: ts contains non-finite values")
+        if not bool((np.diff(tsn) > 0).all()):
+            raise ValueError(
+                f"{caller}: ts must be strictly increasing (non-monotone "
+                f"time grids silently break the fixed-step integrators)")
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +169,8 @@ def shard_rollout_batch(backend, state, y0s: jax.Array, ts: jax.Array, *,
     substrate (half the replicated-weight bytes and per-device slab
     traffic) with one keyword.
     """
+    validate_fleet_request("shard_rollout_batch", y0s=y0s, ts=ts,
+                           drive_params=drive_params)
     n_shards = twin_shard_count(mesh)
     n = y0s.shape[0]
     y0s_p, dp_p, _ = pad_fleet_inputs(y0s, drive_params, n_shards)
@@ -146,6 +194,94 @@ def shard_rollout_batch(backend, state, y0s: jax.Array, ts: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# Serving SLO + graceful degradation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServingSLO:
+    """Correctness contract for analogue serving.
+
+    ``max_rel_error``: worst tolerated relative deviation of a health
+    probe from the digital reference (relative to the reference's peak
+    magnitude).  ``probe_every``: run a golden-trajectory probe every
+    this many requests (1 = every request).  ``probe_horizon`` /
+    ``probe_fleet``: probe cost knobs — first ``probe_fleet`` rows of
+    the request over the first ``probe_horizon`` grid points.
+    ``max_retries``: extra tiers a single request may fall through when
+    its output comes back non-finite.  ``timeout_s``: wall-clock budget
+    per attempt (None = unbounded); overruns are counted, not killed —
+    a slow answer is still an answer.
+    """
+    max_rel_error: float = 0.05
+    probe_every: int = 8
+    probe_horizon: int = 11
+    probe_fleet: int = 2
+    max_retries: int = 2
+    timeout_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_rel_error <= 0:
+            raise ValueError(f"ServingSLO.max_rel_error must be > 0, "
+                             f"got {self.max_rel_error}")
+        for f in ("probe_every", "probe_horizon", "probe_fleet"):
+            if getattr(self, f) < 1:
+                raise ValueError(f"ServingSLO.{f} must be >= 1, "
+                                 f"got {getattr(self, f)}")
+        if self.max_retries < 0:
+            raise ValueError(f"ServingSLO.max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+        if self.timeout_s is not None and self.timeout_s <= 0:
+            raise ValueError(f"ServingSLO.timeout_s must be > 0 or None, "
+                             f"got {self.timeout_s}")
+
+
+@dataclasses.dataclass
+class ServingStats:
+    """Counters the degradation machinery maintains (one per server)."""
+    requests: int = 0
+    probes: int = 0
+    probe_demotions: int = 0
+    probe_recoveries: int = 0
+    nan_rescues: int = 0
+    retries: int = 0
+    timeouts: int = 0
+    served_by: dict = dataclasses.field(default_factory=dict)
+    probe_errors: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def fallback_chain(fleet) -> list:
+    """Ordered degradation tiers ``[(name, fleet_variant), ...]`` for a
+    serving fleet: primary substrate -> noise-free fused analogue (same
+    programmed array and faults, stochastic read noise off) -> digital
+    golden reference.  Each step strips one failure mode; the last tier
+    cannot be degraded by array health at all, so a served fleet trades
+    energy/throughput for correctness, never the reverse.
+    """
+    primary = resolve_backend(fleet.backend)
+    tiers = [(primary.name, fleet)]
+    if isinstance(primary, (AnalogueBackend, FusedAnalogueBackend)):
+        spec = primary.spec
+        if spec.read_noise > 0.0 or isinstance(primary, AnalogueBackend):
+            clean_spec = dataclasses.replace(spec, read_noise=0.0)
+            if isinstance(primary, FusedAnalogueBackend):
+                clean = dataclasses.replace(primary, spec=clean_spec)
+            else:
+                # jnp-simulator primary: the quiet tier is the fused
+                # substrate with the same programming physics.
+                clean = FusedAnalogueBackend(
+                    spec=clean_spec, prog_key=primary.prog_key,
+                    storage=primary.storage, faults=primary.faults,
+                    verify=primary.verify, n_reads=primary.n_reads)
+            tiers.append((f"{clean.name}_clean", fleet.with_backend(clean)))
+    if not isinstance(primary, DigitalBackend):
+        tiers.append(("digital", fleet.with_backend(DigitalBackend())))
+    return tiers
+
+
+# ---------------------------------------------------------------------------
 # Programmed fleet server
 # ---------------------------------------------------------------------------
 
@@ -159,41 +295,148 @@ class FleetServer:
     freezes the time grid; each :meth:`serve` call pads + shards the
     request batch, runs the jitted sharded rollout (compiled once per
     padded batch shape) and returns the unpadded trajectories.
+
+    Passing an :class:`ServingSLO` arms graceful degradation for
+    analogue substrates (``docs/robustness.md``): the server builds the
+    :func:`fallback_chain` of tiers, health-probes the chain every
+    ``probe_every`` requests (a short golden rollout on the request's
+    own leading rows, checked against the digital reference) and serves
+    each request from the healthiest tier that meets the SLO — probing
+    always restarts from the primary tier, so a recovered array is
+    promoted back automatically.  Any request whose trajectories come
+    back non-finite is retried down the chain; the digital tier cannot
+    be degraded by array health, so a served fleet loses energy
+    efficiency under faults, never correctness.  ``stats`` counts what
+    happened.
     """
     fleet: Any                        # repro.core.twin.TwinFleet
     params: Pytree
     ts: Any                           # concrete uniform time grid
     mesh: Any = None                  # None -> all visible devices
+    slo: Optional[ServingSLO] = None  # None -> no degradation machinery
 
     def __post_init__(self):
         if self.mesh is None:
             self.mesh = make_twin_mesh()
         self.ts = jnp.asarray(np.asarray(self.ts))   # concrete for Pallas
+        validate_fleet_request("FleetServer", ts=self.ts)
         self.params = jax.device_put(
             self.params, fleet_param_shardings(self.mesh, self.params))
-        fleet, ts, mesh = self.fleet, self.ts, self.mesh
-        self._rollout = jax.jit(
-            lambda p, y0s, thetas: fleet.rollout_batch(p, y0s, ts, thetas,
-                                                       mesh=mesh))
+        ts, mesh = self.ts, self.mesh
+        self.stats = ServingStats()
+        if self.slo is None:
+            self._tiers = [(getattr(resolve_backend(self.fleet.backend),
+                                    "name", "primary"), self.fleet)]
+        else:
+            self._tiers = fallback_chain(self.fleet)
+        self._active = 0
+
+        def compiled(f):
+            return jax.jit(lambda p, y0s, thetas: f.rollout_batch(
+                p, y0s, ts, thetas, mesh=mesh))
+
+        self._rollouts = [compiled(f) for _, f in self._tiers]
+        self._rollout = self._rollouts[0]     # primary tier, legacy name
+        self._golden = (None if self.slo is None else
+                        self.fleet.with_backend(DigitalBackend()))
 
     @property
     def n_shards(self) -> int:
         return twin_shard_count(self.mesh)
 
+    @property
+    def active_tier(self) -> str:
+        """Name of the tier requests are currently served from."""
+        return self._tiers[self._active][0]
+
+    # -- health probing ----------------------------------------------------
+    def _probe(self, y0s: jax.Array, thetas: Optional[jax.Array]) -> None:
+        """Golden-trajectory health check: roll the request's first
+        ``probe_fleet`` rows over ``ts[:probe_horizon]`` on each tier
+        (eagerly, no mesh — the probe is tiny) and activate the first
+        tier whose worst deviation from the digital reference meets the
+        SLO.  Scanning from the top every time is what makes recovery
+        automatic; the final (digital) tier is the reference itself and
+        needs no probe."""
+        s = self.slo
+        self.stats.probes += 1
+        h = min(s.probe_horizon, int(self.ts.shape[0]))
+        ts_p = self.ts[:h]
+        yp = y0s[: s.probe_fleet]
+        tp = None if thetas is None else thetas[: s.probe_fleet]
+        ref = np.asarray(self._golden.rollout_batch(self.params, yp, ts_p,
+                                                    tp))
+        scale = float(np.max(np.abs(ref))) + 1e-9
+        prev, chosen = self._active, len(self._tiers) - 1
+        for i, (name, tier) in enumerate(self._tiers[:-1]):
+            out = np.asarray(tier.rollout_batch(self.params, yp, ts_p, tp))
+            err = float(np.max(np.abs(out - ref))) / scale
+            self.stats.probe_errors[name] = err
+            if np.isfinite(err) and err <= s.max_rel_error:
+                chosen = i
+                break
+        if chosen > prev:
+            self.stats.probe_demotions += 1
+        elif chosen < prev:
+            self.stats.probe_recoveries += 1
+        self._active = chosen
+
+    # -- serving -----------------------------------------------------------
     def serve(self, y0s: jax.Array,
               drive_params: Optional[jax.Array] = None) -> jax.Array:
-        """Roll out one request batch -> (N, T+1, D) trajectories."""
+        """Roll out one request batch -> (N, T+1, D) trajectories.
+
+        With an armed SLO the batch is served from the healthiest tier
+        (see class docstring) and retried down the chain if its output
+        is non-finite; raises ``RuntimeError`` only if even the digital
+        tier returns non-finite values."""
+        y0s = jnp.asarray(y0s)
+        if drive_params is not None:
+            drive_params = jnp.asarray(drive_params)
+        validate_fleet_request("FleetServer.serve", y0s=y0s,
+                               drive_params=drive_params)
         n = y0s.shape[0]
-        y0s_p, dp_p, _ = pad_fleet_inputs(
-            jnp.asarray(y0s),
-            None if drive_params is None else jnp.asarray(drive_params),
-            self.n_shards)
+        y0s_p, dp_p, _ = pad_fleet_inputs(y0s, drive_params, self.n_shards)
         place = fleet_input_shardings(self.mesh, {"y": y0s_p})["y"]
         y0s_p = jax.device_put(y0s_p, place)
         if dp_p is not None:
             dp_p = jax.device_put(
                 dp_p, fleet_input_shardings(self.mesh, {"d": dp_p})["d"])
-        return self._rollout(self.params, y0s_p, dp_p)[:n]
+
+        s = self.slo
+        if s is None:
+            self.stats.requests += 1
+            out = self._rollout(self.params, y0s_p, dp_p)[:n]
+            self.stats.served_by["primary"] = (
+                self.stats.served_by.get("primary", 0) + 1)
+            return out
+
+        if len(self._tiers) > 1 and self.stats.requests % s.probe_every == 0:
+            self._probe(y0s, drive_params)
+        self.stats.requests += 1
+
+        first = self._active
+        last = min(first + s.max_retries, len(self._tiers) - 1)
+        for i in range(first, last + 1):
+            name = self._tiers[i][0]
+            if i > first:
+                self.stats.retries += 1
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(
+                self._rollouts[i](self.params, y0s_p, dp_p))[:n]
+            if (s.timeout_s is not None
+                    and time.perf_counter() - t0 > s.timeout_s):
+                self.stats.timeouts += 1
+            if bool(jnp.isfinite(out).all()):
+                if i > first:
+                    self.stats.nan_rescues += 1
+                self.stats.served_by[name] = (
+                    self.stats.served_by.get(name, 0) + 1)
+                return out
+        raise RuntimeError(
+            "FleetServer: every fallback tier (including digital) "
+            "returned non-finite trajectories — the request itself is "
+            "pathological, not the substrate")
 
 
 def serve_fleet(ckpt_dir: str, fleet, ts, requests: Iterable[Request], *,

@@ -35,6 +35,12 @@ import numpy as np
 
 Pytree = Any
 
+#: On-disk manifest schema version.  Bump when the checkpoint layout
+#: changes incompatibly; readers refuse manifests from a different major
+#: schema instead of mis-parsing them.  (Checkpoints written before the
+#: field existed are read as version 1 — the layout is identical.)
+SCHEMA_VERSION = 1
+
 
 def _flatten(tree: Pytree):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -63,7 +69,8 @@ def save(ckpt_dir: str, step: int, tree: Pytree, *, keep: int = 3,
             manifest[name] = {"file": fname, "dtype": str(arr.dtype),
                               "shape": list(arr.shape)}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"step": step, "leaves": manifest}, f)
+            json.dump({"schema": SCHEMA_VERSION, "step": step,
+                       "leaves": manifest}, f)
         try:
             os.replace(tmp, final)      # atomic publish
         except OSError:
@@ -171,6 +178,40 @@ def load_twin(ckpt_dir: str, params_template: Pytree, *,
                    shardings=wrapped_sh)["params"]
 
 
+def _read_manifest(path: str) -> dict:
+    """Load + validate a checkpoint manifest, raising errors that say
+    exactly what is wrong with the on-disk state (missing vs truncated
+    vs corrupt vs incompatible) instead of a bare ``KeyError``."""
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.isdir(path):
+        raise FileNotFoundError(
+            f"checkpoint directory {path!r} does not exist")
+    if not os.path.exists(mpath):
+        raise FileNotFoundError(
+            f"checkpoint {path!r} has no manifest.json — the write was "
+            f"interrupted before the atomic publish (or the directory "
+            f"was truncated); delete it and restore an older step")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as e:
+        raise ValueError(
+            f"checkpoint manifest {mpath!r} is corrupt (invalid JSON: "
+            f"{e}) — the checkpoint cannot be trusted") from e
+    if not isinstance(manifest, dict) or "leaves" not in manifest:
+        raise ValueError(
+            f"checkpoint manifest {mpath!r} is malformed: expected a "
+            f"JSON object with a 'leaves' table, got "
+            f"{type(manifest).__name__}")
+    schema = manifest.get("schema", 1)   # pre-versioned manifests == v1
+    if schema != SCHEMA_VERSION:
+        raise ValueError(
+            f"checkpoint {path!r} uses manifest schema {schema}, this "
+            f"reader understands schema {SCHEMA_VERSION} — upgrade the "
+            f"checkpoint (or the reader) before restoring")
+    return manifest
+
+
 def restore(ckpt_dir: str, step: int, target: Pytree,
             shardings: Optional[Pytree] = None) -> Pytree:
     """Restore into the structure of ``target``.
@@ -178,10 +219,14 @@ def restore(ckpt_dir: str, step: int, target: Pytree,
     ``shardings``: optional NamedSharding tree — leaves are placed directly
     onto the (possibly different) mesh via ``jax.device_put``, which is
     what makes restarts elastic across topologies.
+
+    Raises descriptive errors for on-disk damage (missing/truncated/
+    corrupt manifests or arrays — see :func:`_read_manifest`) and for
+    template mismatches (a leaf the checkpoint never stored, or stored
+    with a different shape).
     """
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)["leaves"]
+    manifest = _read_manifest(path)["leaves"]
 
     named, treedef = _flatten(target)
     shard_named = None
@@ -191,11 +236,27 @@ def restore(ckpt_dir: str, step: int, target: Pytree,
     out = []
     for i, (name, tgt) in enumerate(named):
         if name not in manifest:
-            raise KeyError(f"checkpoint missing leaf {name!r}")
-        arr = np.load(os.path.join(path, manifest[name]["file"]))
+            raise KeyError(
+                f"checkpoint {path!r} has no leaf {name!r} (stores "
+                f"{sorted(manifest)[:8]}{'...' if len(manifest) > 8 else ''})"
+                f" — the params template does not match the saved twin")
+        fpath = os.path.join(path, manifest[name]["file"])
+        if not os.path.exists(fpath):
+            raise FileNotFoundError(
+                f"checkpoint {path!r} is truncated: manifest lists "
+                f"{manifest[name]['file']!r} for leaf {name!r} but the "
+                f"file is missing")
+        try:
+            arr = np.load(fpath)
+        except (ValueError, OSError) as e:
+            raise ValueError(
+                f"checkpoint array {fpath!r} (leaf {name!r}) is corrupt: "
+                f"{e}") from e
         if tuple(arr.shape) != tuple(tgt.shape):
-            raise ValueError(f"{name}: ckpt shape {arr.shape} != "
-                             f"target {tgt.shape}")
+            raise ValueError(
+                f"{name}: checkpoint shape {tuple(arr.shape)} != template "
+                f"shape {tuple(tgt.shape)} — the checkpointed twin has a "
+                f"different architecture than the params template")
         if shard_named is not None:
             out.append(jax.device_put(arr.astype(tgt.dtype),
                                       shard_named[i][1]))

@@ -1,0 +1,366 @@
+"""Device faults, write–verify programming, and the robustness gates.
+
+The contracts under test (repro.core.faults + the write–verify loop in
+repro.core.analogue + in-kernel injection in the Pallas kernels):
+
+* fault identity is counter-derived — the same (seed, salt, cell) is
+  stuck everywhere: jnp program-time baking and in-kernel re-injection
+  agree bitwise, independent of kernel tiling;
+* ``program_with_verify`` converges on healthy arrays, repairs stuck
+  cells through the differential-pair partner, and reports what it
+  cannot fix;
+* the ISSUE acceptance gate: at 1% stuck cells, write–verify keeps the
+  HP rollout error within 2x the fault-free analogue margin;
+* extreme-but-legal ``AnalogueSpec``s (degenerate g_on ~ g_off, all-zero
+  weights) program without NaNs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analogue as an
+from repro.core.analogue import AnalogueSpec, VerifyConfig
+from repro.core.backends import (AnalogueBackend, DigitalBackend,
+                                 FusedAnalogueBackend)
+from repro.core.faults import (FAULT_SALT_BASE, ConductanceDrift, FaultModel,
+                               StuckCells, WriteFailures, apply_faults_to_prog,
+                               apply_stuck, drift_factor, fault_salt,
+                               make_fault_model)
+from repro.core.twin import TwinFleet, make_driven_twin
+from repro.kernels.noise import stuck_cell_masks
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Registry + validation
+# ---------------------------------------------------------------------------
+
+def test_make_fault_model_composes():
+    m = make_fault_model(("stuck", dict(rate=0.02)), "drift",
+                         ("write_fail", dict(rate=0.3)), seed=7)
+    assert m.stuck == StuckCells(rate=0.02)
+    assert m.drift == ConductanceDrift()
+    assert m.write_fail == WriteFailures(rate=0.3)
+    assert m.seed == 7 and m.stuck_rate == 0.02 and m.write_fail_rate == 0.3
+
+
+def test_make_fault_model_rejects_unknown_and_duplicates():
+    with pytest.raises(ValueError, match="unknown fault mechanism"):
+        make_fault_model("cosmic_rays")
+    with pytest.raises(ValueError, match="given twice"):
+        make_fault_model("stuck", ("stuck", dict(rate=0.1)))
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (StuckCells, dict(rate=1.5)),
+    (StuckCells, dict(on_frac=-0.1)),
+    (ConductanceDrift, dict(nu=-1.0)),
+    (ConductanceDrift, dict(tau=0.0)),
+    (WriteFailures, dict(rate=2.0)),
+])
+def test_mechanism_validation(cls, kw):
+    with pytest.raises(ValueError):
+        cls(**kw)
+
+
+@pytest.mark.parametrize("kw", [dict(tol=0.0), dict(max_retries=-1),
+                                dict(backoff=0.0), dict(backoff=1.5)])
+def test_verify_config_validation(kw):
+    with pytest.raises(ValueError):
+        VerifyConfig(**kw)
+
+
+def test_kernel_args_schema():
+    m = make_fault_model(("stuck", dict(rate=0.05, on_frac=0.25)),
+                         ("drift", dict(nu=0.02, tau=500.0)), seed=3)
+    ka = m.kernel_args(n_reads=40)
+    assert ka == {"stuck_rate": 0.05, "stuck_on_frac": 0.25, "fault_seed": 3,
+                  "salt_base": FAULT_SALT_BASE, "drift_nu": 0.02,
+                  "drift_tau": 500.0, "drift_n0": 40}
+
+
+# ---------------------------------------------------------------------------
+# Counter-derived stuck masks: determinism, tiling independence
+# ---------------------------------------------------------------------------
+
+def test_stuck_masks_deterministic_and_rate():
+    is_stuck, stuck_on = stuck_cell_masks(3, fault_salt(0, 0), (64, 64),
+                                          0.1, 0.5)
+    is_stuck2, _ = stuck_cell_masks(3, fault_salt(0, 0), (64, 64), 0.1, 0.5)
+    np.testing.assert_array_equal(np.asarray(is_stuck), np.asarray(is_stuck2))
+    frac = float(jnp.mean(is_stuck))
+    assert 0.05 < frac < 0.16                  # ~Binomial(4096, 0.1)
+    on = float(jnp.mean(stuck_on[is_stuck]))
+    assert 0.3 < on < 0.7
+    # different salts draw independent masks
+    other, _ = stuck_cell_masks(3, fault_salt(0, 1), (64, 64), 0.1, 0.5)
+    assert bool(jnp.any(is_stuck != other))
+
+
+def test_stuck_masks_tiling_independent():
+    """A (row0, col0) block of the mask equals the slice of the full
+    mask — the property that makes the blocked kernel agree with the
+    unblocked jnp baking."""
+    full, full_on = stuck_cell_masks(9, 17, (32, 48), 0.2, 0.4)
+    blk, blk_on = stuck_cell_masks(9, 17, (8, 16), 0.2, 0.4,
+                                   row0=16, col0=32, ncols=48)
+    np.testing.assert_array_equal(np.asarray(full[16:24, 32:48]),
+                                  np.asarray(blk))
+    np.testing.assert_array_equal(np.asarray(full_on[16:24, 32:48]),
+                                  np.asarray(blk_on))
+
+
+def test_apply_stuck_idempotent():
+    g = jnp.linspace(20e-6, 100e-6, 64).reshape(8, 8)
+    once = apply_stuck(g, 1, 5, 0.3, 0.5, 100e-6, 20e-6)
+    twice = apply_stuck(once, 1, 5, 0.3, 0.5, 100e-6, 20e-6)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+    assert bool(jnp.any(once != g))
+
+
+def test_drift_factor_power_law():
+    m = make_fault_model(("drift", dict(nu=0.05, tau=100.0)))
+    np.testing.assert_allclose(float(drift_factor(m, 300)),
+                               (1 + 300 / 100.0) ** -0.05, rtol=1e-6)
+    assert float(drift_factor(None, 1000)) == 1.0
+    assert float(drift_factor(make_fault_model("stuck"), 1000)) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Write–verify programming
+# ---------------------------------------------------------------------------
+
+def test_program_with_verify_converges_fault_free():
+    w = jax.random.normal(jax.random.PRNGKey(1), (14, 14))
+    spec = AnalogueSpec(prog_noise=0.0436)
+    prog, rep = an.program_with_verify(KEY, w, spec)
+    assert rep.n_unrepairable == 0
+    assert rep.max_error <= rep.tol
+    assert rep.attempts <= 1 + VerifyConfig().max_retries
+    # realised weights match the target well within one quantisation step
+    got = (prog["gp"] - prog["gm"]) / prog["scale"]
+    assert float(jnp.abs(got - w).max()) <= rep.tol * float(
+        jnp.abs(w).max()) * 1.5
+
+
+def test_verify_beats_naive_under_write_failures():
+    w = jax.random.normal(jax.random.PRNGKey(2), (14, 14))
+    spec = AnalogueSpec(prog_noise=0.0436)
+    fm = make_fault_model(("write_fail", dict(rate=0.4)), seed=11)
+    _, rep_naive = an.program_with_verify(
+        KEY, w, spec, faults=fm, verify=VerifyConfig(max_retries=0))
+    _, rep_ver = an.program_with_verify(KEY, w, spec, faults=fm)
+    assert rep_ver.max_error < rep_naive.max_error
+    assert rep_ver.projected_rollout_error < rep_naive.projected_rollout_error
+
+
+def test_verify_repairs_stuck_cells_via_partner():
+    """Stuck cells ignore writes; the loop retargets the partner device
+    so the differential weight still comes out right wherever the range
+    allows — naive programming carries the full fault."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (14, 14))
+    spec = AnalogueSpec(prog_noise=0.0)
+    fm = make_fault_model(("stuck", dict(rate=0.05)), seed=5)
+    _, rep_naive = an.program_with_verify(
+        KEY, w, spec, faults=fm, verify=VerifyConfig(max_retries=0))
+    _, rep_ver = an.program_with_verify(KEY, w, spec, faults=fm)
+    assert rep_ver.mean_error < rep_naive.mean_error
+    assert rep_ver.n_unrepairable < int(rep_naive.unrepairable.sum())
+
+
+def test_unrepairable_cells_reported():
+    """A G_on-stuck cell whose partner would need to exceed g_max to
+    compensate is unrepairable — the report must say so rather than
+    pretend convergence."""
+    w = jax.random.normal(jax.random.PRNGKey(4), (32, 32))
+    spec = AnalogueSpec(prog_noise=0.0)
+    fm = make_fault_model(("stuck", dict(rate=0.5, on_frac=1.0)), seed=2)
+    _, rep = an.program_with_verify(KEY, w, spec, faults=fm)
+    assert rep.n_unrepairable > 0
+    assert rep.unrepairable.shape == w.shape
+    s = rep.summary()
+    assert s["n_unrepairable"] == rep.n_unrepairable
+    assert 0 < s["projected_rollout_error"]
+
+
+def test_program_with_verify_jit_safe():
+    w = jax.random.normal(jax.random.PRNGKey(5), (8, 8))
+    spec = AnalogueSpec(prog_noise=0.0436)
+
+    @jax.jit
+    def run(w):
+        prog, rep = an.program_with_verify(KEY, w, spec)
+        return prog["gp"], rep.max_error
+
+    gp, err = run(w)
+    prog_e, rep_e = an.program_with_verify(KEY, w, spec)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(prog_e["gp"]),
+                               rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Program-time baking == in-kernel injection
+# ---------------------------------------------------------------------------
+
+def test_backend_parity_jnp_vs_fused_under_faults():
+    """AnalogueBackend bakes the stuck cells into the conductances;
+    FusedAnalogueBackend re-derives the same masks inside the kernel —
+    trajectories must agree to float32 rounding."""
+    drive = lambda t: jnp.sin(4 * t)
+    twin = make_driven_twin(1, drive)
+    params = twin.init(KEY)
+    ts = jnp.linspace(0.0, 0.1, 21)
+    y0 = jnp.array([0.2])
+    spec = AnalogueSpec(prog_noise=0.0)
+    fm = make_fault_model(("stuck", dict(rate=0.1)), seed=13)
+    outs = {}
+    for name, be in [
+        ("jnp", AnalogueBackend(spec=spec, prog_key=KEY, faults=fm)),
+        ("fused", FusedAnalogueBackend(spec=spec, prog_key=KEY, faults=fm)),
+    ]:
+        st = be.program(twin.node.field, params)
+        outs[name] = be.rollout(st, y0, ts)
+    np.testing.assert_allclose(np.asarray(outs["jnp"]),
+                               np.asarray(outs["fused"]),
+                               rtol=0, atol=2e-6)
+    # faults actually moved the trajectory
+    clean = AnalogueBackend(spec=spec, prog_key=KEY)
+    st = clean.program(twin.node.field, params)
+    assert float(jnp.abs(clean.rollout(st, y0, ts) - outs["jnp"]).max()) > 1e-4
+
+
+def test_backend_drift_snapshot_matches_factor():
+    """AnalogueBackend's drift snapshot scales the whole differential,
+    so the realised vector field scales by drift_factor(n_reads)."""
+    drive = lambda t: jnp.sin(4 * t)
+    twin = make_driven_twin(1, drive)
+    params = twin.init(KEY)
+    spec = AnalogueSpec(prog_noise=0.0, quantize=False)
+    fm = make_fault_model(("drift", dict(nu=0.05, tau=100.0)), seed=0)
+    be0 = AnalogueBackend(spec=spec, prog_key=KEY)
+    be1 = AnalogueBackend(spec=spec, prog_key=KEY, faults=fm, n_reads=400)
+    st0 = be0.program(twin.node.field, params)
+    st1 = be1.program(twin.node.field, params)
+    x = jnp.array([0.3])
+    f0 = be0.apply(st0, 0.1, x)
+    f1 = be1.apply(st1, 0.1, x)
+    fac = float(drift_factor(fm, 400))
+    # layered nonlinearity means the output is not exactly fac * f0, but
+    # the first-layer preactivation is — check via a linear probe: both
+    # must differ, and re-scaling the conductances back must recover f0
+    st_rescaled = be0.program(twin.node.field, params)
+    assert float(jnp.abs(f1 - f0).max()) > 0
+    progs1 = st1.field.progs
+    progs0 = st0.field.progs
+    for p0, p1 in zip(progs0, progs1):
+        np.testing.assert_allclose(np.asarray(p1["gp"]),
+                                   np.asarray(p0["gp"]) * fac, rtol=1e-6)
+
+
+def test_uint8_storage_rejects_drift():
+    twin = make_driven_twin(1, lambda t: jnp.sin(t))
+    params = twin.init(KEY)
+    fm = make_fault_model("drift")
+    be = AnalogueBackend(spec=AnalogueSpec(prog_noise=0.0), storage="uint8",
+                         faults=fm)
+    with pytest.raises(ValueError, match="drift"):
+        be.program(twin.node.field, params)
+
+
+def test_apply_faults_to_prog_uint8_stuck_on_grid():
+    spec = AnalogueSpec(prog_noise=0.0)
+    w = jax.random.normal(jax.random.PRNGKey(6), (16, 16))
+    prog = an.program_tensor(KEY, w, spec)
+    staged = an.stage_uint8(prog, spec)
+    fm = make_fault_model(("stuck", dict(rate=0.2)), seed=4)
+    out = apply_faults_to_prog(staged, fm, spec, layer=0)
+    # float view and uint8 view stay consistent (stuck levels are the
+    # grid endpoints)
+    step = (spec.g_max - spec.g_min) / (spec.levels - 1)
+    recon = spec.g_min + out["gp_idx"].astype(jnp.float32) * step
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(out["gp"]),
+                               rtol=0, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# The ISSUE acceptance gate: 1% stuck + write–verify within 2x fault-free
+# ---------------------------------------------------------------------------
+
+def test_hp_rollout_error_within_2x_margin_at_1pct_stuck():
+    fam = lambda t, th: th[0] * jnp.sin(2.0 * jnp.pi * th[1] * t)
+    twin = make_driven_twin(1, drive=None, hidden=14)
+    params = twin.init(KEY)
+    fleet = TwinFleet(twin, drive_family=fam)
+    ts = jnp.linspace(0.0, 0.1, 101)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    y0s = 0.3 * jax.random.normal(k1, (8, 1))
+    thetas = 1.0 + jax.random.uniform(k2, (8, 2))
+    ref = fleet.rollout_batch(params, y0s, ts, thetas)
+    refn = float(jnp.linalg.norm(ref))
+    spec = AnalogueSpec(prog_noise=0.0436)
+    pk = jax.random.PRNGKey(17)
+
+    def err(be):
+        out = fleet.with_backend(be).rollout_batch(params, y0s, ts, thetas)
+        return float(jnp.linalg.norm(out - ref)) / refn
+
+    margin = err(FusedAnalogueBackend(spec=spec, prog_key=pk))
+    fm = make_fault_model(("stuck", dict(rate=0.01)), seed=3)
+    e_verify = err(FusedAnalogueBackend(spec=spec, prog_key=pk, faults=fm,
+                                        verify=VerifyConfig()))
+    assert e_verify <= 2.0 * margin, (e_verify, margin)
+
+
+def test_repair_reports_surface_through_backend():
+    twin = make_driven_twin(1, lambda t: jnp.sin(t))
+    params = twin.init(KEY)
+    fm = make_fault_model(("stuck", dict(rate=0.02)), seed=1)
+    for be in [AnalogueBackend(faults=fm, verify=VerifyConfig()),
+               FusedAnalogueBackend(faults=fm, verify=VerifyConfig())]:
+        st = be.program(twin.node.field, params)
+        reps = (st.extra.get("repair_reports") if isinstance(st.extra, dict)
+                else None)
+        assert reps is not None and len(reps) == len(params)
+        assert all(r.attempts >= 1 for r in reps)
+
+
+# ---------------------------------------------------------------------------
+# Extreme-but-legal specs (satellite: programming_error / stage_uint8)
+# ---------------------------------------------------------------------------
+
+def test_programming_error_zero_weights():
+    spec = AnalogueSpec(prog_noise=0.0)
+    w = jnp.zeros((6, 5))
+    prog = an.program_tensor(KEY, w, spec)
+    e = an.programming_error(prog, w, spec)
+    assert bool(jnp.isfinite(e).all()) and float(e.max()) == 0.0
+    staged = an.stage_uint8(prog, spec)
+    assert int(staged["gp_idx"].max()) == 0  # all cells parked at g_min
+
+
+def test_programming_error_degenerate_range():
+    """g_on ~ g_off (worn array): the mapping degrades gracefully —
+    finite errors, uint8 staging round-trips."""
+    spec = AnalogueSpec(g_min=50e-6, g_max=50.0001e-6, prog_noise=0.0)
+    w = jax.random.normal(jax.random.PRNGKey(8), (8, 8))
+    prog = an.program_tensor(KEY, w, spec)
+    e = an.programming_error(prog, w, spec)
+    assert bool(jnp.isfinite(e).all())
+    staged = an.stage_uint8(prog, spec)
+    step = (spec.g_max - spec.g_min) / (spec.levels - 1)
+    recon = spec.g_min + staged["gp_idx"].astype(jnp.float32) * step
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(prog["gp"]),
+                               rtol=0, atol=step)
+
+
+def test_analogue_spec_rejects_inverted_range():
+    with pytest.raises(ValueError, match="g_max"):
+        AnalogueSpec(g_min=100e-6, g_max=20e-6)
+    with pytest.raises(ValueError, match="levels"):
+        AnalogueSpec(levels=1)
+    with pytest.raises(ValueError, match="sigmas"):
+        AnalogueSpec(prog_noise=-0.1)

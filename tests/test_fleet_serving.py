@@ -16,10 +16,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.backends import FusedPallasBackend
+from repro.core.analogue import AnalogueSpec
+from repro.core.backends import (AnalogueBackend, DigitalBackend,
+                                 FusedAnalogueBackend, FusedPallasBackend)
+from repro.core.faults import make_fault_model
 from repro.core.twin import TwinFleet, make_autonomous_twin, make_driven_twin
-from repro.launch.fleet_serving import (FleetServer, pad_fleet_inputs,
-                                        padded_size, serve_fleet)
+from repro.launch.fleet_serving import (FleetServer, ServingSLO,
+                                        fallback_chain, pad_fleet_inputs,
+                                        padded_size, serve_fleet,
+                                        shard_rollout_batch,
+                                        validate_fleet_request)
 from repro.launch.mesh import make_twin_mesh, twin_shard_count
 from repro.train import checkpoint as ckpt
 
@@ -114,6 +120,162 @@ def test_fleet_server_serves_and_unpads(l96_small):
 
 
 # ---------------------------------------------------------------------------
+# Front-door validation: errors name the offending argument
+# ---------------------------------------------------------------------------
+
+def test_serve_rejects_nan_y0s(l96_small):
+    twin, params, ts, y0s = l96_small
+    server = FleetServer(TwinFleet(twin), params, ts)
+    bad = y0s.at[2, 1].set(jnp.nan)
+    with pytest.raises(ValueError, match="y0s.*non-finite"):
+        server.serve(bad)
+
+
+def test_serve_rejects_inf_drive_params():
+    twin = make_driven_twin(1, drive=None, hidden=8)
+    params = twin.init(jax.random.PRNGKey(2))
+    fleet = TwinFleet(twin, drive_family=lambda t, th: th[0] * t)
+    server = FleetServer(fleet, params, jnp.linspace(0.0, 0.05, 11))
+    y0s = jnp.zeros((4, 1))
+    with pytest.raises(ValueError, match="drive_params.*non-finite"):
+        server.serve(y0s, jnp.full((4, 1), jnp.inf))
+
+
+def test_server_rejects_non_monotone_ts(l96_small):
+    twin, params, _, _ = l96_small
+    with pytest.raises(ValueError, match="ts must be strictly increasing"):
+        FleetServer(TwinFleet(twin), params, jnp.array([0.0, 0.2, 0.1]))
+    with pytest.raises(ValueError, match="ts must be a 1-D time grid"):
+        FleetServer(TwinFleet(twin), params, jnp.array([0.0]))
+
+
+def test_shard_rollout_batch_validates(l96_small):
+    twin, params, ts, y0s = l96_small
+    fleet = TwinFleet(twin)
+    bad_ts = jnp.concatenate([ts[:-1], ts[-2:-1]])   # repeated point
+    with pytest.raises(ValueError, match="shard_rollout_batch.*ts"):
+        fleet.rollout_batch(params, y0s, bad_ts, mesh=make_twin_mesh())
+    with pytest.raises(ValueError, match="shard_rollout_batch.*y0s"):
+        fleet.rollout_batch(params, y0s.at[0, 0].set(jnp.inf), ts,
+                            mesh=make_twin_mesh())
+
+
+def test_validate_skips_tracers():
+    @jax.jit
+    def f(y):
+        validate_fleet_request("inner", y0s=y)   # must not concretise
+        return y * 2
+
+    out = f(jnp.array([[jnp.nan]]))              # value check skipped
+    assert out.shape == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# SLO / graceful degradation
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hp_serving():
+    fam = lambda t, th: th[0] * jnp.sin(2.0 * jnp.pi * th[1] * t)
+    twin = make_driven_twin(1, drive=None, hidden=14)
+    params = twin.init(jax.random.PRNGKey(0))
+    fleet = TwinFleet(twin, drive_family=fam)
+    ts = jnp.linspace(0.0, 0.1, 101)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    y0s = 0.3 * jax.random.normal(k1, (6, 1))
+    thetas = 1.0 + jax.random.uniform(k2, (6, 2))
+    return fleet, params, ts, y0s, thetas
+
+
+def test_serving_slo_validation():
+    with pytest.raises(ValueError, match="max_rel_error"):
+        ServingSLO(max_rel_error=0.0)
+    with pytest.raises(ValueError, match="probe_every"):
+        ServingSLO(probe_every=0)
+    with pytest.raises(ValueError, match="max_retries"):
+        ServingSLO(max_retries=-1)
+    with pytest.raises(ValueError, match="timeout_s"):
+        ServingSLO(timeout_s=0.0)
+
+
+def test_fallback_chain_shapes(hp_serving):
+    fleet = hp_serving[0]
+    spec = AnalogueSpec(prog_noise=0.0, read_noise=0.01)
+    names = [n for n, _ in fallback_chain(
+        fleet.with_backend(FusedAnalogueBackend(spec=spec)))]
+    assert names == ["analogue_fused", "analogue_fused_clean", "digital"]
+    names = [n for n, _ in fallback_chain(
+        fleet.with_backend(AnalogueBackend(spec=spec)))]
+    assert names == ["analogue", "analogue_fused_clean", "digital"]
+    assert [n for n, _ in fallback_chain(
+        fleet.with_backend(DigitalBackend()))] == ["digital"]
+    # last tier is always digital for analogue primaries
+    for be in [AnalogueBackend(), FusedAnalogueBackend()]:
+        assert fallback_chain(fleet.with_backend(be))[-1][0] == "digital"
+
+
+def test_healthy_array_serves_primary(hp_serving):
+    fleet, params, ts, y0s, thetas = hp_serving
+    healthy = fleet.with_backend(FusedAnalogueBackend(
+        spec=AnalogueSpec(prog_noise=0.0436), prog_key=jax.random.PRNGKey(7)))
+    srv = FleetServer(healthy, params, ts, slo=ServingSLO(
+        max_rel_error=0.2, probe_every=2, probe_horizon=101, probe_fleet=2))
+    for _ in range(2):
+        out = srv.serve(y0s, thetas)
+        assert bool(jnp.isfinite(out).all())
+    assert srv.active_tier == "analogue_fused"
+    assert srv.stats.served_by == {"analogue_fused": 2}
+    assert srv.stats.probe_demotions == 0
+    assert srv.stats.probes >= 1
+
+
+def test_unrepairable_array_falls_back_to_digital(hp_serving):
+    """The ISSUE acceptance gate: with an unrepairable array (30% stuck
+    cells) every request is still served — via the digital tier, zero
+    NaN outputs, demotion counted — and the served trajectories match
+    the digital fleet exactly."""
+    fleet, params, ts, y0s, thetas = hp_serving
+    broken = fleet.with_backend(FusedAnalogueBackend(
+        spec=AnalogueSpec(prog_noise=0.0436), prog_key=jax.random.PRNGKey(7),
+        faults=make_fault_model(("stuck", dict(rate=0.3)), seed=5)))
+    srv = FleetServer(broken, params, ts, slo=ServingSLO(
+        max_rel_error=0.05, probe_every=1, probe_horizon=101, probe_fleet=2))
+    outs = [srv.serve(y0s, thetas) for _ in range(3)]
+    assert all(bool(jnp.isfinite(o).all()) for o in outs)
+    assert srv.active_tier == "digital"
+    assert srv.stats.probe_demotions >= 1
+    assert srv.stats.served_by == {"digital": 3}
+    ref = fleet.with_backend(DigitalBackend()).rollout_batch(
+        params, y0s, ts, thetas)
+    np.testing.assert_allclose(np.asarray(outs[-1]), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+
+
+def test_probe_recovers_after_demotion(hp_serving):
+    """Probing restarts from the primary tier, so a server that was
+    demoted (here: forced) promotes back once the array meets the SLO."""
+    fleet, params, ts, y0s, thetas = hp_serving
+    healthy = fleet.with_backend(FusedAnalogueBackend(
+        spec=AnalogueSpec(prog_noise=0.0436), prog_key=jax.random.PRNGKey(7)))
+    srv = FleetServer(healthy, params, ts, slo=ServingSLO(
+        max_rel_error=0.2, probe_every=1, probe_horizon=101, probe_fleet=2))
+    srv._active = len(srv._tiers) - 1          # simulate a past demotion
+    srv.serve(y0s, thetas)
+    assert srv.active_tier == "analogue_fused"
+    assert srv.stats.probe_recoveries == 1
+
+
+def test_serve_without_slo_keeps_legacy_path(l96_small):
+    twin, params, ts, y0s = l96_small
+    srv = FleetServer(TwinFleet(twin), params, ts)
+    out = srv.serve(y0s[:5])
+    ref = TwinFleet(twin).simulate(params, y0s[:5], ts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-6)
+    assert srv.stats.requests == 1 and srv.stats.probes == 0
+
+
+# ---------------------------------------------------------------------------
 # Checkpoint save -> load -> serve round trip
 # ---------------------------------------------------------------------------
 
@@ -130,6 +292,91 @@ def test_twin_checkpoint_roundtrip(tmp_path, l96_small):
 def test_load_twin_missing_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         ckpt.load_twin(str(tmp_path / "nowhere"), {})
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint damage: every failure mode gets a descriptive error
+# ---------------------------------------------------------------------------
+
+def _save_one(tmp_path, params):
+    ckpt.save_twin(str(tmp_path), params, step=1)
+    return os.path.join(str(tmp_path), "step_0000000001")
+
+
+def test_load_twin_corrupt_manifest(tmp_path, l96_small):
+    twin, params, _, _ = l96_small
+    step_dir = _save_one(tmp_path, params)
+    with open(os.path.join(step_dir, "manifest.json"), "w") as f:
+        f.write('{"schema": 1, "leav')           # truncated mid-write
+    with pytest.raises(ValueError, match="corrupt.*invalid JSON"):
+        ckpt.load_twin(str(tmp_path), params, step=1)
+
+
+def test_load_twin_missing_manifest(tmp_path, l96_small):
+    twin, params, _, _ = l96_small
+    step_dir = _save_one(tmp_path, params)
+    os.remove(os.path.join(step_dir, "manifest.json"))
+    with pytest.raises(FileNotFoundError, match="no manifest.json"):
+        ckpt.load_twin(str(tmp_path), params, step=1)
+
+
+def test_load_twin_truncated_arrays(tmp_path, l96_small):
+    twin, params, _, _ = l96_small
+    step_dir = _save_one(tmp_path, params)
+    os.remove(os.path.join(step_dir, "arr_00000.npy"))
+    with pytest.raises(FileNotFoundError, match="truncated"):
+        ckpt.load_twin(str(tmp_path), params, step=1)
+
+
+def test_load_twin_corrupt_array(tmp_path, l96_small):
+    twin, params, _, _ = l96_small
+    step_dir = _save_one(tmp_path, params)
+    with open(os.path.join(step_dir, "arr_00000.npy"), "wb") as f:
+        f.write(b"\x93NUMPY\x01\x00garbage")
+    with pytest.raises(ValueError, match="arr_00000.npy.*corrupt"):
+        ckpt.load_twin(str(tmp_path), params, step=1)
+
+
+def test_load_twin_schema_mismatch(tmp_path, l96_small):
+    import json
+
+    twin, params, _, _ = l96_small
+    step_dir = _save_one(tmp_path, params)
+    mpath = os.path.join(step_dir, "manifest.json")
+    with open(mpath) as f:
+        doc = json.load(f)
+    doc["schema"] = 99
+    with open(mpath, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(ValueError, match="schema 99.*schema 1"):
+        ckpt.load_twin(str(tmp_path), params, step=1)
+
+
+def test_load_twin_shape_mismatch(tmp_path, l96_small):
+    twin, params, _, _ = l96_small
+    _save_one(tmp_path, params)
+    other = make_autonomous_twin(4, hidden=24)   # different architecture
+    template = other.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="different architecture"):
+        ckpt.load_twin(str(tmp_path), template, step=1)
+
+
+def test_load_twin_pre_versioned_manifest_still_loads(tmp_path, l96_small):
+    """Checkpoints written before the schema field existed read as v1."""
+    import json
+
+    twin, params, _, _ = l96_small
+    step_dir = _save_one(tmp_path, params)
+    mpath = os.path.join(step_dir, "manifest.json")
+    with open(mpath) as f:
+        doc = json.load(f)
+    del doc["schema"]
+    with open(mpath, "w") as f:
+        json.dump(doc, f)
+    restored = ckpt.load_twin(str(tmp_path), params, step=1)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_checkpoint_serve_matches_in_memory(tmp_path, l96_small):
