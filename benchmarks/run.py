@@ -38,6 +38,11 @@ against.  Modules:
                          rows gate the 2x fault-free margin) and the
                          SLO-armed FleetServer serving an unrepairable
                          array through the digital fallback tier
+  serving_latency      — streaming stateful serving: per-request p50/p99
+                         latency and sustained twin-steps/s of the
+                         StreamingFleetServer replaying a seeded Poisson
+                         trace with a 4x-oversubscribed (paging) resident
+                         population
   roofline             — per-(arch x shape) roofline table from the dry-run
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only kernels
@@ -83,6 +88,24 @@ def _timeit(fn, *args, repeats=3, best=False):
         jax.block_until_ready(fn(*args))
         times.append(time.time() - t0)
     return (min(times) if best else sum(times) / repeats) * 1e6
+
+
+def _walltime(fn, *, repeats: int = 1):
+    """Host wall-time per call in us for serving-path work that
+    ``_timeit`` cannot see (state-store paging, queue pumping, crossbar
+    programming — host control flow around device calls, not one jitted
+    fn).  Callers pass a closure that already blocks on its device work;
+    returns ``(us_per_call, last_result)`` so one-shot measurements keep
+    their product.  The warm-up/best-of discipline stays in ``_timeit``;
+    this helper is for end-to-end loops where every iteration is real
+    work (a served batch, a programmed array) and averaging is the
+    honest statistic.
+    """
+    out = None
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn()
+    return (time.time() - t0) * 1e6 / repeats, out
 
 
 def _env_metadata() -> dict:
@@ -722,11 +745,10 @@ def bench_fault_tolerance():
                               ("write_fail", dict(rate=0.1)), seed=3)
         e_naive = rollout_err(FusedAnalogueBackend(spec=spec, prog_key=pk,
                                                    faults=fm))
-        t0 = time.time()
         be_v = FusedAnalogueBackend(spec=spec, prog_key=pk, faults=fm,
                                     verify=VerifyConfig())
-        st = be_v.program(twin.node.field, params)
-        us_prog = (time.time() - t0) * 1e6
+        us_prog, st = _walltime(
+            lambda: be_v.program(twin.node.field, params))
         e_verify = rollout_err(be_v)
         rep = st.extra["repair_reports"]
         unrep = sum(r.n_unrepairable for r in rep)
@@ -753,17 +775,16 @@ def bench_fault_tolerance():
         faults=make_fault_model(("stuck", dict(rate=0.3)), seed=5)))
     srv_b = FleetServer(broken, params, ts, slo=slo)
     batches = 2 if FAST else 4
-    nan_h = nan_b = 0
-    t0 = time.time()
-    for _ in range(batches):
-        out = srv_h.serve(y0s, thetas)
-        nan_h += int(jnp.sum(~jnp.isfinite(out)))
-    us_h = (time.time() - t0) * 1e6 / batches
-    t0 = time.time()
-    for _ in range(batches):
-        out = srv_b.serve(y0s, thetas)
-        nan_b += int(jnp.sum(~jnp.isfinite(out)))
-    us_b = (time.time() - t0) * 1e6 / batches
+    nans = {"h": 0, "b": 0}
+
+    def serve_once(srv, key):
+        out = srv.serve(y0s, thetas)
+        nans[key] += int(jnp.sum(~jnp.isfinite(out)))
+        return out
+
+    us_h, _ = _walltime(lambda: serve_once(srv_h, "h"), repeats=batches)
+    us_b, _ = _walltime(lambda: serve_once(srv_b, "b"), repeats=batches)
+    nan_h, nan_b = nans["h"], nans["b"]
     emit("fault_tolerance/serving/healthy", us_h,
          f"tier {srv_h.active_tier} served_by {srv_h.stats.served_by} "
          f"nan_outputs {nan_h}")
@@ -771,6 +792,89 @@ def bench_fault_tolerance():
          f"tier {srv_b.active_tier} served_by {srv_b.stats.served_by} "
          f"nan_outputs {nan_b} demotions {srv_b.stats.probe_demotions} "
          f"probe_err {srv_b.stats.probe_errors.get('analogue_fused', -1):.3f}")
+
+
+def bench_serving_latency():
+    """Streaming stateful serving under Poisson load
+    (``docs/serving.md``).
+
+    One :class:`StreamingFleetServer` on the fused substrate, resident
+    population 4x the hot set (every request risks a page-in), replaying
+    a seeded Poisson arrival trace.  Rows:
+
+      ``request_latency``  per-request wall latency submit -> completion
+                           (p50/p99 ms) under continuous batching;
+      ``throughput``       sustained twin-steps/s over a full closed-loop
+                           trace replay, plus the ragged-horizon padding
+                           overhead the batcher paid;
+      ``paging``           state-store counters proving the hot slab
+                           actually paged (evictions > 0) with zero
+                           dropped requests.
+    """
+    import jax
+    import numpy as np
+    from repro.core.backends import FusedPallasBackend
+    from repro.core.twin import TwinFleet, make_autonomous_twin
+    from repro.launch import traffic
+    from repro.launch.fleet_serving import StreamingFleetServer, StreamStats
+
+    n_req = 60 if FAST else 200
+    population = 32 if FAST else 128
+    hot = population // 4            # 4x oversubscription: paging is real
+    twin = make_autonomous_twin(
+        state_dim=8, hidden=16, n_hidden_layers=1, gradient="fused_vjp",
+        backend=FusedPallasBackend(precision="f32"))
+    params = twin.init(jax.random.PRNGKey(0))
+    server = StreamingFleetServer(
+        TwinFleet(twin=twin), params, dt=1e-2, hot_capacity=hot,
+        max_batch=min(16, hot), max_window=32, horizon_quantum=8)
+    trace = traffic.poisson_trace(0, n_req, rate_hz=500.0,
+                                  population=population, min_horizon=4,
+                                  max_horizon=48)
+    rng = np.random.default_rng(1)
+    y0s = {a.twin_id: rng.normal(size=8).astype(np.float32) * 0.1
+           for a in trace}
+
+    # pass 1 (unmeasured): compiles every (tier, window) program and
+    # registers the population, so the measured passes see the steady
+    # state a resident server actually serves from
+    server.serve_trace(trace, y0_of=y0s.__getitem__)
+
+    # pass 2: per-request wall latency under continuous batching
+    server.stats = StreamStats()
+    t_submit, lat = {}, []
+    for a in trace:
+        seq = server.submit(a.twin_id, a.horizon, t_arrival=a.time)
+        t_submit[seq] = time.time()
+        if server.pending >= server.max_batch:
+            for c in server.pump():
+                lat.append(time.time() - t_submit.pop(c.seq))
+    while server.pending:
+        for c in server.pump():
+            lat.append(time.time() - t_submit.pop(c.seq))
+    assert server.stats.failed == 0 and not t_submit, "dropped requests"
+    p50, p99 = np.percentile(np.asarray(lat) * 1e3, [50, 99])
+    emit("serving_latency/poisson/request_latency",
+         float(np.mean(lat)) * 1e6,
+         f"p50_ms {p50:.2f} p99_ms {p99:.2f} n_requests {len(lat)} "
+         f"batches {server.stats.batches}")
+
+    # pass 3: sustained throughput over a whole closed-loop replay
+    server.stats = StreamStats()
+    us_replay, done = _walltime(
+        lambda: server.serve_trace(trace, y0_of=y0s.__getitem__))
+    s = server.stats
+    rate = s.twin_steps / (us_replay * 1e-6)
+    overhead = s.padded_steps / max(s.twin_steps + s.padded_steps, 1)
+    emit("serving_latency/poisson/throughput", us_replay,
+         f"twin_steps_per_s {rate:.0f} served {s.served} "
+         f"splits {s.splits} padded_frac {overhead:.2f}")
+
+    st = server.store.stats
+    emit("serving_latency/poisson/paging", 0.0,
+         f"population {population} hot_capacity {hot} "
+         f"evictions {st.evictions} page_ins {st.page_ins} "
+         f"hot_hits {st.hot_hits} dropped 0")
 
 
 def bench_roofline():
@@ -800,6 +904,7 @@ BENCHES = {
     "fleet_sharded": bench_fleet_sharded,
     "train_throughput": bench_train_throughput,
     "fault_tolerance": bench_fault_tolerance,
+    "serving_latency": bench_serving_latency,
     "roofline": bench_roofline,
 }
 

@@ -168,6 +168,68 @@ class BaseBackend:
 
         return jax.vmap(single)(y0s, drive_params)
 
+    # -- resume-from-state rollouts (streaming serving) ---------------------
+    @staticmethod
+    def _resume_starts(start_steps, n: int) -> np.ndarray:
+        """Normalise ``start_steps`` to a concrete (N,) int64 vector of
+        per-twin global step offsets.  Offsets are HOST values by design
+        — they index the canonical time grid, which must be computed in
+        float64 outside any trace (see :func:`repro.kernels.ops
+        .window_times`); a traced offset would force the 1-ulp-wrong
+        on-device grid arithmetic the contract exists to forbid."""
+        if start_steps is None:
+            return np.zeros(n, np.int64)
+        if isinstance(start_steps, jax.core.Tracer):
+            raise ValueError(
+                "rollout_batch_resumed: start_steps must be concrete host "
+                "integers (they parameterise the canonical float64 time "
+                "grid); do not pass them through jit")
+        starts = np.asarray(start_steps, np.int64)
+        if starts.ndim == 0:
+            starts = np.broadcast_to(starts, (n,)).copy()
+        if starts.shape != (n,) or (starts < 0).any():
+            raise ValueError(
+                f"rollout_batch_resumed: start_steps must be {n} "
+                f"non-negative per-twin step offsets, got shape "
+                f"{starts.shape}")
+        return starts
+
+    def rollout_batch_resumed(self, state: ExecState, ys, *, dt: float,
+                              num_steps: int, t0: float = 0.0,
+                              start_steps=None,
+                              drive_family: Optional[Callable] = None,
+                              drive_params: Optional[jax.Array] = None,
+                              **kw) -> jax.Array:
+        """Fleet rollout resuming each twin from a carried (y, t) instead
+        of t0: twin i advances ``num_steps`` RK4 steps from its own
+        global step ``start_steps[i]`` on the canonical uniform grid
+        ``t = t0 + dt*k``.  Returns (N, num_steps+1, D) with row 0 the
+        carried states.
+
+        The determinism contract (``docs/serving.md``, enforced by
+        ``tests/test_streaming.py``): every time value is derived in
+        float64 from ``(t0, dt, global step index)`` and rounded to f32
+        once (:func:`repro.kernels.ops.window_times`), so serving
+        ``[0, k)`` then ``[k, T)`` through a state store is bit-identical
+        (f32 substrates) to serving ``[0, T)`` in one call — splitting
+        never changes the arithmetic, only where the HBM round-trip
+        happens.  ``start_steps=None`` means all twins start at t0
+        (fresh rollout through the same code path).
+        """
+        from repro.kernels.ops import window_times
+        ys = jnp.asarray(ys)
+        starts = self._resume_starts(start_steps, ys.shape[0])
+        tss = window_times(t0, dt, int(num_steps), starts)     # (N, H+1)
+        if drive_family is None:
+            return jax.vmap(
+                lambda y, ts: self.rollout(state, y, ts, **kw))(ys, tss)
+
+        def single(y, ts, theta):
+            st = _with_drive(state, lambda t: drive_family(t, theta))
+            return self.rollout(st, y, ts, **kw)
+
+        return jax.vmap(single)(ys, tss, drive_params)
+
 
 # ---------------------------------------------------------------------------
 # Digital backend — the training substrate
@@ -391,7 +453,7 @@ class FusedPallasBackend(BaseBackend):
         return half_step_drive(drive, ts_fine).astype(jnp.float32)
 
     def _solve(self, state: ExecState, y0s, uh, dt, bt, gradient,
-               precision=None):
+               precision=None, step_offset=0):
         """Dispatch the fused solve in the requested gradient mode.
 
         Every differentiable mode ('adjoint'/'direct'/'fused_vjp') maps
@@ -399,12 +461,17 @@ class FusedPallasBackend(BaseBackend):
         replay); 'stopgrad' detaches.  The dispatch itself lives in
         :func:`repro.kernels.ops.fused_node_rollout` — one copy.
         ``precision=None`` falls back to the backend's policy.
+        ``step_offset`` (the global step index of ``y0s`` in a resumed
+        rollout) is irrelevant here — the digital RK4 arithmetic is
+        time-translation-invariant once the drive is sampled — but the
+        analogue subclass keys its noise/drift streams on it.
 
         NOTE: under the fused VJP the drive is data (zero cotangent), so
         gradients w.r.t. per-twin ``drive_params`` are silently zero on
         this substrate — calibrate drive parameters on the digital
         backend.
         """
+        del step_offset
         from repro.kernels import ops
         params = [{"w": w, "b": b} for w, b in
                   zip(state.extra["weights"], state.extra["biases"])]
@@ -414,6 +481,70 @@ class FusedPallasBackend(BaseBackend):
             interpret=self.interpret,
             vmem_budget_bytes=self.vmem_budget_bytes, gradient=mode,
             precision=self.precision if precision is None else precision)
+
+    def _u_half_window(self, state: ExecState, t0, dt, num_steps,
+                       starts: np.ndarray,
+                       drive_family: Optional[Callable],
+                       drive_params: Optional[jax.Array]) -> jax.Array:
+        """Drive on the canonical half-step window of each twin: shared
+        (2H+1, Du) when every twin sits at the same global step with one
+        drive, per-twin (N, 2H+1, Du) otherwise (ragged phases — the
+        kernel's per-tile drive slabs take it from there)."""
+        from repro.kernels import ops
+        drive = getattr(state.field, "drive", None)
+        if drive_family is not None:
+            ths = ops.half_step_times(t0, dt, num_steps, starts)
+
+            def row(ts_row, theta):
+                u = jax.vmap(lambda t: drive_family(t, theta))(ts_row)
+                return u[:, None] if u.ndim == 1 else u
+
+            return jax.vmap(row)(ths, drive_params).astype(jnp.float32)
+        if drive is None:
+            return jnp.zeros((2 * num_steps + 1, 0), jnp.float32)
+        homogeneous = starts.size > 0 and bool((starts == starts[0]).all())
+        start = int(starts[0]) if homogeneous else starts
+        return ops.sample_drive_window(
+            drive, t0, dt, num_steps, start).astype(jnp.float32)
+
+    def rollout_batch_resumed(self, state: ExecState, ys, *, dt: float,
+                              num_steps: int, t0: float = 0.0,
+                              start_steps=None,
+                              drive_family: Optional[Callable] = None,
+                              drive_params: Optional[jax.Array] = None,
+                              method: str = "rk4",
+                              steps_per_interval: int = 1,
+                              gradient: str = "fused_vjp",
+                              precision: Optional[str] = None) -> jax.Array:
+        """Resume-from-state fleet solve on the fused substrate.
+
+        Each twin's carried state enters the kernel through the same
+        storage-dtype seed path as trajectory rows leave it (see the
+        chunk-carry contract in :mod:`repro.kernels.fused_ode_mlp`), and
+        its drive window is sampled on the canonical global half-step
+        grid — so splitting a rollout at any step and resuming from the
+        stored row is bit-identical to the uninterrupted solve under f32
+        (and pure bf16) storage, and within one storage rounding under
+        bf16_f32acc.  Mixed phases batch fine: heterogeneous
+        ``start_steps`` switch to per-twin drive slabs.
+        """
+        from repro.kernels.fused_ode_mlp import pad_fleet_to_tile
+        if method != "rk4" or steps_per_interval != 1:
+            raise ValueError(
+                "FusedPallasBackend.rollout_batch_resumed integrates "
+                "plain RK4 on the canonical step grid (method='rk4', "
+                f"steps_per_interval=1), got method={method!r}, "
+                f"steps_per_interval={steps_per_interval}")
+        ys = jnp.asarray(ys)
+        starts = self._resume_starts(start_steps, ys.shape[0])
+        uh = self._u_half_window(state, t0, dt, int(num_steps), starts,
+                                 drive_family, drive_params)
+        homogeneous = starts.size > 0 and bool((starts == starts[0]).all())
+        offset = int(starts[0]) if homogeneous else 0
+        y0s, uh, bt, B = pad_fleet_to_tile(ys, uh, self.batch_tile)
+        traj = self._solve(state, y0s, uh, float(dt), bt, gradient,
+                           precision, step_offset=offset)
+        return jnp.transpose(traj[:, :B], (1, 0, 2))
 
     # -- execution ---------------------------------------------------------
     def rollout(self, state: ExecState, y0, ts, *, method: str = "rk4",
@@ -560,17 +691,24 @@ class FusedAnalogueBackend(FusedPallasBackend):
 
     # -- execution ---------------------------------------------------------
     def _solve(self, state: ExecState, y0s, uh, dt, bt, gradient,
-               precision=None):
+               precision=None, step_offset=0):
         """Dispatch the fused analogue solve.  ``gradient`` is ignored
         (always detached — see class docstring) and so is ``precision``
-        (the substrate is float32)."""
+        (the substrate is float32).  ``step_offset`` keys the read-noise
+        salts and drift exponent to the global step index of ``y0s``, so
+        a resumed rollout replays the uninterrupted noise stream — it is
+        only exact when the whole batch shares one offset
+        (``rollout_batch_resumed`` passes 0 for mixed-phase batches:
+        deterministic per batch, equal in distribution, not a bitwise
+        replay)."""
         del gradient, precision
         from repro.kernels import ops
         return ops.fused_analogue_rollout(
             state.extra, y0s, uh, dt, batch_tile=bt,
             time_chunk=self.time_chunk, interpret=self.interpret,
             vmem_budget_bytes=self.vmem_budget_bytes,
-            read_noise=self.spec.read_noise, noise_seed=self.read_seed)
+            read_noise=self.spec.read_noise, noise_seed=self.read_seed,
+            step_offset=step_offset)
 
 
 DEFAULT_BACKEND = DigitalBackend()

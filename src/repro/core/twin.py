@@ -142,6 +142,36 @@ class TwinFleet:
                                         drive_params=drive_params,
                                         mesh=mesh)
 
+    def rollout_batch_resumed(self, params: Pytree, ys: jax.Array, *,
+                              dt: float, num_steps: int, t0: float = 0.0,
+                              start_steps=None,
+                              drive_params: Optional[jax.Array] = None,
+                              **kw) -> jax.Array:
+        """Resume-from-state fleet rollout: advance each twin
+        ``num_steps`` RK4 steps from its carried state ``ys[i]`` at its
+        own global step ``start_steps[i]`` on the canonical uniform grid
+        ``t = t0 + dt*k`` -> (N, num_steps+1, D).
+
+        This is the streaming-serving primitive behind
+        :class:`repro.launch.fleet_serving.StreamingFleetServer`: a twin
+        served over ``[0, k)`` then ``[k, T)`` through a state store
+        gets bit-identical trajectories (f32 substrates) to one served
+        over ``[0, T)`` in a single request — see
+        :meth:`repro.core.backends.BaseBackend.rollout_batch_resumed`
+        for the determinism contract.  ``start_steps`` must be concrete
+        host integers (they index the canonical float64 time grid).
+        """
+        if (drive_params is None) != (self.drive_family is None):
+            raise ValueError(
+                "drive_params and drive_family must be given together")
+        node = self.twin.node
+        backend = resolve_backend(node.backend)
+        state = backend.program(node.field, params)
+        return backend.rollout_batch_resumed(
+            state, ys, dt=dt, num_steps=num_steps, t0=t0,
+            start_steps=start_steps, drive_family=self.drive_family,
+            drive_params=drive_params, **{**node._solver_kw(), **kw})
+
 
 def simulate_batch(twin: DigitalTwin, params: Pytree, y0s: jax.Array,
                    ts: jax.Array, **kw) -> jax.Array:

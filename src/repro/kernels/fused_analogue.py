@@ -67,7 +67,8 @@ def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
                  g_min: float, g_max: float, v_clamp: float | None,
                  read_noise: float, noise_seed: int, stuck_rate: float,
                  stuck_on_frac: float, fault_seed: int, salt_base: int,
-                 drift_nu: float, drift_tau: float, drift_n0: int):
+                 drift_nu: float, drift_tau: float, drift_n0: int,
+                 step_offset: int = 0):
     stuck = stuck_rate > 0.0
 
     def apply_stuck(g, li, pair):
@@ -133,7 +134,10 @@ def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,
         salts_per_step = 4 * num_layers * 2     # stages x layers x pair
         # Hoisted out of the fori_loop body: program_id has no lowering
         # inside a captured loop jaxpr on the interpreter path.
-        chunk_step0 = pl.program_id(1) * C
+        # ``step_offset`` shifts the GLOBAL step index: a rollout resumed
+        # at step k with step_offset=k replays the same noise salts and
+        # drift exponents the uninterrupted rollout would have used.
+        chunk_step0 = step_offset + pl.program_id(1) * C
 
         def layer_out(x, li, salt, dfac):
             """One crossbar read: differential dot, rescale, clamp."""
@@ -215,6 +219,7 @@ def fused_analogue_rollout(
     v_clamp: float | None = None,
     read_noise: float = 0.0,
     noise_seed: int = 0,
+    step_offset: int = 0,         # global step index of y0 (resume replay)
     fault: dict | None = None,    # FaultModel.kernel_args(); None = healthy
     batch_tile: int = 64,
     time_chunk: int | None = None,
@@ -233,6 +238,15 @@ def fused_analogue_rollout(
     coordinates (bitwise the program-time masks of
     :mod:`repro.core.faults`) and live read-disturb drift whose decay
     exponent advances with the global step count.
+
+    ``step_offset`` declares the global RK4 step index of ``y0``: a
+    rollout resumed mid-trajectory (streaming serving, see
+    ``docs/serving.md``) passes the number of steps already served so
+    the per-step noise salts and the drift exponent continue the SAME
+    global streams an uninterrupted rollout would have used — with it,
+    split-and-resume noisy rollouts are bitwise-identical to unsplit
+    ones.  It is a compile-time constant (one compiled program per
+    distinct offset); noise-free, drift-free solves ignore it.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -291,7 +305,7 @@ def fused_analogue_rollout(
                           float(fa["stuck_on_frac"]),
                           int(fa["fault_seed"]), int(fa["salt_base"]),
                           float(fa["drift_nu"]), float(fa["drift_tau"]),
-                          int(fa["drift_n0"]))
+                          int(fa["drift_n0"]), int(step_offset))
 
     grid = (B // bt, NC)
     if per_tile_drive:

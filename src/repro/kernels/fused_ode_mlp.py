@@ -48,6 +48,23 @@ This module is the forward; :mod:`repro.kernels.fused_ode_mlp_bwd`
 walks the same grid in reverse (chunk-boundary checkpoints = trajectory
 rows, recompute-in-VMEM replay) to make the rollout differentiable on
 the same substrate.
+
+Resuming mid-trajectory (the streaming-serving contract, enforced by
+``tests/test_streaming.py``): because the carried state is rounded
+through the storage dtype at every chunk boundary AND the y0 seed takes
+the same ``.astype(store).astype(carry)`` path, any stored trajectory
+row ``traj[k]`` is the exact value the kernel continued integrating
+from — so ``fused_node_rollout(traj[k], drive_window(u_half, k, T-k),
+...)`` reproduces rows ``k..T`` of the uninterrupted solve
+bit-identically under "f32" (the seed round-trip is a no-op) and under
+pure "bf16" (rows are stored at the carry dtype).  Under
+"bf16_f32acc" the intra-chunk carry is f32 but rows are stored bf16,
+so resuming at a non-chunk-boundary step re-rounds the seed once:
+parity within one storage-dtype rounding of the carried state.  The
+drive must be re-sampled on the canonical global half-step grid
+(:func:`repro.kernels.ops.half_step_times`) — re-deriving it with
+``linspace`` over the sub-window perturbs t by ~1 ulp and breaks
+bitwise parity.
 """
 from __future__ import annotations
 
@@ -290,6 +307,28 @@ def pad_fleet_to_tile(y0s: jax.Array, uh: jax.Array, batch_tile: int):
             uh = jnp.concatenate(
                 [uh, jnp.broadcast_to(uh[-1:], (pad,) + uh.shape[1:])])
     return y0s, uh, bt, B
+
+
+def drive_window(u_half: jax.Array, start_step: int,
+                 num_steps: int) -> jax.Array:
+    """Slice a pre-sampled half-step drive to a resume window.
+
+    ``u_half`` is the full-horizon drive on the RK4 half-step grid —
+    (2T+1, Du) shared or (B, 2T+1, Du) per-twin; the window covering
+    global steps ``[start_step, start_step + num_steps)`` is rows
+    ``[2*start_step, 2*(start_step + num_steps)]`` inclusive (adjacent
+    windows share their boundary sample, exactly like the kernel's own
+    chunked drive slabs).  Handing this window to
+    ``fused_node_rollout`` together with trajectory row ``start_step``
+    as ``y0`` continues the solve bit-identically (see module doc).
+    """
+    axis = 1 if u_half.ndim == 3 else 0
+    lo, hi = 2 * start_step, 2 * (start_step + num_steps) + 1
+    if not (0 <= lo < hi <= u_half.shape[axis]):
+        raise ValueError(
+            f"drive_window: steps [{start_step}, {start_step + num_steps})"
+            f" fall outside the (2T+1)={u_half.shape[axis]} half-step grid")
+    return u_half[:, lo:hi] if axis == 1 else u_half[lo:hi]
 
 
 def _make_kernel(num_layers: int, C: int, dt: float, drive_dim: int,

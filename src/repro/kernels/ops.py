@@ -15,6 +15,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.analogue import AnalogueSpec
@@ -24,7 +25,7 @@ from repro.kernels.crossbar_vmm import crossbar_matmul as _crossbar_pallas
 from repro.kernels.fused_analogue import (
     fused_analogue_rollout as _fused_analogue)
 from repro.kernels.fused_ode_mlp import (DEFAULT_VMEM_BUDGET,
-                                         _require_float,
+                                         _require_float, drive_window,
                                          fused_node_rollout as _fused_pallas,
                                          precision_dtypes,
                                          resolve_precision)
@@ -138,6 +139,51 @@ def half_step_drive(drive, ts: jax.Array) -> jax.Array:
     th = jnp.linspace(t0, t1, 2 * T + 1)
     u = jax.vmap(drive)(th)
     return u[:, None] if u.ndim == 1 else u
+
+
+# ---------------------------------------------------------------------------
+# Canonical global time grids (the streaming-resume determinism contract)
+# ---------------------------------------------------------------------------
+#
+# A rollout resumed at global step k is only bit-identical to the
+# uninterrupted one if every time value it sees is BYTE-identical to the
+# value the uninterrupted rollout saw.  Re-deriving a sub-window with
+# ``linspace(t_k, t_T, ...)`` perturbs interior points by ~1 ulp (f32
+# endpoints, divided differently), which is enough to move every drive
+# sample and break parity.  These helpers are the single source of truth:
+# each grid point is an exact float64 function of (t0, dt, global index),
+# rounded to float32 once — so any window of any split reproduces the
+# same bytes.  ``start_step`` may be an int or an (N,) array of per-twin
+# offsets (rows of the result are then per-twin windows).
+
+def window_times(t0: float, dt: float, num_steps: int,
+                 start_step=0) -> jax.Array:
+    """The (num_steps+1,) f32 time grid t_i = t0 + dt*(start_step + i),
+    computed in float64; (N, num_steps+1) for an (N,) ``start_step``."""
+    start = np.asarray(start_step, dtype=np.int64)
+    idx = start[..., None] + np.arange(num_steps + 1, dtype=np.int64)
+    t = np.float64(t0) + np.float64(dt) * idx
+    return jnp.asarray(t.astype(np.float32))
+
+
+def half_step_times(t0: float, dt: float, num_steps: int,
+                    start_step=0) -> jax.Array:
+    """The (2*num_steps+1,) f32 RK4 half-step grid
+    t_j = t0 + (dt/2)*(2*start_step + j), computed in float64;
+    (N, 2*num_steps+1) for an (N,) ``start_step``."""
+    start = np.asarray(start_step, dtype=np.int64)
+    idx = 2 * start[..., None] + np.arange(2 * num_steps + 1, dtype=np.int64)
+    t = np.float64(t0) + 0.5 * np.float64(dt) * idx
+    return jnp.asarray(t.astype(np.float32))
+
+
+def sample_drive_window(drive, t0: float, dt: float, num_steps: int,
+                        start_step=0) -> jax.Array:
+    """Sample u(t) on the canonical half-step window: (2T'+1, Du) for a
+    scalar ``start_step``, (N, 2T'+1, Du) per-twin for an (N,) one."""
+    th = half_step_times(t0, dt, num_steps, start_step)
+    u = jax.vmap(drive)(th) if th.ndim == 1 else jax.vmap(jax.vmap(drive))(th)
+    return u[..., None] if u.ndim == th.ndim else u
 
 
 # ---------------------------------------------------------------------------
@@ -255,7 +301,8 @@ def fused_analogue_rollout(staged: dict, y0: jax.Array, u_half: jax.Array,
                            interpret: bool | None = None,
                            vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
                            read_noise: float = 0.0,
-                           noise_seed: int = 0) -> jax.Array:
+                           noise_seed: int = 0,
+                           step_offset: int = 0) -> jax.Array:
     """Whole-trajectory analogue RK4 solve on the fused crossbar kernel.
 
     ``staged`` is the deployment dict built by
@@ -276,7 +323,9 @@ def fused_analogue_rollout(staged: dict, y0: jax.Array, u_half: jax.Array,
     backpropagate — train digitally, deploy analogue): all inputs are
     detached and the trajectory returns with zero cotangent.  See
     :mod:`repro.kernels.fused_analogue` for the kernel itself and the
-    deterministic read-noise stream.
+    deterministic read-noise stream; ``step_offset`` (the global step
+    index of ``y0``) makes a resumed noisy/drifting rollout replay the
+    uninterrupted rollout's noise salts and drift exponents.
     """
     _require_2d_float("fused_analogue_rollout", "y0", y0)
     if not jnp.issubdtype(jnp.asarray(u_half).dtype, jnp.floating):
@@ -291,7 +340,8 @@ def fused_analogue_rollout(staged: dict, y0: jax.Array, u_half: jax.Array,
         g_step=staged.get("g_step"), g_min=staged.get("g_min", 0.0),
         g_max=staged.get("g_max", 0.0), fault=staged.get("fault"),
         v_clamp=staged.get("v_clamp"), read_noise=float(read_noise),
-        noise_seed=int(noise_seed), batch_tile=batch_tile,
+        noise_seed=int(noise_seed), step_offset=int(step_offset),
+        batch_tile=batch_tile,
         time_chunk=time_chunk, interpret=interpret,
         vmem_budget_bytes=vmem_budget_bytes)
     return lax.stop_gradient(out)

@@ -53,10 +53,12 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.backends import (AnalogueBackend, DigitalBackend,
-                                 FusedAnalogueBackend, resolve_backend)
+                                 FusedAnalogueBackend, FusedPallasBackend,
+                                 _with_drive, resolve_backend)
 from repro.launch.mesh import TWIN_AXIS, make_twin_mesh, twin_shard_count
 from repro.launch.sharding import (fleet_input_shardings,
                                    fleet_param_shardings)
+from repro.launch.state_store import TwinStateStore
 from repro.train import checkpoint as ckpt_lib
 
 Pytree = Any
@@ -465,6 +467,417 @@ def serve_fleet(ckpt_dir: str, fleet, ts, requests: Iterable[Request], *,
     for req in requests:
         y0s, thetas = req if isinstance(req, tuple) else (req, None)
         yield server.serve(y0s, thetas)
+
+
+# ---------------------------------------------------------------------------
+# Streaming stateful serving: continuous batching over a resident population
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamRequest:
+    """One queued streaming request: advance ``twin_id`` by ``horizon``
+    RK4 steps from its carried state.  ``seq`` is the server-assigned
+    arrival index (global FIFO order); ``remaining`` counts the steps
+    still unserved (requests longer than the server's window are split
+    across batches through the chunk-carry mechanism)."""
+    seq: int
+    twin_id: Any
+    horizon: int
+    remaining: int
+    t_arrival: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Completed:
+    """A finished request: ``trajectory`` is the (horizon+1, D) host
+    array with row 0 the state the request started from; ``tier`` names
+    the substrate that served the final window."""
+    seq: int
+    twin_id: Any
+    trajectory: np.ndarray
+    start_step: int
+    tier: str
+    t_arrival: float
+    t_done: float
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Continuous-batching counters; conservation invariant (checked by
+    ``tests/traffic.py``): ``enqueued == served + failed + pending``."""
+    enqueued: int = 0
+    served: int = 0
+    failed: int = 0
+    batches: int = 0
+    twin_steps: int = 0      # real (unpadded) RK4 steps served
+    padded_steps: int = 0    # ragged-horizon + batch padding overhead
+    splits: int = 0          # requests split across serving windows
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class StreamingFleetServer:
+    """Continuous batching for a resident twin population.
+
+    Where :class:`FleetServer` rolls fixed request batches from t0, this
+    server keeps per-twin ODE state alive BETWEEN requests: a stream of
+    sensor windows (``submit``) feeds a queue; each ``pump`` assembles
+    the longest admissible batch (one in-flight request per twin — a
+    twin's next window consumes its previous one's end state), fetches
+    the carried states from the :class:`TwinStateStore` (host-paged, LRU
+    — the population may exceed the hot slab), coalesces the ragged
+    horizons into ONE fused-kernel launch padded to the batch's widest
+    window, then scatters the end states back and advances each twin's
+    global step counter.
+
+    Determinism contract (``docs/serving.md``): every time value any
+    twin ever sees is the canonical float64 grid ``t0 + dt*k`` rounded
+    to f32 once, keyed by the twin's own global step ``k`` — so the
+    trajectory a twin accumulates over any sequence of windows is
+    bit-identical (f32 substrates) to one uninterrupted rollout, no
+    matter how the scheduler batched, split, or paged it.  Requests
+    longer than ``max_window`` steps are split across pumps through the
+    same chunk-carry path.
+
+    Compiled-shape discipline: batches are padded to ``max_batch`` rows
+    and window lengths quantised up to ``horizon_quantum`` multiples
+    (capped at ``max_window``), so each serving tier compiles one
+    program per window length instead of one per batch composition.
+
+    Passing an :class:`ServingSLO` arms the same degradation machinery
+    as :class:`FleetServer`: the :func:`fallback_chain` tiers are
+    programmed once at construction, a golden window probe re-picks the
+    healthiest tier every ``probe_every`` batches, and a batch whose
+    trajectories come back non-finite is retried down the chain; a
+    request that even the digital tier cannot serve is counted
+    ``failed`` (its carried state is left untouched) instead of killing
+    the stream.
+    """
+
+    def __init__(self, fleet, params, *, dt: float, t0: float = 0.0,
+                 hot_capacity: int = 64, max_batch: int = 32,
+                 max_window: int = 64, horizon_quantum: int = 8,
+                 slo: Optional[ServingSLO] = None):
+        if dt <= 0:
+            raise ValueError(f"StreamingFleetServer: dt must be > 0, "
+                             f"got {dt}")
+        if not 1 <= max_batch <= hot_capacity:
+            raise ValueError(
+                f"StreamingFleetServer: need 1 <= max_batch <= "
+                f"hot_capacity, got max_batch={max_batch}, "
+                f"hot_capacity={hot_capacity}")
+        if max_window < 1 or horizon_quantum < 1:
+            raise ValueError(
+                "StreamingFleetServer: max_window and horizon_quantum "
+                "must be >= 1")
+        self.fleet = fleet
+        self.params = params
+        self.dt = float(dt)
+        self.t0 = float(t0)
+        self.max_batch = int(max_batch)
+        self.max_window = int(max_window)
+        self.horizon_quantum = int(horizon_quantum)
+        self.slo = slo
+        self.store = TwinStateStore(fleet.twin.state_dim, hot_capacity)
+        self.stats = StreamStats()
+        self.serving_stats = ServingStats()
+        self._tiers = (fallback_chain(fleet) if slo is not None else
+                       [(getattr(resolve_backend(fleet.backend), "name",
+                                 "primary"), fleet)])
+        self._active = 0
+        # Program every tier ONCE (the "write the crossbars" step); the
+        # jitted window programs are built lazily per (tier, H) shape.
+        self._backends, self._states = [], []
+        for _, tier_fleet in self._tiers:
+            backend = resolve_backend(tier_fleet.backend)
+            node = tier_fleet.twin.node
+            self._backends.append(backend)
+            self._states.append(backend.program(node.field, params))
+        self._window_fns: dict = {}            # (tier_idx, H) -> jit fn
+        self._queue: list = []                 # FIFO of StreamRequest
+        self._partial: dict = {}               # seq -> list of row blocks
+        self._seq = 0
+
+    # -- population / ingest -------------------------------------------------
+    @property
+    def active_tier(self) -> str:
+        return self._tiers[self._active][0]
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def register_twin(self, twin_id, y0, *, theta=None) -> None:
+        """Admit a twin with its initial condition (and per-twin drive
+        parameters for driven fleets) — host-side, no device traffic."""
+        if (theta is None) != (self.fleet.drive_family is None):
+            raise ValueError(
+                "register_twin: theta must be given exactly when the "
+                "fleet has a drive_family")
+        self.store.register(twin_id, y0, theta=theta)
+
+    def submit(self, twin_id, horizon: int,
+               t_arrival: float = 0.0) -> int:
+        """Enqueue a request to advance ``twin_id`` by ``horizon`` RK4
+        steps; returns its ``seq``.  Per-twin FIFO order is guaranteed;
+        cross-twin order is whatever batching finds profitable."""
+        if twin_id not in self.store:
+            raise KeyError(f"submit: twin {twin_id!r} is not registered")
+        horizon = int(horizon)
+        if horizon < 1:
+            raise ValueError(f"submit: horizon must be >= 1, got {horizon}")
+        req = StreamRequest(seq=self._seq, twin_id=twin_id,
+                            horizon=horizon, remaining=horizon,
+                            t_arrival=float(t_arrival))
+        self._seq += 1
+        self._queue.append(req)
+        self.stats.enqueued += 1
+        return req.seq
+
+    # -- batch assembly ------------------------------------------------------
+    def _assemble(self):
+        """Pop the next batch: scan the queue in FIFO order, taking the
+        FIRST pending request of each twin (later requests for the same
+        twin must wait — their start state does not exist yet) up to
+        ``max_batch``.  Returns the requests and the padded window
+        length H."""
+        picked, skipped, seen = [], [], set()
+        for req in self._queue:
+            if req.twin_id in seen or len(picked) == self.max_batch:
+                skipped.append(req)
+            else:
+                seen.add(req.twin_id)
+                picked.append(req)
+        self._queue = skipped
+        if not picked:
+            return [], 0
+        h_max = min(self.max_window,
+                    max(r.remaining for r in picked))
+        q = self.horizon_quantum
+        H = min(self.max_window, -(-h_max // q) * q)
+        return picked, H
+
+    # -- window programs -----------------------------------------------------
+    def _window_fn(self, tier_idx: int, H: int):
+        """The jitted fixed-shape window solve of one tier: carried
+        states (B, D) + canonical time/drive windows in, (B, H+1, D)
+        trajectories out.  Fused tiers take the pre-sampled per-twin
+        half-step drive slabs; digital/analogue tiers take the per-twin
+        time grids (odeint consumes time VALUES, so traced per-row
+        grids keep bitwise parity with the canonical windows)."""
+        key = (tier_idx, H)
+        fn = self._window_fns.get(key)
+        if fn is not None:
+            return fn
+        backend = self._backends[tier_idx]
+        state = self._states[tier_idx]
+        _, tier_fleet = self._tiers[tier_idx]
+        node = tier_fleet.twin.node
+        drive_family = tier_fleet.drive_family
+        if isinstance(backend, FusedPallasBackend):
+            from repro.kernels.fused_ode_mlp import pad_fleet_to_tile
+
+            def run(ys, uh):
+                y0s, uh_p, bt, B = pad_fleet_to_tile(ys, uh,
+                                                     backend.batch_tile)
+                traj = backend._solve(state, y0s, uh_p, self.dt, bt,
+                                      "stopgrad", None)
+                return jnp.transpose(traj[:, :B], (1, 0, 2))
+        else:
+            kw = node._solver_kw()
+            if drive_family is None:
+                def run(ys, tss):
+                    return jax.vmap(lambda y, ts: backend.rollout(
+                        state, y, ts, **kw))(ys, tss)
+            else:
+                def run(ys, tss, thetas):
+                    def single(y, ts, th):
+                        st = _with_drive(state,
+                                         lambda t: drive_family(t, th))
+                        return backend.rollout(st, y, ts, **kw)
+                    return jax.vmap(single)(ys, tss, thetas)
+        fn = jax.jit(run)
+        self._window_fns[key] = fn
+        return fn
+
+    def _run_tier(self, tier_idx: int, ys, starts: np.ndarray, thetas,
+                  H: int):
+        """Serve one assembled window on one tier.  The canonical
+        time/drive windows are built HOST-side (concrete float64 grid —
+        the determinism contract) and only the solve is jitted."""
+        from repro.kernels import ops
+        backend = self._backends[tier_idx]
+        state = self._states[tier_idx]
+        drive_family = self._tiers[tier_idx][1].drive_family
+        fn = self._window_fn(tier_idx, H)
+        if isinstance(backend, FusedPallasBackend):
+            uh = backend._u_half_window(state, self.t0, self.dt, H,
+                                        starts, drive_family, thetas)
+            if uh.ndim == 2 and uh.shape[-1] > 0:
+                uh = jnp.broadcast_to(uh, (ys.shape[0],) + uh.shape)
+            return fn(ys, uh)
+        tss = ops.window_times(self.t0, self.dt, H, starts)
+        if drive_family is None:
+            return fn(ys, tss)
+        return fn(ys, tss, thetas)
+
+    def _probe(self, ys, starts, thetas, H: int) -> None:
+        """Golden-window health check (the streaming analogue of
+        ``FleetServer._probe``): roll the batch's first ``probe_fleet``
+        rows over a short window on every non-digital tier, compare to
+        the digital reference, activate the healthiest tier that meets
+        the SLO."""
+        s = self.slo
+        self.serving_stats.probes += 1
+        nf = min(s.probe_fleet, int(ys.shape[0]))
+        h = min(s.probe_horizon - 1, H)
+        yp, sp = ys[:nf], starts[:nf]
+        tp = None if thetas is None else thetas[:nf]
+        ref_backend = self._backends[-1]      # digital tier, by chain
+        ref_state = self._states[-1]
+        drive_family = self._tiers[-1][1].drive_family
+        ref = np.asarray(ref_backend.rollout_batch_resumed(
+            ref_state, yp, dt=self.dt, num_steps=h, t0=self.t0,
+            start_steps=sp, drive_family=drive_family, drive_params=tp))
+        scale = float(np.max(np.abs(ref))) + 1e-9
+        prev, chosen = self._active, len(self._tiers) - 1
+        for i, (name, tier_fleet) in enumerate(self._tiers[:-1]):
+            out = np.asarray(self._backends[i].rollout_batch_resumed(
+                self._states[i], yp, dt=self.dt, num_steps=h, t0=self.t0,
+                start_steps=sp,
+                drive_family=tier_fleet.drive_family, drive_params=tp))
+            err = float(np.max(np.abs(out - ref))) / scale
+            self.serving_stats.probe_errors[name] = err
+            if np.isfinite(err) and err <= s.max_rel_error:
+                chosen = i
+                break
+        if chosen > prev:
+            self.serving_stats.probe_demotions += 1
+        elif chosen < prev:
+            self.serving_stats.probe_recoveries += 1
+        self._active = chosen
+
+    # -- the serving loop ----------------------------------------------------
+    def pump(self, now: float = 0.0) -> list:
+        """Assemble and serve ONE batch; returns the list of
+        :class:`Completed` requests it finished (possibly empty — a
+        window that only partially serves long requests completes
+        nothing).  Call repeatedly (``drain``) to empty the queue."""
+        picked, H = self._assemble()
+        if not picked:
+            return []
+        ids = [r.twin_id for r in picked]
+        ys, starts, thetas = self.store.fetch(ids)
+        n = len(picked)
+        # Pad the batch to the fixed compiled width (replicating the
+        # last row keeps padding in-distribution; results are sliced).
+        pad = self.max_batch - n
+        if pad:
+            ys = jnp.concatenate(
+                [ys, jnp.broadcast_to(ys[-1:], (pad,) + ys.shape[1:])])
+            starts = np.concatenate([starts, np.repeat(starts[-1:], pad)])
+            if thetas is not None:
+                thetas = jnp.concatenate(
+                    [thetas,
+                     jnp.broadcast_to(thetas[-1:],
+                                      (pad,) + thetas.shape[1:])])
+        s = self.slo
+        if (s is not None and len(self._tiers) > 1
+                and self.stats.batches % s.probe_every == 0):
+            self._probe(ys[:n], starts[:n], None if thetas is None
+                        else thetas[:n], H)
+        self.stats.batches += 1
+        first = self._active
+        last = (len(self._tiers) - 1 if s is None
+                else min(first + s.max_retries, len(self._tiers) - 1))
+        traj, tier_name = None, self._tiers[first][0]
+        for i in range(first, last + 1):
+            if i > first:
+                self.serving_stats.retries += 1
+            t_start = time.perf_counter()
+            out = jax.block_until_ready(
+                self._run_tier(i, ys, starts, thetas, H))
+            if (s is not None and s.timeout_s is not None
+                    and time.perf_counter() - t_start > s.timeout_s):
+                self.serving_stats.timeouts += 1
+            if bool(jnp.isfinite(out[:n]).all()):
+                if i > first:
+                    self.serving_stats.nan_rescues += 1
+                traj, tier_name = out, self._tiers[i][0]
+                break
+        done = []
+        if traj is None:
+            # Even the digital tier returned non-finite values: the
+            # requests themselves are pathological.  Their carried
+            # states stay untouched; count them failed, keep streaming.
+            for req in picked:
+                self.stats.failed += 1
+                self._partial.pop(req.seq, None)
+            return done
+        traj_h = np.asarray(traj[:n], np.float32)
+        served = [min(r.remaining, H) for r in picked]
+        end_states = traj[jnp.arange(n), jnp.asarray(served)]
+        self.store.commit(ids, end_states,
+                          starts[:n] + np.asarray(served))
+        self.stats.twin_steps += int(sum(served))
+        self.stats.padded_steps += int(self.max_batch * H - sum(served))
+        self.serving_stats.requests += 1
+        self.serving_stats.served_by[tier_name] = (
+            self.serving_stats.served_by.get(tier_name, 0) + 1)
+        for i, req in enumerate(picked):
+            h = served[i]
+            rows = traj_h[i, : h + 1]
+            blocks = self._partial.setdefault(req.seq, [])
+            blocks.append(rows if not blocks else rows[1:])
+            if h < req.remaining:
+                # Long request: re-queue the remainder at the FRONT so
+                # it stays ahead of the twin's later requests.
+                self.stats.splits += 1
+                self._queue.insert(0, dataclasses.replace(
+                    req, remaining=req.remaining - h))
+                continue
+            full = np.concatenate(self._partial.pop(req.seq), axis=0)
+            done.append(Completed(
+                seq=req.seq, twin_id=req.twin_id, trajectory=full,
+                start_step=int(starts[i]) - (req.horizon - h),
+                tier=tier_name, t_arrival=req.t_arrival, t_done=now))
+            self.stats.served += 1
+        return done
+
+    def drain(self, now: float = 0.0) -> list:
+        """Pump until the queue is empty; returns all completions."""
+        done = []
+        while self._queue:
+            done.extend(self.pump(now))
+        return done
+
+    def serve_trace(self, trace, *, y0_of, theta_of=None,
+                    auto_register: bool = True) -> list:
+        """Replay a recorded arrival trace (see
+        :mod:`repro.launch.traffic`) through the streaming loop.
+
+        Arrivals are ingested in timestamp order; a batch is pumped
+        whenever the queue can fill one, and the tail is drained at the
+        end.  ``y0_of(twin_id)`` (and ``theta_of(twin_id)`` for driven
+        fleets) lazily registers first-contact twins.  Returns the
+        completions in service order — the deterministic-schedule
+        replay the stress tests assert invariants over.
+        """
+        done = []
+        for arrival in trace:
+            if auto_register and arrival.twin_id not in self.store:
+                theta = None if theta_of is None else theta_of(
+                    arrival.twin_id)
+                self.register_twin(arrival.twin_id, y0_of(arrival.twin_id),
+                                   theta=theta)
+            self.submit(arrival.twin_id, arrival.horizon,
+                        t_arrival=arrival.time)
+            if self.pending >= self.max_batch:
+                done.extend(self.pump(now=arrival.time))
+        t_end = trace[-1].time if trace else 0.0
+        done.extend(self.drain(now=t_end))
+        return done
 
 
 # ---------------------------------------------------------------------------

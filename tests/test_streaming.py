@@ -1,0 +1,447 @@
+"""Streaming stateful serving: resume-parity properties, the state
+store's paging invariants, and the continuous-batching server under
+seeded traffic.
+
+The load-bearing claim (docs/serving.md): serving a twin's trajectory in
+pieces through :class:`TwinStateStore` — split anywhere, batched with
+anything, paged to host and back — produces the SAME trajectory as one
+uninterrupted rollout.  Bit-identical for f32 (and pure-bf16) substrates,
+within one storage rounding for bf16_f32acc.  The hypothesis suite
+samples random split points when hypothesis is installed; a seeded
+parametrised subset always runs.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import traffic
+from repro.core.analogue import AnalogueSpec
+from repro.core.backends import (DigitalBackend, FusedAnalogueBackend,
+                                 FusedPallasBackend, resolve_backend)
+from repro.core.twin import TwinFleet, make_autonomous_twin, make_driven_twin
+from repro.launch.fleet_serving import ServingSLO, StreamingFleetServer
+from repro.launch.state_store import TwinStateStore
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+DT = 0.01
+DIM = 3
+
+BACKENDS = {
+    "digital": lambda: DigitalBackend(),
+    "fused_f32": lambda: FusedPallasBackend(precision="f32"),
+    "fused_bf16": lambda: FusedPallasBackend(precision="bf16"),
+    "fused_bf16_f32acc": lambda: FusedPallasBackend(
+        precision="bf16_f32acc"),
+    "analogue_fused": lambda: FusedAnalogueBackend(
+        spec=AnalogueSpec(read_noise=0.02),
+        prog_key=jax.random.PRNGKey(7)),
+}
+#: split-and-resume must be bit-identical on these (f32 arithmetic, or a
+#: single rounded dtype end to end); bf16_f32acc is exact only at chunk
+#: boundaries, so it gets a one-storage-rounding tolerance instead.
+BITWISE = ("digital", "fused_f32", "fused_bf16", "analogue_fused")
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(backend_key: str):
+    """Programmed execution state + a small carried fleet, shared across
+    parametrised cases and hypothesis examples (weights are programmed
+    once, like a physical array)."""
+    backend = BACKENDS[backend_key]()
+    twin = make_autonomous_twin(state_dim=DIM, hidden=8, n_hidden_layers=1,
+                                backend=backend)
+    params = twin.init(jax.random.PRNGKey(0))
+    state = backend.program(twin.node.field, params)
+    ys = jnp.asarray(
+        np.random.default_rng(3).normal(size=(3, DIM)) * 0.1, jnp.float32)
+    return backend, state, ys
+
+
+def _split_and_resume(backend_key: str, k: int, T: int):
+    """Roll [0, k] then resume [k, T] THROUGH the state store; return
+    (head, tail, full) trajectories."""
+    backend, state, ys = _setup(backend_key)
+    n = ys.shape[0]
+    full = backend.rollout_batch_resumed(state, ys, dt=DT, num_steps=T)
+    head = backend.rollout_batch_resumed(state, ys, dt=DT, num_steps=k)
+    store = TwinStateStore(DIM, n)
+    ids = list(range(n))
+    for i in ids:
+        store.register(i, np.asarray(ys[i]))
+    store.fetch(ids)
+    store.commit(ids, head[:, k], np.full(n, k))
+    mid, steps, _ = store.fetch(ids)
+    assert list(steps) == [k] * n
+    tail = backend.rollout_batch_resumed(state, mid, dt=DT,
+                                         num_steps=T - k, start_steps=steps)
+    return np.asarray(head), np.asarray(tail), np.asarray(full)
+
+
+@pytest.mark.parametrize("backend_key", list(BACKENDS))
+@pytest.mark.parametrize("k,T", [(1, 12), (5, 12), (11, 12), (8, 24)])
+def test_resume_parity_seeded(backend_key, k, T):
+    head, tail, full = _split_and_resume(backend_key, k, T)
+    if backend_key in BITWISE:
+        np.testing.assert_array_equal(head, full[:, : k + 1])
+        np.testing.assert_array_equal(tail, full[:, k:])
+    else:
+        # bf16_f32acc: the carry is exact at time-chunk boundaries and
+        # within ONE bf16 storage rounding elsewhere; the deviation can
+        # grow with the remaining horizon, so bound it loosely.
+        np.testing.assert_allclose(tail, full[:, k:], rtol=0.03, atol=0.03)
+        np.testing.assert_array_equal(tail[:, 0], full[:, k])
+
+
+def test_resume_matches_plain_rollout_digital():
+    """The stronger cross-API property (digital only): a resumed rollout
+    equals the ordinary ``rollout_batch`` over the canonical window grid
+    bitwise — resume is not a parallel implementation, it IS the same
+    arithmetic."""
+    from repro.kernels.ops import window_times
+    backend, state, ys = _setup("digital")
+    T = 16
+    ts = window_times(0.0, DT, T)
+    plain = jax.vmap(lambda y: backend.rollout(state, y, ts))(ys)
+    resumed = backend.rollout_batch_resumed(state, ys, dt=DT, num_steps=T)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(resumed))
+
+
+def test_resume_rejects_traced_and_negative_starts():
+    backend, state, ys = _setup("digital")
+    with pytest.raises(ValueError, match="concrete host"):
+        jax.jit(lambda s: backend.rollout_batch_resumed(
+            state, ys, dt=DT, num_steps=2, start_steps=s))(jnp.arange(3))
+    with pytest.raises(ValueError, match="non-negative"):
+        backend.rollout_batch_resumed(state, ys, dt=DT, num_steps=2,
+                                      start_steps=np.array([0, -1, 0]))
+
+
+def test_resume_mixed_phases_fused():
+    """Twins at DIFFERENT global steps batch into one fused launch; each
+    row must equal that twin's own homogeneous resume."""
+    backend, state, ys = _setup("fused_f32")
+    starts = np.array([0, 5, 11])
+    mixed = backend.rollout_batch_resumed(state, ys, dt=DT, num_steps=6,
+                                          start_steps=starts)
+    for i, s in enumerate(starts):
+        solo = backend.rollout_batch_resumed(
+            state, ys[i: i + 1], dt=DT, num_steps=6,
+            start_steps=np.array([s]))
+        np.testing.assert_array_equal(np.asarray(mixed[i]),
+                                      np.asarray(solo[0]))
+
+
+if HAVE_HYPOTHESIS:
+    @given(data=st.data(), T=st.integers(2, 40))
+    @settings(max_examples=15, deadline=None)
+    def test_resume_parity_random_split_digital(data, T):
+        k = data.draw(st.integers(1, T - 1))
+        head, tail, full = _split_and_resume("digital", k, T)
+        np.testing.assert_array_equal(head, full[:, : k + 1])
+        np.testing.assert_array_equal(tail, full[:, k:])
+
+    @given(data=st.data(), T=st.integers(2, 40))
+    @settings(max_examples=8, deadline=None)
+    def test_resume_parity_random_split_fused(data, T):
+        k = data.draw(st.integers(1, T - 1))
+        head, tail, full = _split_and_resume("fused_f32", k, T)
+        np.testing.assert_array_equal(head, full[:, : k + 1])
+        np.testing.assert_array_equal(tail, full[:, k:])
+
+    @given(data=st.data(), T=st.integers(2, 24))
+    @settings(max_examples=5, deadline=None)
+    def test_resume_parity_random_split_analogue(data, T):
+        k = data.draw(st.integers(1, T - 1))
+        head, tail, full = _split_and_resume("analogue_fused", k, T)
+        np.testing.assert_array_equal(head, full[:, : k + 1])
+        np.testing.assert_array_equal(tail, full[:, k:])
+
+
+# ---------------------------------------------------------------------------
+# TwinStateStore: paging mechanics
+# ---------------------------------------------------------------------------
+
+def test_store_lru_eviction_pages_not_drops():
+    store = TwinStateStore(2, hot_capacity=2)
+    for i in range(4):
+        store.register(i, np.float32([i, i]))
+    store.fetch([0, 1])                   # hot: 0, 1
+    store.fetch([2])                      # evicts 0 (LRU)
+    assert 0 not in store.hot_ids and 2 in store.hot_ids
+    assert store.stats.evictions == 1
+    y, step = store.peek(0)               # paged, not lost
+    np.testing.assert_array_equal(y, np.float32([0, 0]))
+    store.fetch([0])                      # pages 0 back in
+    store.check_invariants()
+    assert store.stats.page_ins == 4      # 0,1,2 cold-first + 0 again
+
+
+def test_store_fetch_touches_lru_order():
+    store = TwinStateStore(2, hot_capacity=2)
+    for i in range(3):
+        store.register(i, np.float32([i, i]))
+    store.fetch([0, 1])
+    store.fetch([0])                      # 0 becomes MRU -> 1 is LRU
+    store.fetch([2])                      # must evict 1, not 0
+    assert set(store.hot_ids) == {0, 2}
+    store.check_invariants()
+
+
+def test_store_commit_round_trips_state():
+    store = TwinStateStore(3, hot_capacity=2)
+    store.register("a", np.zeros(3, np.float32))
+    store.fetch(["a"])
+    store.commit(["a"], np.float32([[1, 2, 3]]), np.array([5]))
+    y, step = store.peek("a")
+    np.testing.assert_array_equal(y, np.float32([1, 2, 3]))
+    assert step == 5
+    # survives an eviction round-trip bitwise
+    store.register("b", np.zeros(3, np.float32))
+    store.register("c", np.zeros(3, np.float32))
+    store.fetch(["b", "c"])
+    y2, step2 = store.peek("a")
+    np.testing.assert_array_equal(y2, y)
+    assert step2 == 5
+
+
+def test_store_rejects_bad_usage():
+    store = TwinStateStore(2, hot_capacity=2)
+    store.register(0, np.zeros(2, np.float32))
+    with pytest.raises(ValueError, match="already registered"):
+        store.register(0, np.zeros(2, np.float32))
+    with pytest.raises(ValueError, match="shape"):
+        store.register(1, np.zeros(3, np.float32))
+    with pytest.raises(ValueError, match="non-finite"):
+        store.register(2, np.float32([np.nan, 0.0]))
+    with pytest.raises(KeyError, match="unregistered"):
+        store.fetch([99])
+    with pytest.raises(ValueError, match="duplicate"):
+        store.register(3, np.zeros(2, np.float32)) or store.fetch([0, 0])
+    store.register(4, np.zeros(2, np.float32))
+    with pytest.raises(ValueError, match="exceeds hot_capacity"):
+        store.fetch([0, 3, 4])
+    with pytest.raises(KeyError, match="not hot"):
+        store.commit([4], np.zeros((1, 2), np.float32), np.array([1]))
+    with pytest.raises(ValueError, match="mixed drive"):
+        store.register("t", np.zeros(2, np.float32),
+                       theta=np.float32([1.0]))
+        store.fetch([0, "t"])
+
+
+# ---------------------------------------------------------------------------
+# StreamingFleetServer: continuous batching under seeded traffic
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _fused_fleet():
+    twin = make_autonomous_twin(state_dim=DIM, hidden=8, n_hidden_layers=1,
+                                gradient="fused_vjp",
+                                backend=FusedPallasBackend(precision="f32"))
+    params = twin.init(jax.random.PRNGKey(1))
+    return TwinFleet(twin=twin), params
+
+
+def _serve(trace, **kw):
+    fleet, params = _fused_fleet()
+    cfg = dict(dt=DT, hot_capacity=8, max_batch=4, max_window=8,
+               horizon_quantum=4)
+    cfg.update(kw)
+    server = StreamingFleetServer(fleet, params, **cfg)
+    rng = np.random.default_rng(11)
+    y0s = {}
+
+    def y0_of(tid):
+        if tid not in y0s:
+            y0s[tid] = rng.normal(size=DIM).astype(np.float32) * 0.1
+        return y0s[tid]
+
+    done = server.serve_trace(trace, y0_of=y0_of)
+    return server, done
+
+
+@pytest.mark.parametrize("trace_name", sorted(traffic.TRACES))
+def test_streaming_invariants_under_traffic(trace_name):
+    """Every traffic shape — memoryless, bursty, all-cold paging storm,
+    single-twin serialisation, ragged horizons — must drop nothing,
+    preserve per-twin order, and conserve both requests and state."""
+    gen = traffic.TRACES[trace_name]
+    trace = gen(seed=5, n_requests=24, max_horizon=12)
+    server, done = _serve(trace)
+    traffic.check_all(server, trace, done)
+
+
+def test_streaming_paging_exercised_population_4x_hot():
+    """The acceptance bar: resident population >= 4x the hot set, served
+    to completion with paging actually happening and nothing dropped."""
+    trace = traffic.poisson_trace(seed=9, n_requests=40, population=32,
+                                  min_horizon=2, max_horizon=10)
+    assert traffic.population_of(trace) >= 4 * 8 // 2  # >=16 distinct twins
+    server, done = _serve(trace, hot_capacity=4, max_batch=4)
+    assert traffic.population_of(trace) >= 4 * server.store.hot_capacity
+    traffic.check_all(server, trace, done)
+    assert server.store.stats.evictions > 0, "paging was not exercised"
+
+
+def test_streaming_matches_uninterrupted_rollout():
+    """Continuous batching is invisible in the numbers: each twin's
+    stitched completions equal ONE uninterrupted resumed rollout of the
+    same total horizon, bitwise (f32)."""
+    trace = traffic.poisson_trace(seed=2, n_requests=20, population=6,
+                                  min_horizon=2, max_horizon=12)
+    server, done = _serve(trace)
+    traffic.check_all(server, trace, done)
+    fleet, params = _fused_fleet()
+    backend = resolve_backend(fleet.backend)
+    state = backend.program(fleet.twin.node.field, params)
+    by_twin = {}
+    for c in sorted(done, key=lambda c: c.seq):
+        by_twin.setdefault(c.twin_id, []).append(c.trajectory)
+    for tid, parts in by_twin.items():
+        stitched = np.concatenate(
+            [parts[0]] + [p[1:] for p in parts[1:]], axis=0)
+        total = stitched.shape[0] - 1
+        full = backend.rollout_batch_resumed(
+            state, stitched[None, 0], dt=DT, num_steps=total)
+        np.testing.assert_array_equal(stitched, np.asarray(full[0]))
+
+
+def test_streaming_deterministic_replay():
+    """Same trace + same seeds -> byte-identical completions (the whole
+    schedule is a pure function of the trace)."""
+    trace = traffic.bursty_trace(seed=4, n_requests=16, population=8,
+                                 max_horizon=10)
+    _, done_a = _serve(trace)
+    _, done_b = _serve(trace)
+    assert [c.seq for c in done_a] == [c.seq for c in done_b]
+    for a, b in zip(done_a, done_b):
+        assert a.twin_id == b.twin_id and a.tier == b.tier
+        np.testing.assert_array_equal(a.trajectory, b.trajectory)
+
+
+def test_streaming_splits_long_requests():
+    """A horizon longer than max_window is served across several batches
+    through the chunk-carry path — one completion, full trajectory, and
+    the split counter shows it happened."""
+    trace = [traffic.Arrival(0.0, 0, 21)]
+    server, done = _serve(trace, max_window=8)
+    traffic.check_all(server, trace, done)
+    assert len(done) == 1 and done[0].trajectory.shape == (22, DIM)
+    assert server.stats.splits >= 2
+
+
+def test_streaming_front_door_validation():
+    fleet, params = _fused_fleet()
+    server = StreamingFleetServer(fleet, params, dt=DT, hot_capacity=4,
+                                  max_batch=2, max_window=8)
+    with pytest.raises(KeyError, match="not registered"):
+        server.submit("ghost", 4)
+    server.register_twin(0, np.zeros(DIM, np.float32))
+    with pytest.raises(ValueError, match="horizon"):
+        server.submit(0, 0)
+    with pytest.raises(ValueError, match="theta"):
+        server.register_twin(1, np.zeros(DIM, np.float32),
+                             theta=np.float32([1.0]))
+    with pytest.raises(ValueError, match="max_batch"):
+        StreamingFleetServer(fleet, params, dt=DT, hot_capacity=2,
+                             max_batch=4)
+    with pytest.raises(ValueError, match="dt"):
+        StreamingFleetServer(fleet, params, dt=0.0)
+
+
+def test_streaming_driven_fleet_with_slo_fallback_chain():
+    """Driven analogue fleet under an armed SLO: the fallback chain is
+    built, probes run, and every request is served by SOME tier with the
+    conservation invariants intact."""
+    drive_family = lambda t, th: th[0] * jnp.sin(th[1] * t)
+    twin = make_driven_twin(state_dim=2, hidden=8, n_hidden_layers=1,
+                            drive=lambda t: jnp.sin(t),
+                            gradient="fused_vjp")
+    params = twin.init(jax.random.PRNGKey(2))
+    backend = FusedAnalogueBackend(spec=AnalogueSpec(read_noise=0.05),
+                                   prog_key=jax.random.PRNGKey(3))
+    fleet = TwinFleet(twin=twin.with_backend(backend),
+                      drive_family=drive_family)
+    server = StreamingFleetServer(
+        fleet, params, dt=DT, hot_capacity=8, max_batch=4, max_window=8,
+        horizon_quantum=4, slo=ServingSLO(max_rel_error=0.5))
+    assert [n for n, _ in server._tiers] == \
+        ["analogue_fused", "analogue_fused_clean", "digital"]
+    trace = traffic.bursty_trace(seed=6, n_requests=12, population=6,
+                                 max_horizon=8)
+    rng = np.random.default_rng(13)
+    done = server.serve_trace(
+        trace,
+        y0_of=lambda i: rng.normal(size=2).astype(np.float32) * 0.1,
+        theta_of=lambda i: np.float32([0.5, 2.0 + 0.1 * i]))
+    traffic.check_all(server, trace, done)
+    assert server.serving_stats.probes > 0
+    assert sum(server.serving_stats.served_by.values()) == \
+        server.stats.batches
+
+
+def test_streaming_pathological_request_fails_closed():
+    """A server whose only tier produces non-finite trajectories (here: a
+    corrupted weight program) must count requests ``failed`` — not drop
+    them silently, not raise — and leave carried state untouched for the
+    next (possibly re-programmed) attempt."""
+    fleet, params = _fused_fleet()
+    bad_params = jax.tree_util.tree_map(
+        lambda x: x * np.float32(np.nan), params)
+    server = StreamingFleetServer(fleet, bad_params, dt=DT, hot_capacity=4,
+                                  max_batch=2, max_window=8,
+                                  horizon_quantum=4)
+    y0 = np.float32([0.1, 0.2, 0.3])
+    server.register_twin("t", y0)
+    server.submit("t", 4)
+    done = server.drain()
+    assert done == [] and server.stats.failed == 1
+    assert server.stats.enqueued == server.stats.served + \
+        server.stats.failed + server.pending
+    y, step = server.store.peek("t")
+    np.testing.assert_array_equal(y, y0)     # state untouched by failure
+    assert step == 0
+    server.store.check_invariants()
+
+
+def test_streaming_theta_survives_paging():
+    """Per-twin drive parameters are host metadata: they survive
+    eviction round-trips and come back with fetch in batch order."""
+    store = TwinStateStore(2, hot_capacity=1)
+    store.register("a", np.zeros(2, np.float32), theta=np.float32([1, 2]),
+                   step=3)
+    store.register("b", np.zeros(2, np.float32), theta=np.float32([3, 4]))
+    _, steps, thetas = store.fetch(["a"])
+    assert list(steps) == [3]
+    np.testing.assert_array_equal(np.asarray(thetas),
+                                  np.float32([[1, 2]]))
+    store.fetch(["b"])                        # evicts "a"
+    np.testing.assert_array_equal(store.theta("a"), np.float32([1, 2]))
+    _, _, thetas = store.fetch(["a"])         # pages back with theta
+    np.testing.assert_array_equal(np.asarray(thetas),
+                                  np.float32([[1, 2]]))
+
+
+def test_streaming_digital_backend_serves_too():
+    """The streaming loop is substrate-agnostic: a digital-backend fleet
+    goes through the vmap window path and meets the same invariants."""
+    twin = make_autonomous_twin(state_dim=DIM, hidden=8, n_hidden_layers=1,
+                                backend=DigitalBackend())
+    params = twin.init(jax.random.PRNGKey(1))
+    fleet = TwinFleet(twin=twin)
+    server = StreamingFleetServer(fleet, params, dt=DT, hot_capacity=4,
+                                  max_batch=2, max_window=8,
+                                  horizon_quantum=4)
+    trace = traffic.poisson_trace(seed=8, n_requests=10, population=5,
+                                  min_horizon=2, max_horizon=8)
+    rng = np.random.default_rng(17)
+    done = server.serve_trace(
+        trace, y0_of=lambda i: rng.normal(size=DIM).astype(np.float32) * 0.1)
+    traffic.check_all(server, trace, done)

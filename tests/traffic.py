@@ -1,0 +1,100 @@
+"""Arrival generators + invariant layer for the streaming serving tests.
+
+The generators themselves live in :mod:`repro.launch.traffic` (the
+latency benchmark replays the same traces); this module re-exports them
+for the test suite and adds the *invariant checkers* the stress tests
+run after every replayed schedule:
+
+  * no request is dropped         (every submitted seq completes or is
+                                   counted failed)
+  * per-twin arrival order holds  (a twin's completions carry strictly
+                                   increasing seqs and consume horizons
+                                   in submission order)
+  * eviction never loses state    (every twin's step counter equals the
+                                   steps actually served to it, its
+                                   state is finite, and the store's
+                                   structural audit passes)
+  * stats conservation            (enqueued == served + failed + pending)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.launch.traffic import (Arrival, TRACES, all_cold_trace,  # noqa: F401
+                                  bursty_trace, hot_loop_trace,
+                                  poisson_trace, population_of,
+                                  ragged_trace)
+
+__all__ = [
+    "Arrival", "TRACES", "all_cold_trace", "bursty_trace",
+    "hot_loop_trace", "poisson_trace", "population_of", "ragged_trace",
+    "check_no_drops", "check_arrival_order", "check_conservation",
+    "check_state_safety", "check_all",
+]
+
+
+def check_no_drops(server, trace, done) -> None:
+    """Every arrival was served exactly once (failures must be explicit:
+    this checker is for healthy schedules where nothing may fail)."""
+    assert server.stats.failed == 0, \
+        f"{server.stats.failed} requests failed on a healthy schedule"
+    assert server.pending == 0, f"{server.pending} requests still queued"
+    assert len(done) == len(trace), \
+        f"{len(trace)} arrivals but {len(done)} completions"
+    assert sorted(c.seq for c in done) == list(range(len(trace))), \
+        "completion seqs are not exactly the submitted seqs"
+
+
+def check_arrival_order(done) -> None:
+    """No twin is served out of arrival order: its completions carry
+    strictly increasing seqs (seqs are assigned in submission order)."""
+    by_twin: dict = {}
+    for c in done:
+        by_twin.setdefault(c.twin_id, []).append(c.seq)
+    for twin_id, seqs in by_twin.items():
+        assert seqs == sorted(seqs), \
+            f"twin {twin_id!r} served out of arrival order: {seqs}"
+
+
+def check_conservation(server) -> None:
+    """enqueued == served + failed + pending, and the per-batch step
+    accounting is consistent with the padded-work counter."""
+    s = server.stats
+    assert s.enqueued == s.served + s.failed + server.pending, \
+        f"conservation violated: {s.as_dict()}, pending={server.pending}"
+    assert s.twin_steps >= 0 and s.padded_steps >= 0
+
+
+def check_state_safety(server, trace, done) -> None:
+    """Eviction/paging never loses un-checkpointed state: each twin's
+    global step counter equals the horizons actually completed for it,
+    every carried state is finite, and the store's structural audit
+    (tier partition, slot bijection) passes.  Horizons are matched in
+    arrival order, so a reordered or double-served window fails here
+    even if the step totals happen to agree."""
+    server.store.check_invariants()
+    arrival_h: dict = {}
+    for a in trace:
+        arrival_h.setdefault(a.twin_id, []).append(a.horizon)
+    served_steps: dict = {}
+    for c in sorted(done, key=lambda c: c.seq):
+        expect = arrival_h[c.twin_id].pop(0)
+        got = c.trajectory.shape[0] - 1
+        assert got == expect, \
+            (f"twin {c.twin_id!r} seq {c.seq}: served {got} steps, "
+             f"arrival asked {expect}")
+        assert np.isfinite(c.trajectory).all(), \
+            f"twin {c.twin_id!r} seq {c.seq}: non-finite trajectory"
+        served_steps[c.twin_id] = served_steps.get(c.twin_id, 0) + got
+    for twin_id, total in served_steps.items():
+        _, step = server.store.peek(twin_id)
+        assert step == total, \
+            (f"twin {twin_id!r}: store says step {step}, completions "
+             f"total {total} — state lost or double-advanced")
+
+
+def check_all(server, trace, done) -> None:
+    check_no_drops(server, trace, done)
+    check_arrival_order(done)
+    check_conservation(server)
+    check_state_safety(server, trace, done)
