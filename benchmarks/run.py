@@ -841,7 +841,7 @@ def bench_serving_latency():
     server.serve_trace(trace, y0_of=y0s.__getitem__)
 
     # pass 2: per-request wall latency under continuous batching
-    server.stats = StreamStats()
+    server.stream_stats = StreamStats()
     t_submit, lat = {}, []
     for a in trace:
         seq = server.submit(a.twin_id, a.horizon, t_arrival=a.time)
@@ -852,18 +852,19 @@ def bench_serving_latency():
     while server.pending:
         for c in server.pump():
             lat.append(time.time() - t_submit.pop(c.seq))
-    assert server.stats.failed == 0 and not t_submit, "dropped requests"
+    assert server.stream_stats.failed == 0 and not t_submit, \
+        "dropped requests"
     p50, p99 = np.percentile(np.asarray(lat) * 1e3, [50, 99])
     emit("serving_latency/poisson/request_latency",
          float(np.mean(lat)) * 1e6,
          f"p50_ms {p50:.2f} p99_ms {p99:.2f} n_requests {len(lat)} "
-         f"batches {server.stats.batches}")
+         f"batches {server.stream_stats.batches}")
 
     # pass 3: sustained throughput over a whole closed-loop replay
-    server.stats = StreamStats()
+    server.stream_stats = StreamStats()
     us_replay, done = _walltime(
         lambda: server.serve_trace(trace, y0_of=y0s.__getitem__))
-    s = server.stats
+    s = server.stream_stats
     rate = s.twin_steps / (us_replay * 1e-6)
     overhead = s.padded_steps / max(s.twin_steps + s.padded_steps, 1)
     emit("serving_latency/poisson/throughput", us_replay,
@@ -875,6 +876,134 @@ def bench_serving_latency():
          f"population {population} hot_capacity {hot} "
          f"evictions {st.evictions} page_ins {st.page_ins} "
          f"hot_hits {st.hot_hits} dropped 0")
+
+
+def bench_recovery():
+    """Crash-safe serving: journal overhead and recovery cost
+    (``docs/robustness.md``).
+
+    Rows:
+
+      ``journal_overhead``  per-request latency of the SAME Poisson
+                            workload with the fsync'd journal off vs on;
+                            derived carries p50/p99 both ways and the
+                            p99 ratio (the CI bench-smoke gate:
+                            ratio <= 1.2);
+      ``replay/interval_K`` crash mid-trace with snapshots every K
+                            pumps, then time ``recover()`` (snapshot
+                            load + journal replay) — the
+                            replay-time-vs-snapshot-cadence trade;
+      ``parity``            the zero-loss row: after every crash above,
+                            recovered state is bitwise-equal (f32) to
+                            the crash-free run and no completion is
+                            lost or invented.
+    """
+    import shutil
+    import tempfile
+
+    import jax
+    import numpy as np
+    from repro.core.backends import FusedPallasBackend
+    from repro.core.twin import TwinFleet, make_autonomous_twin
+    from repro.launch import chaos, traffic
+    from repro.launch.fleet_serving import StreamingFleetServer
+
+    n_req = 40 if FAST else 120
+    population = 16 if FAST else 48
+    hot = population // 2
+    twin = make_autonomous_twin(
+        state_dim=8, hidden=16, n_hidden_layers=1, gradient="fused_vjp",
+        backend=FusedPallasBackend(precision="f32"))
+    params = twin.init(jax.random.PRNGKey(0))
+    fleet = TwinFleet(twin=twin)
+    kw = dict(dt=1e-2, hot_capacity=hot, max_batch=min(8, hot),
+              max_window=16, horizon_quantum=8)
+    trace = traffic.poisson_trace(0, n_req, rate_hz=500.0,
+                                  population=population, min_horizon=4,
+                                  max_horizon=24)
+    rng = np.random.default_rng(1)
+    y0s = {a.twin_id: rng.normal(size=8).astype(np.float32) * 0.1
+           for a in trace}
+    y0_of = y0s.__getitem__
+
+    def lat_pass(server):
+        """Per-request submit->completion wall latency (ms array)."""
+        t_submit, lat = {}, []
+        for a in trace:
+            if a.twin_id not in server.store:
+                server.register_twin(a.twin_id, y0_of(a.twin_id))
+            seq = server.submit(a.twin_id, a.horizon, t_arrival=a.time)
+            t_submit[seq] = time.time()
+            if server.pending >= server.max_batch:
+                for c in server.pump(now=a.time):
+                    lat.append(time.time() - t_submit.pop(c.seq))
+        for c in server.drain(now=trace[-1].time):
+            lat.append(time.time() - t_submit.pop(c.seq))
+        assert not t_submit, "dropped requests"
+        return np.asarray(lat) * 1e3
+
+    # compile pass (unmeasured), then journal-off vs journal-on
+    StreamingFleetServer(fleet, params, **kw).serve_trace(trace,
+                                                          y0_of=y0_of)
+    lat_off = lat_pass(StreamingFleetServer(fleet, params, **kw))
+    tmp = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        lat_on = lat_pass(StreamingFleetServer(
+            fleet, params, durability_dir=os.path.join(tmp, "lat"),
+            snapshot_every=16, **kw))
+        p50_off, p99_off = np.percentile(lat_off, [50, 99])
+        p50_on, p99_on = np.percentile(lat_on, [50, 99])
+        ratio = p99_on / max(p99_off, 1e-9)
+        emit("recovery/journal_overhead", float(np.mean(lat_on)) * 1e3,
+             f"p50_off_ms {p50_off:.3f} p99_off_ms {p99_off:.3f} "
+             f"p50_on_ms {p50_on:.3f} p99_on_ms {p99_on:.3f} "
+             f"p99_ratio {ratio:.3f}")
+
+        # crash-free reference for the parity row
+        ref = StreamingFleetServer(fleet, params, **kw)
+        ref_done = ref.serve_trace(trace, y0_of=y0_of)
+        ref_ids, _, _, _ = ref.store.export_state()
+
+        lost = phantom = diverged = 0
+        for interval in (4, 16, 64):
+            d = os.path.join(tmp, f"replay_{interval}")
+            live = StreamingFleetServer(fleet, params, durability_dir=d,
+                                        snapshot_every=interval, **kw)
+            delivered = []
+            try:
+                with chaos.crash_at("pump:post_commit", hit=n_req // 8):
+                    live.serve_trace(trace, y0_of=y0_of, sink=delivered)
+            except chaos.SimulatedCrash:
+                pass
+            jbytes = live._journal.nbytes
+            t0 = time.time()
+            rec, redelivered = StreamingFleetServer.recover(d, fleet,
+                                                            params)
+            recover_ms = (time.time() - t0) * 1e3
+            resumed = rec.serve_trace(trace, y0_of=y0_of,
+                                      start=rec.stream_stats.enqueued)
+            got = {c.seq for c in delivered} | \
+                  {c.seq for c in redelivered} | {c.seq for c in resumed}
+            ref_seqs = {c.seq for c in ref_done}
+            lost += len(ref_seqs - got)
+            phantom += len(got - ref_seqs)
+            for tid in ref_ids:
+                y_ref, s_ref = ref.store.peek(tid)
+                y_rec, s_rec = rec.store.peek(tid)
+                if s_ref != s_rec or not np.array_equal(y_ref, y_rec):
+                    diverged += 1
+            emit(f"recovery/replay/interval_{interval}",
+                 recover_ms * 1e3,
+                 f"recover_ms {recover_ms:.1f} journal_bytes {jbytes} "
+                 f"replayed {len(redelivered)} "
+                 f"resumed {len(resumed)}")
+        emit("recovery/parity", 0.0,
+             f"lost {lost} phantom {phantom} diverged_twins {diverged} "
+             f"bitwise {'true' if not (lost or phantom or diverged) else 'FALSE'}")
+        assert not (lost or phantom or diverged), \
+            "recovery parity violated (see recovery/parity row)"
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
 
 
 def bench_roofline():
@@ -905,6 +1034,7 @@ BENCHES = {
     "train_throughput": bench_train_throughput,
     "fault_tolerance": bench_fault_tolerance,
     "serving_latency": bench_serving_latency,
+    "recovery": bench_recovery,
     "roofline": bench_roofline,
 }
 

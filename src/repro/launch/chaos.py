@@ -1,0 +1,224 @@
+"""Crash and fault injection for the serving stack (the chaos harness).
+
+Crash-safety claims are only as strong as the crashes they were tested
+against, so the durable serving loop (`repro.launch.journal`,
+`repro.launch.fleet_serving.StreamingFleetServer`) is instrumented with
+named **kill points** — places where a real process death would be most
+damaging — and this module arms them:
+
+  ``pump:pre_commit``       batch computed, store NOT yet updated
+  ``pump:post_commit``      store scattered, journal records NOT yet
+                            durable (the mid-scatter window)
+  ``store:evict``           mid-eviction inside an LRU page-out
+  ``snapshot:pre_rename``   snapshot tmp dir fully written, atomic
+                            rename NOT yet issued (also arms the train
+                            checkpointer — same publish protocol)
+  ``journal:torn_append``   process dies mid-``write``: a torn half
+                            frame is left on the journal tail
+
+An armed kill point raises :class:`SimulatedCrash`, which subclasses
+``BaseException`` on purpose: the serving loop's retry/fallback paths
+catch ``Exception``, and a chaos test must prove recovery works when the
+process actually dies — not that some retry loop swallowed the "crash".
+
+Transient (recoverable) faults use the separate **fault point**
+mechanism: :func:`flaky` arms a named site to raise an ordinary
+exception ``times`` times, which is how the exponential-backoff retry
+path is exercised.
+
+Both registries are process-global and test-scoped: ``crash_at`` /
+``flaky`` are context managers that always disarm on exit, so a failing
+test cannot leak chaos into its neighbours.
+
+CLI smoke (the CI chaos-smoke step runs the pytest matrix; this is the
+human-sized equivalent):
+
+  PYTHONPATH=src python -m repro.launch.chaos --kill pump:post_commit
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+from typing import Callable, Dict, Iterator, List, Optional, Type
+
+#: Every kill point the serving stack exposes.  ``crash_at`` validates
+#: against this list so a typo'd name fails the test instead of silently
+#: never firing.
+KILL_POINTS = (
+    "pump:pre_commit",
+    "pump:post_commit",
+    "store:evict",
+    "snapshot:pre_rename",
+    "journal:torn_append",
+)
+
+_armed: Dict[str, int] = {}            # kill point -> hits until crash
+_faults: Dict[str, List] = {}          # fault point -> [count, exc_type]
+
+
+class SimulatedCrash(BaseException):
+    """An injected process death.
+
+    Deliberately NOT an ``Exception`` subclass: recovery must be proven
+    against crashes that no ``except Exception`` handler (the transient
+    retry path, the tier fallback loop) can intercept.
+    """
+
+
+def kill_point(name: str, partial: Optional[Callable[[], None]] = None
+               ) -> None:
+    """Declare a crash site.  No-op unless armed via :func:`crash_at`.
+
+    ``partial``: optional side effect to run *just before* dying —
+    journal appends use it to leave a torn half-frame on disk, the
+    damage a real mid-``write`` death produces.
+    """
+    hits = _armed.get(name)
+    if hits is None:
+        return
+    if hits > 1:
+        _armed[name] = hits - 1
+        return
+    del _armed[name]
+    if partial is not None:
+        partial()
+    raise SimulatedCrash(f"simulated crash at kill point {name!r}")
+
+
+@contextlib.contextmanager
+def crash_at(name: str, hit: int = 1) -> Iterator[None]:
+    """Arm ``name`` to crash on its ``hit``-th execution (1 = first).
+
+    Always disarms on exit — including when the crash fired — so chaos
+    never leaks across tests.
+    """
+    if name not in KILL_POINTS:
+        raise ValueError(
+            f"unknown kill point {name!r}; chaos knows {KILL_POINTS}")
+    if hit < 1:
+        raise ValueError(f"crash_at: hit must be >= 1, got {hit}")
+    _armed[name] = hit
+    try:
+        yield
+    finally:
+        _armed.pop(name, None)
+
+
+def fault_point(name: str) -> None:
+    """Declare a transient-fault site.  No-op unless armed via
+    :func:`flaky`; when armed, raises the configured ``Exception`` the
+    next ``times`` executions, then heals."""
+    ent = _faults.get(name)
+    if ent is None:
+        return
+    count, exc_type = ent
+    if count <= 1:
+        del _faults[name]
+    else:
+        ent[0] = count - 1
+    raise exc_type(f"injected transient fault at {name!r}")
+
+
+@contextlib.contextmanager
+def flaky(name: str, times: int = 1,
+          exc_type: Type[Exception] = RuntimeError) -> Iterator[None]:
+    """Arm fault point ``name`` to fail ``times`` times then heal —
+    the shape of a transient infrastructure fault (device hiccup,
+    preempted kernel) the retry-with-backoff path must absorb."""
+    if times < 1:
+        raise ValueError(f"flaky: times must be >= 1, got {times}")
+    _faults[name] = [times, exc_type]
+    try:
+        yield
+    finally:
+        _faults.pop(name, None)
+
+
+def reset() -> None:
+    """Disarm everything (test-session hygiene)."""
+    _armed.clear()
+    _faults.clear()
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke: one crash/recover cycle at a chosen kill point
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Crash a streaming serve mid-flight at a named kill "
+                    "point, recover from the journal, and verify parity "
+                    "with an uninterrupted run")
+    ap.add_argument("--kill", default="pump:post_commit",
+                    choices=list(KILL_POINTS))
+    ap.add_argument("--hit", type=int, default=2,
+                    help="crash on the N-th execution of the kill point")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=24)
+    args = ap.parse_args(argv)
+
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro.core.backends import FusedPallasBackend
+    from repro.core.twin import TwinFleet, make_autonomous_twin
+    from repro.launch import traffic
+    from repro.launch.fleet_serving import StreamingFleetServer
+
+    twin = make_autonomous_twin(state_dim=3, hidden=8, n_hidden_layers=1,
+                                backend=FusedPallasBackend(
+                                    precision="f32"))
+    params = twin.init(jax.random.PRNGKey(0))
+    fleet = TwinFleet(twin)
+    trace = traffic.poisson_trace(args.seed, args.requests, population=8,
+                                  max_horizon=12)
+    rng = np.random.default_rng(1)
+    y0s = {tid: np.float32(rng.normal(size=3) * 0.1) for tid in range(8)}
+    y0_of = y0s.__getitem__
+    kw = dict(dt=0.01, hot_capacity=4, max_batch=4, max_window=8,
+              horizon_quantum=4)
+
+    ref = StreamingFleetServer(fleet, params, **kw)
+    ref_done = ref.serve_trace(trace, y0_of=y0_of)
+
+    with tempfile.TemporaryDirectory() as d:
+        live = StreamingFleetServer(fleet, params, durability_dir=d,
+                                    snapshot_every=3, **kw)
+        delivered = []       # completions received before the crash
+        try:
+            with crash_at(args.kill, hit=args.hit):
+                live.serve_trace(trace, y0_of=y0_of, sink=delivered)
+            raise SystemExit(f"kill point {args.kill!r} never fired "
+                             f"(hit={args.hit} too deep for this trace?)")
+        except SimulatedCrash as e:
+            print(f"crashed: {e}")
+        rec, redelivered = StreamingFleetServer.recover(d, fleet, params)
+        resumed = rec.serve_trace(trace, y0_of=y0_of,
+                                  start=rec.stream_stats.enqueued)
+        rec_done = ({c.seq for c in delivered}
+                    | {c.seq for c in redelivered}
+                    | {c.seq for c in resumed})
+        for tid in y0s:
+            if tid in ref.store:
+                y_ref, s_ref = ref.store.peek(tid)
+                y_rec, s_rec = rec.store.peek(tid)
+                assert s_ref == s_rec and np.array_equal(y_ref, y_rec), \
+                    f"twin {tid} diverged after recovery"
+        ref_seqs = {c.seq for c in ref_done}
+        assert rec_done == ref_seqs, \
+            f"completion sets differ: lost {ref_seqs - rec_done}, " \
+            f"phantom {rec_done - ref_seqs}"
+        print(f"recovered: {len(rec_done)} completions, "
+              f"{len(ref.store)} twins bitwise-equal to the "
+              f"uninterrupted run")
+
+
+if __name__ == "__main__":
+    # ``python -m repro.launch.chaos`` executes this file as __main__ —
+    # a SECOND module instance whose _armed registry the serving stack
+    # (which imports repro.launch.chaos) never consults.  Dispatch to
+    # the canonical instance so armed kill points actually fire.
+    from repro.launch import chaos as _canonical
+    _canonical.main()

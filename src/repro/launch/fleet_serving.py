@@ -41,7 +41,9 @@ CLI smoke (Lorenz96 fleet, trivial mesh on CPU):
 from __future__ import annotations
 
 import argparse
+import copy
 import dataclasses
+import os
 import tempfile
 import time
 from typing import Any, Callable, Iterable, Iterator, Optional, Union
@@ -55,10 +57,12 @@ from jax.sharding import PartitionSpec as P
 from repro.core.backends import (AnalogueBackend, DigitalBackend,
                                  FusedAnalogueBackend, FusedPallasBackend,
                                  _with_drive, resolve_backend)
+from repro.launch import chaos
+from repro.launch import journal as journal_lib
 from repro.launch.mesh import TWIN_AXIS, make_twin_mesh, twin_shard_count
 from repro.launch.sharding import (fleet_input_shardings,
                                    fleet_param_shardings)
-from repro.launch.state_store import TwinStateStore
+from repro.launch.state_store import StoreStats, TwinStateStore
 from repro.train import checkpoint as ckpt_lib
 
 Pytree = Any
@@ -246,6 +250,7 @@ class ServingStats:
     probe_recoveries: int = 0
     nan_rescues: int = 0
     retries: int = 0
+    transient_retries: int = 0
     timeouts: int = 0
     served_by: dict = dataclasses.field(default_factory=dict)
     probe_errors: dict = dataclasses.field(default_factory=dict)
@@ -479,12 +484,16 @@ class StreamRequest:
     RK4 steps from its carried state.  ``seq`` is the server-assigned
     arrival index (global FIFO order); ``remaining`` counts the steps
     still unserved (requests longer than the server's window are split
-    across batches through the chunk-carry mechanism)."""
+    across batches through the chunk-carry mechanism).  ``deadline`` is
+    the latest virtual time the request may still be *started* —
+    assembly drops stale requests (counted ``expired``); a request that
+    has begun being served always runs to completion."""
     seq: int
     twin_id: Any
     horizon: int
     remaining: int
     t_arrival: float = 0.0
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -504,10 +513,15 @@ class Completed:
 @dataclasses.dataclass
 class StreamStats:
     """Continuous-batching counters; conservation invariant (checked by
-    ``tests/traffic.py``): ``enqueued == served + failed + pending``."""
+    ``tests/traffic.py``): every submitted request lands in exactly one
+    terminal bucket — ``enqueued == served + failed + shed + expired +
+    quarantined + pending``."""
     enqueued: int = 0
     served: int = 0
     failed: int = 0
+    shed: int = 0            # load-shedding victims (bounded queue)
+    expired: int = 0         # deadline passed before assembly
+    quarantined: int = 0     # poison requests parked with a diagnostic
     batches: int = 0
     twin_steps: int = 0      # real (unpadded) RK4 steps served
     padded_steps: int = 0    # ragged-horizon + batch padding overhead
@@ -515,6 +529,37 @@ class StreamStats:
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Quarantined:
+    """A poison request, parked instead of served: even the digital tier
+    produced non-finite output for its batch.  ``reason`` records what
+    every tier said — the diagnostic an operator starts from.  The
+    twin's carried state is untouched."""
+    seq: int
+    twin_id: Any
+    horizon: int
+    remaining: int
+    t_arrival: float
+    reason: str
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """The one structured observability snapshot
+    (:meth:`StreamingFleetServer.stats`): continuous-batching counters,
+    degradation-machinery counters, and the state store's paging
+    counters under a single ``as_dict`` schema — what the benches and
+    the traffic invariant checkers consume."""
+    stream: StreamStats
+    serving: ServingStats
+    store: StoreStats
+
+    def as_dict(self) -> dict:
+        return {"stream": self.stream.as_dict(),
+                "serving": self.serving.as_dict(),
+                "store": self.store.as_dict()}
 
 
 class StreamingFleetServer:
@@ -550,15 +595,38 @@ class StreamingFleetServer:
     programmed once at construction, a golden window probe re-picks the
     healthiest tier every ``probe_every`` batches, and a batch whose
     trajectories come back non-finite is retried down the chain; a
-    request that even the digital tier cannot serve is counted
-    ``failed`` (its carried state is left untouched) instead of killing
-    the stream.
+    request that even the digital tier cannot serve is quarantined with
+    a per-tier diagnostic (its carried state is left untouched) instead
+    of killing the stream or looping the fallback chain.
+
+    Admission control: ``max_queue`` bounds the request queue; an
+    arrival past the bound is load-shed per ``shed_policy`` —
+    ``"reject_new"`` (the arrival itself is refused, ``submit`` returns
+    ``None``) or ``"drop_oldest"`` (the submitting twin's oldest
+    still-unstarted request is dropped to make room).  Per-request
+    ``deadline``s are checked at assembly time; transient tier
+    exceptions are retried ``transient_retries`` times with exponential
+    backoff before falling down the chain.
+
+    Durability: pass ``durability_dir`` to arm the write-ahead journal +
+    periodic snapshots (:mod:`repro.launch.journal`) — every externally
+    visible event is fsync'd before it is acknowledged, and
+    :meth:`recover` rebuilds a bitwise-identical (f32) server from disk
+    after a crash at ANY point.  Twin ids must be JSON-serialisable
+    scalars when durability is armed.
     """
 
     def __init__(self, fleet, params, *, dt: float, t0: float = 0.0,
                  hot_capacity: int = 64, max_batch: int = 32,
                  max_window: int = 64, horizon_quantum: int = 8,
-                 slo: Optional[ServingSLO] = None):
+                 slo: Optional[ServingSLO] = None,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject_new",
+                 transient_retries: int = 2,
+                 backoff_base_s: float = 0.01,
+                 durability_dir: Optional[str] = None,
+                 snapshot_every: int = 16, snapshot_keep: int = 3,
+                 fsync: bool = True):
         if dt <= 0:
             raise ValueError(f"StreamingFleetServer: dt must be > 0, "
                              f"got {dt}")
@@ -571,6 +639,21 @@ class StreamingFleetServer:
             raise ValueError(
                 "StreamingFleetServer: max_window and horizon_quantum "
                 "must be >= 1")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"StreamingFleetServer: max_queue must be "
+                             f">= 1 or None, got {max_queue}")
+        if shed_policy not in ("reject_new", "drop_oldest"):
+            raise ValueError(
+                f"StreamingFleetServer: shed_policy must be 'reject_new'"
+                f" or 'drop_oldest', got {shed_policy!r}")
+        if transient_retries < 0 or backoff_base_s < 0:
+            raise ValueError(
+                "StreamingFleetServer: transient_retries and "
+                "backoff_base_s must be >= 0")
+        if snapshot_every < 0 or snapshot_keep < 1:
+            raise ValueError(
+                "StreamingFleetServer: need snapshot_every >= 0 "
+                "(0 = manual snapshots only) and snapshot_keep >= 1")
         self.fleet = fleet
         self.params = params
         self.dt = float(dt)
@@ -579,9 +662,20 @@ class StreamingFleetServer:
         self.max_window = int(max_window)
         self.horizon_quantum = int(horizon_quantum)
         self.slo = slo
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.shed_policy = shed_policy
+        self.transient_retries = int(transient_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.snapshot_every = int(snapshot_every)
+        self.snapshot_keep = int(snapshot_keep)
         self.store = TwinStateStore(fleet.twin.state_dim, hot_capacity)
-        self.stats = StreamStats()
+        self.stream_stats = StreamStats()
         self.serving_stats = ServingStats()
+        self.quarantine: dict = {}             # seq -> Quarantined
+        self._audit = os.environ.get("REPRO_STORE_AUDIT", "") == "1"
+        self._journal: Optional[journal_lib.Journal] = None
+        self._serve_dir: Optional[str] = None
+        self._pumps_since_snapshot = 0
         self._tiers = (fallback_chain(fleet) if slo is not None else
                        [(getattr(resolve_backend(fleet.backend), "name",
                                  "primary"), fleet)])
@@ -598,6 +692,9 @@ class StreamingFleetServer:
         self._queue: list = []                 # FIFO of StreamRequest
         self._partial: dict = {}               # seq -> list of row blocks
         self._seq = 0
+        if durability_dir is not None:
+            self._attach_durability(durability_dir, fsync=fsync,
+                                    resume=False)
 
     # -- population / ingest -------------------------------------------------
     @property
@@ -608,31 +705,111 @@ class StreamingFleetServer:
     def pending(self) -> int:
         return len(self._queue)
 
+    def stats(self) -> ServerStats:
+        """One structured observability snapshot: stream + serving +
+        store counters (copies — mutating the snapshot cannot corrupt
+        the live counters)."""
+        return ServerStats(stream=copy.deepcopy(self.stream_stats),
+                           serving=copy.deepcopy(self.serving_stats),
+                           store=copy.deepcopy(self.store.stats))
+
     def register_twin(self, twin_id, y0, *, theta=None) -> None:
         """Admit a twin with its initial condition (and per-twin drive
-        parameters for driven fleets) — host-side, no device traffic."""
+        parameters for driven fleets) — host-side, no device traffic.
+        Rejects non-finite / mis-shaped ``y0`` and ``theta`` with errors
+        naming the argument (the store checks ``y0``)."""
         if (theta is None) != (self.fleet.drive_family is None):
             raise ValueError(
                 "register_twin: theta must be given exactly when the "
                 "fleet has a drive_family")
+        if theta is not None:
+            th = np.asarray(theta)
+            if not np.issubdtype(th.dtype, np.floating):
+                raise ValueError(
+                    f"register_twin: theta has non-floating dtype "
+                    f"{th.dtype}")
+            if not np.isfinite(th).all():
+                raise ValueError(
+                    f"register_twin: theta for twin {twin_id!r} contains "
+                    f"non-finite (NaN/Inf) values")
         self.store.register(twin_id, y0, theta=theta)
+        if self._journal is not None:
+            rec = {"t": "register", "id": twin_id,
+                   "y0": journal_lib.json_floats(
+                       self.store.peek(twin_id)[0])}
+            if theta is not None:
+                th32 = np.asarray(theta, np.float32)
+                rec["theta"] = journal_lib.json_floats(th32)
+                rec["tshape"] = list(th32.shape)
+            self._journal.append(rec)
 
-    def submit(self, twin_id, horizon: int,
-               t_arrival: float = 0.0) -> int:
+    def submit(self, twin_id, horizon: int, t_arrival: float = 0.0, *,
+               deadline: Optional[float] = None) -> Optional[int]:
         """Enqueue a request to advance ``twin_id`` by ``horizon`` RK4
-        steps; returns its ``seq``.  Per-twin FIFO order is guaranteed;
-        cross-twin order is whatever batching finds profitable."""
+        steps; returns its ``seq``, or ``None`` if the bounded queue
+        shed it (``shed_policy="reject_new"``).  Per-twin FIFO order is
+        guaranteed; cross-twin order is whatever batching finds
+        profitable.  ``deadline`` (virtual time, same clock as
+        ``t_arrival``/``pump(now)``) is the latest the request may still
+        be started.  Malformed arguments raise ``ValueError`` naming the
+        offender at the front door — nothing invalid reaches a batch."""
         if twin_id not in self.store:
             raise KeyError(f"submit: twin {twin_id!r} is not registered")
+        if isinstance(horizon, bool) or not isinstance(
+                horizon, (int, np.integer)):
+            raise ValueError(
+                f"submit: horizon must be an integer step count, got "
+                f"{type(horizon).__name__} {horizon!r}")
         horizon = int(horizon)
         if horizon < 1:
             raise ValueError(f"submit: horizon must be >= 1, got {horizon}")
-        req = StreamRequest(seq=self._seq, twin_id=twin_id,
-                            horizon=horizon, remaining=horizon,
-                            t_arrival=float(t_arrival))
+        t_arrival = float(t_arrival)
+        if not np.isfinite(t_arrival):
+            raise ValueError(
+                f"submit: t_arrival must be finite, got {t_arrival}")
+        if deadline is not None:
+            deadline = float(deadline)
+            if not np.isfinite(deadline):
+                raise ValueError(
+                    f"submit: deadline must be finite (omit it for "
+                    f"no deadline), got {deadline}")
+            if deadline < t_arrival:
+                raise ValueError(
+                    f"submit: deadline {deadline} precedes t_arrival "
+                    f"{t_arrival} — the request is dead on arrival")
+        seq = self._seq
         self._seq += 1
+        self.stream_stats.enqueued += 1
+        jrec = {"t": "submit", "seq": seq, "id": twin_id, "h": horizon,
+                "ta": t_arrival, "dl": deadline}
+        if (self.max_queue is not None
+                and len(self._queue) >= self.max_queue):
+            victim = None
+            if self.shed_policy == "drop_oldest":
+                # oldest still-unstarted request of THIS twin — a
+                # half-served continuation is never shed (its work is
+                # already paid for and its state already advanced).
+                victim = next(
+                    (r for r in self._queue if r.twin_id == twin_id
+                     and r.remaining == r.horizon), None)
+            if victim is None:
+                # reject_new policy, or drop_oldest with nothing of this
+                # twin's to drop: the newcomer itself is shed.
+                self.stream_stats.shed += 1
+                if self._journal is not None:
+                    self._journal.append({**jrec, "shed": True})
+                return None
+            self._queue.remove(victim)
+            self.stream_stats.shed += 1
+            if self._journal is not None:
+                self._journal.append({"t": "shed", "seq": victim.seq},
+                                     sync=False)
+        req = StreamRequest(seq=seq, twin_id=twin_id, horizon=horizon,
+                            remaining=horizon, t_arrival=t_arrival,
+                            deadline=deadline)
         self._queue.append(req)
-        self.stats.enqueued += 1
+        if self._journal is not None:
+            self._journal.append(jrec)
         return req.seq
 
     # -- batch assembly ------------------------------------------------------
@@ -759,19 +936,13 @@ class StreamingFleetServer:
         self._active = chosen
 
     # -- the serving loop ----------------------------------------------------
-    def pump(self, now: float = 0.0) -> list:
-        """Assemble and serve ONE batch; returns the list of
-        :class:`Completed` requests it finished (possibly empty — a
-        window that only partially serves long requests completes
-        nothing).  Call repeatedly (``drain``) to empty the queue."""
-        picked, H = self._assemble()
-        if not picked:
-            return []
-        ids = [r.twin_id for r in picked]
+    def _fetch_padded(self, ids):
+        """Fetch carried state for a batch and pad it to the fixed
+        compiled width (replicating the last row keeps padding
+        in-distribution; results are sliced back).  Returns
+        ``(ys, starts, thetas, n)`` with ``n`` the real row count."""
         ys, starts, thetas = self.store.fetch(ids)
-        n = len(picked)
-        # Pad the batch to the fixed compiled width (replicating the
-        # last row keeps padding in-distribution; results are sliced).
+        n = len(ids)
         pad = self.max_batch - n
         if pad:
             ys = jnp.concatenate(
@@ -782,49 +953,106 @@ class StreamingFleetServer:
                     [thetas,
                      jnp.broadcast_to(thetas[-1:],
                                       (pad,) + thetas.shape[1:])])
+        return ys, starts, thetas, n
+
+    def _expire(self, now: float) -> None:
+        """Deadline check at assembly time: drop queued requests whose
+        deadline has passed before they were ever started.  A split
+        continuation (``remaining < horizon``) is exempt — its state has
+        already advanced, so dropping it would tear the twin's
+        trajectory; it runs to completion."""
+        stale = [r for r in self._queue
+                 if r.deadline is not None and r.remaining == r.horizon
+                 and now > r.deadline]
+        if not stale:
+            return
+        dead = {r.seq for r in stale}
+        self._queue = [r for r in self._queue if r.seq not in dead]
+        self.stream_stats.expired += len(stale)
+        if self._journal is not None:
+            self._journal.append({"t": "expire", "seqs": sorted(dead)},
+                                 sync=False)
+
+    def _attempt_tier(self, tier_idx: int, ys, starts, thetas, H: int):
+        """One tier's solve with retry-with-exponential-backoff for
+        transient failures (device hiccups, preemptions — anything that
+        raises an ``Exception``).  Injected ``SimulatedCrash``es are
+        ``BaseException`` and pass straight through: a crash is not a
+        retryable fault.  Raises the last exception when retries are
+        exhausted."""
         s = self.slo
-        if (s is not None and len(self._tiers) > 1
-                and self.stats.batches % s.probe_every == 0):
-            self._probe(ys[:n], starts[:n], None if thetas is None
-                        else thetas[:n], H)
-        self.stats.batches += 1
+        delay = self.backoff_base_s
+        last_exc: Optional[Exception] = None
+        for attempt in range(self.transient_retries + 1):
+            if attempt:
+                time.sleep(delay)
+                delay *= 2.0
+                self.serving_stats.transient_retries += 1
+            try:
+                chaos.fault_point("pump:run_tier")
+                t_start = time.perf_counter()
+                out = jax.block_until_ready(
+                    self._run_tier(tier_idx, ys, starts, thetas, H))
+                if (s is not None and s.timeout_s is not None
+                        and time.perf_counter() - t_start > s.timeout_s):
+                    self.serving_stats.timeouts += 1
+                return out
+            except Exception as e:
+                last_exc = e
+        raise last_exc
+
+    def _solve_batch(self, ys, starts, thetas, H: int, n: int):
+        """Run the fallback chain over one assembled window.  Returns
+        ``(traj, tier_idx, diags)`` — ``traj is None`` means even the
+        final (digital) tier produced non-finite output, with ``diags``
+        naming what each tier said.  A tier whose attempts all raise
+        transiently falls through to the next tier; the FINAL tier
+        exhausting its retries re-raises (that is infrastructure
+        failure, not a poison request)."""
+        s = self.slo
         first = self._active
         last = (len(self._tiers) - 1 if s is None
                 else min(first + s.max_retries, len(self._tiers) - 1))
-        traj, tier_name = None, self._tiers[first][0]
+        diags = []
         for i in range(first, last + 1):
+            name = self._tiers[i][0]
             if i > first:
                 self.serving_stats.retries += 1
-            t_start = time.perf_counter()
-            out = jax.block_until_ready(
-                self._run_tier(i, ys, starts, thetas, H))
-            if (s is not None and s.timeout_s is not None
-                    and time.perf_counter() - t_start > s.timeout_s):
-                self.serving_stats.timeouts += 1
+            try:
+                out = self._attempt_tier(i, ys, starts, thetas, H)
+            except Exception as e:
+                if i == last:
+                    raise
+                diags.append(f"{name}: raised {type(e).__name__}: {e}")
+                continue
             if bool(jnp.isfinite(out[:n]).all()):
                 if i > first:
                     self.serving_stats.nan_rescues += 1
-                traj, tier_name = out, self._tiers[i][0]
-                break
-        done = []
-        if traj is None:
-            # Even the digital tier returned non-finite values: the
-            # requests themselves are pathological.  Their carried
-            # states stay untouched; count them failed, keep streaming.
-            for req in picked:
-                self.stats.failed += 1
-                self._partial.pop(req.seq, None)
-            return done
+                return out, i, diags
+            diags.append(f"{name}: non-finite output")
+        return None, None, diags
+
+    def _commit_batch(self, picked, ids, traj, starts, n: int, H: int,
+                      tier_idx: int, now: float) -> list:
+        """Apply one solved window: scatter end states into the store,
+        advance step counters, stitch/stream partial trajectories, and
+        re-queue split continuations.  Shared verbatim between the live
+        pump and journal replay — which is what makes replay reproduce
+        the crash-free state transition exactly."""
+        tier_name = self._tiers[tier_idx][0]
         traj_h = np.asarray(traj[:n], np.float32)
         served = [min(r.remaining, H) for r in picked]
         end_states = traj[jnp.arange(n), jnp.asarray(served)]
         self.store.commit(ids, end_states,
                           starts[:n] + np.asarray(served))
-        self.stats.twin_steps += int(sum(served))
-        self.stats.padded_steps += int(self.max_batch * H - sum(served))
+        chaos.kill_point("pump:post_commit")
+        self.stream_stats.twin_steps += int(sum(served))
+        self.stream_stats.padded_steps += int(
+            self.max_batch * H - sum(served))
         self.serving_stats.requests += 1
         self.serving_stats.served_by[tier_name] = (
             self.serving_stats.served_by.get(tier_name, 0) + 1)
+        done = []
         for i, req in enumerate(picked):
             h = served[i]
             rows = traj_h[i, : h + 1]
@@ -833,7 +1061,7 @@ class StreamingFleetServer:
             if h < req.remaining:
                 # Long request: re-queue the remainder at the FRONT so
                 # it stays ahead of the twin's later requests.
-                self.stats.splits += 1
+                self.stream_stats.splits += 1
                 self._queue.insert(0, dataclasses.replace(
                     req, remaining=req.remaining - h))
                 continue
@@ -842,18 +1070,323 @@ class StreamingFleetServer:
                 seq=req.seq, twin_id=req.twin_id, trajectory=full,
                 start_step=int(starts[i]) - (req.horizon - h),
                 tier=tier_name, t_arrival=req.t_arrival, t_done=now))
-            self.stats.served += 1
+            self.stream_stats.served += 1
         return done
 
+    def pump(self, now: float = 0.0) -> list:
+        """Assemble and serve ONE batch; returns the list of
+        :class:`Completed` requests it finished (possibly empty — a
+        window that only partially serves long requests completes
+        nothing).  Call repeatedly (``drain``) to empty the queue."""
+        done = self._pump(now)
+        if self._audit:
+            self.store.check_invariants()
+        if self._journal is not None and self.snapshot_every:
+            self._pumps_since_snapshot += 1
+            if self._pumps_since_snapshot >= self.snapshot_every:
+                self.snapshot()
+        return done
+
+    def _pump(self, now: float) -> list:
+        self._expire(now)
+        picked, H = self._assemble()
+        if not picked:
+            if self._journal is not None:
+                self._journal.sync()    # flush any expire records
+            return []
+        ids = [r.twin_id for r in picked]
+        ys, starts, thetas, n = self._fetch_padded(ids)
+        s = self.slo
+        if (s is not None and len(self._tiers) > 1
+                and self.stream_stats.batches % s.probe_every == 0):
+            self._probe(ys[:n], starts[:n], None if thetas is None
+                        else thetas[:n], H)
+        self.stream_stats.batches += 1
+        traj, tier_idx, diags = self._solve_batch(ys, starts, thetas, H, n)
+        chaos.kill_point("pump:pre_commit")
+        if traj is None:
+            # Even the digital tier returned non-finite values: the
+            # requests themselves are poison.  Park them with the
+            # per-tier diagnostic; carried states stay untouched.
+            reason = "; ".join(diags) or "non-finite on every tier"
+            for req in picked:
+                self.stream_stats.quarantined += 1
+                self._partial.pop(req.seq, None)
+                self.quarantine[req.seq] = Quarantined(
+                    seq=req.seq, twin_id=req.twin_id, horizon=req.horizon,
+                    remaining=req.remaining, t_arrival=req.t_arrival,
+                    reason=reason)
+            if self._journal is not None:
+                self._journal.append(
+                    {"t": "quarantine", "seqs": [r.seq for r in picked],
+                     "reason": reason}, sync=False)
+                self._journal.sync()
+            return []
+        done = self._commit_batch(picked, ids, traj, starts, n, H,
+                                  tier_idx, now)
+        if self._journal is not None:
+            self._journal.append(
+                {"t": "commit", "seqs": [r.seq for r in picked],
+                 "tier": tier_idx, "H": H,
+                 "served": [min(r.remaining, H) for r in picked],
+                 "now": now}, sync=False)
+            for c in done:
+                self._journal.append({"t": "complete", "seq": c.seq},
+                                     sync=False)
+            self._journal.sync()
+        return done
+
+    # -- durability: journal, snapshots, crash recovery ----------------------
+    def _config(self) -> dict:
+        """Constructor arguments the journal header pins, so
+        :meth:`recover` rebuilds a server with identical batching/
+        shedding behaviour — replay determinism needs the same
+        scheduler, not just the same records."""
+        return {"dt": self.dt, "t0": self.t0,
+                "hot_capacity": self.store.hot_capacity,
+                "max_batch": self.max_batch,
+                "max_window": self.max_window,
+                "horizon_quantum": self.horizon_quantum,
+                "max_queue": self.max_queue,
+                "shed_policy": self.shed_policy,
+                "transient_retries": self.transient_retries,
+                "backoff_base_s": self.backoff_base_s,
+                "snapshot_every": self.snapshot_every,
+                "snapshot_keep": self.snapshot_keep}
+
+    def _attach_durability(self, serve_dir: str, *, fsync: bool,
+                           resume: bool) -> None:
+        os.makedirs(serve_dir, exist_ok=True)
+        jrnl = journal_lib.Journal(journal_lib.journal_path(serve_dir),
+                                   fsync=fsync)
+        if jrnl.lsn and not resume:
+            jrnl.close()
+            raise ValueError(
+                f"StreamingFleetServer: {serve_dir!r} already holds a "
+                f"journal with {jrnl.lsn} record(s) — use "
+                f"StreamingFleetServer.recover() to resume it (a fresh "
+                f"server writing over live state would fork history)")
+        self._serve_dir = serve_dir
+        self._journal = jrnl
+        if jrnl.lsn == 0:
+            jrnl.append({"t": "config",
+                         "schema": journal_lib.JOURNAL_SCHEMA,
+                         "cfg": self._config()})
+
+    def snapshot(self) -> str:
+        """Atomically publish a full-state snapshot covering every
+        journal record so far: the store (hot slab flushed to host),
+        the queue, in-flight partial trajectories, quarantine, and all
+        counters.  Returns the snapshot path.  Called automatically
+        every ``snapshot_every`` pumps; callable any time."""
+        if self._journal is None:
+            raise RuntimeError(
+                "snapshot: durability is not armed — construct with "
+                "durability_dir=")
+        self._journal.sync()
+        lsn = self._journal.lsn
+        ids, ys, steps, thetas = self.store.export_state()
+        arrays = {"store_ys": ys, "store_steps": steps}
+        if thetas is not None:
+            arrays["store_thetas"] = thetas
+        for seq, blocks in self._partial.items():
+            for i, b in enumerate(blocks):
+                arrays[f"partial/{seq}/{i}"] = np.asarray(b, np.float32)
+        extra = {
+            "ids": list(ids),
+            "seq": self._seq,
+            "active": self._active,
+            "queue": [[r.seq, r.twin_id, r.horizon, r.remaining,
+                       r.t_arrival, r.deadline] for r in self._queue],
+            "partial": {str(s): len(b) for s, b in self._partial.items()},
+            "quarantine": [dataclasses.asdict(q)
+                           for q in self.quarantine.values()],
+            "stream_stats": self.stream_stats.as_dict(),
+            "serving_stats": self.serving_stats.as_dict(),
+            "store_stats": self.store.stats.as_dict(),
+        }
+        path = journal_lib.write_snapshot(self._serve_dir, lsn, arrays,
+                                          extra, keep=self.snapshot_keep)
+        self._pumps_since_snapshot = 0
+        return path
+
+    def _restore_snapshot(self, arrays: dict, extra: dict) -> None:
+        ys, steps = arrays["store_ys"], arrays["store_steps"]
+        thetas = arrays.get("store_thetas")
+        for i, tid in enumerate(extra["ids"]):
+            self.store.register(
+                tid, ys[i], theta=None if thetas is None else thetas[i],
+                step=int(steps[i]))
+        self._seq = int(extra["seq"])
+        self._active = int(extra["active"])
+        self._queue = [
+            StreamRequest(seq=q[0], twin_id=q[1], horizon=q[2],
+                          remaining=q[3], t_arrival=q[4], deadline=q[5])
+            for q in extra["queue"]]
+        self._partial = {
+            int(s): [arrays[f"partial/{s}/{i}"] for i in range(nb)]
+            for s, nb in extra["partial"].items()}
+        self.quarantine = {q["seq"]: Quarantined(**q)
+                           for q in extra["quarantine"]}
+        self.stream_stats = StreamStats(**extra["stream_stats"])
+        self.serving_stats = ServingStats(**extra["serving_stats"])
+        self.store.stats = StoreStats(**extra["store_stats"])
+
+    def _drop_seqs(self, seqs) -> list:
+        want = set(seqs)
+        dropped = [r for r in self._queue if r.seq in want]
+        if len(dropped) != len(want):
+            have = {r.seq for r in dropped}
+            raise ValueError(
+                f"recover: journal references request seq(s) "
+                f"{sorted(want - have)} that are not pending — the "
+                f"journal is inconsistent beyond its torn tail")
+        self._queue = [r for r in self._queue if r.seq not in want]
+        return dropped
+
+    def _replay(self, rec: dict) -> list:
+        """Apply one journal record during recovery.  Decision records
+        (register/submit/shed/expire/quarantine) are applied directly;
+        ``commit`` records are re-EXECUTED through the recorded tier —
+        the determinism contract makes the recompute bitwise-identical
+        to the pre-crash execution.  Returns completions the replayed
+        record (re)produces."""
+        t = rec["t"]
+        if t == "register":
+            theta = None
+            if "theta" in rec:
+                theta = journal_lib.from_json_floats(rec["theta"],
+                                                     rec["tshape"])
+            self.store.register(
+                rec["id"],
+                journal_lib.from_json_floats(rec["y0"],
+                                             (self.store.state_dim,)),
+                theta=theta)
+            return []
+        if t == "submit":
+            self.stream_stats.enqueued += 1
+            self._seq = max(self._seq, rec["seq"] + 1)
+            if rec.get("shed"):
+                self.stream_stats.shed += 1
+                return []
+            self._queue.append(StreamRequest(
+                seq=rec["seq"], twin_id=rec["id"], horizon=rec["h"],
+                remaining=rec["h"], t_arrival=rec["ta"],
+                deadline=rec["dl"]))
+            return []
+        if t == "shed":
+            self._drop_seqs([rec["seq"]])
+            self.stream_stats.shed += 1
+            return []
+        if t == "expire":
+            self._drop_seqs(rec["seqs"])
+            self.stream_stats.expired += len(rec["seqs"])
+            return []
+        if t == "quarantine":
+            for req in self._drop_seqs(rec["seqs"]):
+                self.stream_stats.quarantined += 1
+                self._partial.pop(req.seq, None)
+                self.quarantine[req.seq] = Quarantined(
+                    seq=req.seq, twin_id=req.twin_id,
+                    horizon=req.horizon, remaining=req.remaining,
+                    t_arrival=req.t_arrival, reason=rec["reason"])
+            return []
+        if t == "commit":
+            return self._replay_commit(rec)
+        if t == "complete":
+            return []                   # verified by recover()'s caller
+        raise ValueError(f"recover: unknown journal record type {t!r}")
+
+    def _replay_commit(self, rec: dict) -> list:
+        by_seq = {r.seq: r for r in self._queue}
+        missing = [s for s in rec["seqs"] if s not in by_seq]
+        if missing:
+            raise ValueError(
+                f"recover: commit record references seq(s) {missing} "
+                f"that are not pending — the journal is inconsistent")
+        picked = [by_seq[s] for s in rec["seqs"]]
+        taken = set(rec["seqs"])
+        self._queue = [r for r in self._queue if r.seq not in taken]
+        ids = [r.twin_id for r in picked]
+        ys, starts, thetas, n = self._fetch_padded(ids)
+        H, tier_idx = int(rec["H"]), int(rec["tier"])
+        served = [min(r.remaining, H) for r in picked]
+        if served != [int(x) for x in rec["served"]]:
+            raise ValueError(
+                "recover: replayed window disagrees with the journalled "
+                "served step counts — scheduler state diverged")
+        self.stream_stats.batches += 1
+        traj = jax.block_until_ready(
+            self._run_tier(tier_idx, ys, starts, thetas, H))
+        if not bool(jnp.isfinite(traj[:n]).all()):
+            raise ValueError(
+                "recover: a journalled commit re-executed to non-finite "
+                "output — the substrate changed since the crash")
+        return self._commit_batch(picked, ids, traj, starts, n, H,
+                                  tier_idx, float(rec.get("now", 0.0)))
+
+    @classmethod
+    def recover(cls, serve_dir: str, fleet, params, *,
+                slo: Optional[ServingSLO] = None, fsync: bool = True):
+        """Rebuild a crashed server from its serving directory.
+
+        Loads the newest loadable snapshot (damaged ones are skipped for
+        older siblings — the atomic publish protocol guarantees any
+        published snapshot is internally consistent), replays the
+        journal suffix deterministically through the recorded tiers, and
+        reopens the journal (torn tail truncated) so serving continues
+        appending where the crash left off.
+
+        Returns ``(server, redelivered)``: ``redelivered`` holds the
+        :class:`Completed` results regenerated by replayed commits —
+        results whose original delivery may or may not have reached the
+        caller before the crash (at-least-once delivery; state advance
+        is exactly-once).  The server's store, queue, partials and
+        counters are bitwise-equal (f32) to a crash-free run's.
+        """
+        records, _, _ = journal_lib.read_journal(
+            journal_lib.journal_path(serve_dir))
+        if not records or records[0].get("t") != "config":
+            raise ValueError(
+                f"recover: {serve_dir!r} has no usable journal (missing "
+                f"or torn config header) — nothing to recover")
+        if records[0].get("schema") != journal_lib.JOURNAL_SCHEMA:
+            raise ValueError(
+                f"recover: journal schema {records[0].get('schema')!r} "
+                f"!= supported {journal_lib.JOURNAL_SCHEMA}")
+        server = cls(fleet, params, slo=slo, **records[0]["cfg"])
+        snap = journal_lib.load_latest_snapshot(serve_dir)
+        start = 1                       # past the config header
+        if snap is not None:
+            lsn, arrays, extra = snap
+            server._restore_snapshot(arrays, extra)
+            start = lsn
+        redelivered, completed_seqs = [], set()
+        for rec in records[start:]:
+            out = server._replay(rec)
+            completed_seqs.update(c.seq for c in out)
+            redelivered.extend(out)
+            if rec["t"] == "complete" and rec["seq"] not in completed_seqs:
+                raise ValueError(
+                    f"recover: journal records completion of seq "
+                    f"{rec['seq']} that replay never produced — the "
+                    f"journal is inconsistent beyond its torn tail")
+        server._attach_durability(serve_dir, fsync=fsync, resume=True)
+        return server, redelivered
+
     def drain(self, now: float = 0.0) -> list:
-        """Pump until the queue is empty; returns all completions."""
+        """Pump until the queue is empty; returns all completions.
+        Safe with quarantined requests pending (they are already out of
+        the queue) and immediately after :meth:`recover` (replay leaves
+        the queue exactly as the crash-free schedule would have)."""
         done = []
         while self._queue:
             done.extend(self.pump(now))
         return done
 
     def serve_trace(self, trace, *, y0_of, theta_of=None,
-                    auto_register: bool = True) -> list:
+                    auto_register: bool = True, start: int = 0,
+                    sink: Optional[list] = None) -> list:
         """Replay a recorded arrival trace (see
         :mod:`repro.launch.traffic`) through the streaming loop.
 
@@ -863,16 +1396,31 @@ class StreamingFleetServer:
         fleets) lazily registers first-contact twins.  Returns the
         completions in service order — the deterministic-schedule
         replay the stress tests assert invariants over.
+
+        ``start`` skips the first ``start`` arrivals — the crash-
+        recovery resume idiom: a recovered server already holds every
+        arrival its journal acknowledged, so the caller re-feeds the
+        trace from ``server.stream_stats.enqueued`` onward (an arrival
+        whose submit never reached the journal is simply re-submitted —
+        the client-retry contract).
+
+        ``sink``: optional list that completions are ALSO appended to as
+        they are delivered.  A consumer that may die mid-trace (the
+        chaos harness, any real streaming client) passes one so the
+        completions delivered before the death are not lost to the
+        raised exception — completions already committed to a snapshot
+        are deliberately NOT redelivered by recovery.
         """
-        done = []
-        for arrival in trace:
+        done = [] if sink is None else sink
+        for arrival in trace[start:]:
             if auto_register and arrival.twin_id not in self.store:
                 theta = None if theta_of is None else theta_of(
                     arrival.twin_id)
                 self.register_twin(arrival.twin_id, y0_of(arrival.twin_id),
                                    theta=theta)
             self.submit(arrival.twin_id, arrival.horizon,
-                        t_arrival=arrival.time)
+                        t_arrival=arrival.time,
+                        deadline=getattr(arrival, "deadline", None))
             if self.pending >= self.max_batch:
                 done.extend(self.pump(now=arrival.time))
         t_end = trace[-1].time if trace else 0.0

@@ -1,0 +1,209 @@
+"""Write-ahead journal + atomic snapshots for the streaming twin server.
+
+`StreamingFleetServer` holds an entire resident population's carried ODE
+state in volatile memory; this module is what survives the process dying
+mid-pump.  Two artifacts per serving directory:
+
+  ``journal.wal``   an append-only log of every externally visible event
+                    (``register`` / ``submit`` / ``shed`` / ``expire`` /
+                    ``quarantine`` / ``commit`` / ``complete``), each
+                    record CRC-framed and fsync'd before the caller is
+                    acknowledged;
+  ``snapshots/``    periodic full-state checkpoints (hot slab flushed to
+                    host, queue/partials/stats serialised) written with
+                    :mod:`repro.train.checkpoint`'s tmp+rename protocol
+                    and manifest schema, so recovery inherits its damage
+                    taxonomy (interrupted write vs corrupt vs truncated)
+                    for free.
+
+Frame format — ``<u32 payload_len LE><u32 crc32 LE><payload>`` with the
+payload a compact-JSON record.  A process death mid-``write`` leaves a
+**torn tail**: a final frame whose length header, CRC or JSON does not
+check out.  The reader stops at the first bad frame and reports the torn
+byte count; :class:`Journal` truncates the tail before reopening for
+append.  This is safe precisely because appends are acknowledged only
+after fsync — every record anyone was ever *told* about is a complete,
+CRC-valid frame, so dropping the tail can only drop work nobody was
+promised.
+
+Recovery = newest loadable snapshot + deterministic replay of the
+journal suffix (``fleet_serving.StreamingFleetServer.recover``).  The
+journal stores *decisions* (which requests, which tier, which window),
+not trajectories: the serving loop's determinism contract — f32(f64(t0 +
+dt·k)) time grids keyed by each twin's global step, analogue read noise
+replayed by absolute step — makes re-executing a recorded decision
+bitwise-identical to the first execution, which is what keeps the
+journal tiny (tens of bytes per request) at ODE-solver throughput.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.launch import chaos
+from repro.train import checkpoint as ckpt_lib
+
+_FRAME = struct.Struct("<II")           # payload length, crc32(payload)
+
+JOURNAL_NAME = "journal.wal"
+SNAPSHOT_DIR = "snapshots"
+
+#: Journal record-stream schema.  The config header pins it; readers
+#: refuse a journal from a different schema instead of mis-replaying.
+JOURNAL_SCHEMA = 1
+
+
+def read_journal(path: str) -> Tuple[List[dict], int, int]:
+    """Scan a journal: ``(records, valid_bytes, torn_bytes)``.
+
+    Decodes frames until the first damaged one (short header, short
+    payload, CRC mismatch, or invalid JSON) and treats everything from
+    there on as the torn tail of an interrupted append.  A missing file
+    is an empty journal, not an error.
+    """
+    if not os.path.exists(path):
+        return [], 0, 0
+    with open(path, "rb") as f:
+        data = f.read()
+    records: List[dict] = []
+    off = 0
+    while off + _FRAME.size <= len(data):
+        length, crc = _FRAME.unpack_from(data, off)
+        start = off + _FRAME.size
+        payload = data[start:start + length]
+        if len(payload) < length or zlib.crc32(payload) != crc:
+            break
+        try:
+            rec = json.loads(payload.decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError):
+            break
+        records.append(rec)
+        off = start + length
+    return records, off, len(data) - off
+
+
+class Journal:
+    """Append-only CRC-framed record log with fsync durability.
+
+    Opening an existing journal truncates any torn tail and resumes
+    appending after the last valid record; ``lsn`` is the count of valid
+    records (== the index the next append receives).  ``fsync=False``
+    trades durability for latency (the recovery benchmark measures the
+    gap); ``append(..., sync=False)`` + one :meth:`sync` is the group-
+    commit pattern the pump uses for its record bursts.
+    """
+
+    def __init__(self, path: str, *, fsync: bool = True):
+        self.path = path
+        self.fsync = bool(fsync)
+        self.records, valid, torn = read_journal(path)
+        self.torn_bytes_dropped = torn
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "ab")
+        if torn:
+            self._f.truncate(valid)
+        self.lsn = len(self.records)
+
+    def append(self, rec: dict, *, sync: Optional[bool] = None) -> int:
+        """Durably append one record; returns its lsn."""
+        payload = json.dumps(rec, separators=(",", ":")).encode("utf-8")
+        frame = _FRAME.pack(len(payload), zlib.crc32(payload)) + payload
+
+        def torn_write():
+            # the damage a mid-write death leaves: half a frame, flushed
+            self._f.write(frame[: _FRAME.size + max(1, len(payload) // 2)])
+            self._f.flush()
+            os.fsync(self._f.fileno())
+
+        chaos.kill_point("journal:torn_append", torn_write)
+        self._f.write(frame)
+        self._f.flush()
+        if self.fsync if sync is None else sync:
+            os.fsync(self._f.fileno())
+        self.records.append(rec)
+        self.lsn += 1
+        return self.lsn - 1
+
+    def sync(self) -> None:
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self.sync()
+            self._f.close()
+
+    @property
+    def nbytes(self) -> int:
+        return self._f.tell()
+
+
+# ---------------------------------------------------------------------------
+# Snapshots: full-state checkpoints on the journal's lsn axis
+# ---------------------------------------------------------------------------
+
+def write_snapshot(serve_dir: str, lsn: int, arrays: Dict[str, np.ndarray],
+                   extra: dict, *, keep: int = 3) -> str:
+    """Atomically publish a snapshot covering journal records [0, lsn).
+
+    Reuses :func:`repro.train.checkpoint.save` verbatim — tmp dir +
+    fsync'd arrays + manifest + ``os.replace`` — with the journal lsn as
+    the checkpoint "step", so snapshot ordering, retention and the
+    damage taxonomy are the train checkpointer's.  ``extra`` carries the
+    host-side server state (queue, partials, stats) inside the manifest.
+    """
+    snap_dir = os.path.join(serve_dir, SNAPSHOT_DIR)
+    os.makedirs(snap_dir, exist_ok=True)
+    return ckpt_lib.save(snap_dir, lsn, dict(arrays), keep=keep,
+                         extra=extra)
+
+
+def load_latest_snapshot(serve_dir: str
+                         ) -> Optional[Tuple[int, Dict[str, np.ndarray],
+                                             dict]]:
+    """Newest *loadable* snapshot as ``(lsn, arrays, extra)``.
+
+    Snapshots are tried newest-first; a damaged one (interrupted write,
+    corrupt manifest, truncated arrays) is skipped with the next-older
+    tried instead — the atomic publish protocol means damage can only
+    be environmental, and an older consistent snapshot plus a longer
+    journal replay is always a correct recovery.  Returns ``None`` when
+    no snapshot directory exists (journal-only recovery); raises only
+    when snapshots exist but none is loadable.
+    """
+    snap_dir = os.path.join(serve_dir, SNAPSHOT_DIR)
+    steps = ckpt_lib.all_steps(snap_dir)
+    if not steps:
+        return None
+    errors = []
+    for lsn in reversed(steps):
+        path = os.path.join(snap_dir, f"step_{lsn:010d}")
+        try:
+            arrays, manifest = ckpt_lib.load_arrays(path)
+        except (FileNotFoundError, ValueError) as e:
+            errors.append(f"{path}: {e}")
+            continue
+        return lsn, arrays, manifest.get("extra", {})
+    raise ValueError(
+        "every snapshot under {!r} is damaged:\n  {}".format(
+            snap_dir, "\n  ".join(errors)))
+
+
+def journal_path(serve_dir: str) -> str:
+    return os.path.join(serve_dir, JOURNAL_NAME)
+
+
+def json_floats(x) -> list:
+    """Lossless f32 -> JSON: Python floats (f64) round-trip any float32
+    exactly, so journalled initial conditions replay bitwise."""
+    return [float(v) for v in np.asarray(x, np.float32).reshape(-1)]
+
+
+def from_json_floats(vals, shape) -> np.ndarray:
+    return np.asarray(vals, np.float32).reshape(shape)

@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch import chaos
+
 TwinId = Any
 
 
@@ -112,6 +114,7 @@ class TwinStateStore:
         """Page the least-recently-used unpinned hot twin to host and
         return its freed slot.  The device row is copied out BEFORE the
         slot is handed over — eviction moves state, never loses it."""
+        chaos.kill_point("store:evict")
         for twin_id in self._slot_of:          # iteration order = LRU
             if twin_id not in pinned:
                 slot = self._slot_of.pop(twin_id)
@@ -194,6 +197,23 @@ class TwinStateStore:
         self.stats.commits += 1
 
     # -- inspection (tests, checkpointing) ----------------------------------
+    def export_state(self):
+        """Flush the whole population to host for a snapshot:
+        ``(ids, ys, steps, thetas)`` in registration order, with hot
+        rows read out of the device slab (LRU order untouched).
+        ``thetas`` is ``None`` for undriven populations, else a stacked
+        (N, ...) float32 array."""
+        ids = list(self._step)
+        if not ids:
+            return ids, np.zeros((0, self.state_dim), np.float32), \
+                np.zeros((0,), np.int64), None
+        ys = np.stack([self.peek(i)[0] for i in ids])
+        steps = np.asarray([self._step[i] for i in ids], np.int64)
+        th = [self._theta[i] for i in ids]
+        thetas = None if all(t is None for t in th) else \
+            np.stack(th).astype(np.float32)
+        return ids, ys, steps, thetas
+
     def peek(self, twin_id: TwinId):
         """Read one twin's ``(y, step)`` without touching LRU order."""
         if twin_id not in self:

@@ -26,7 +26,7 @@ Shapes of traffic:
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -34,15 +34,20 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class Arrival:
     """One streaming request: advance ``twin_id`` by ``horizon`` RK4
-    steps, arriving at virtual time ``time`` (seconds)."""
+    steps, arriving at virtual time ``time`` (seconds).  ``deadline``
+    (same clock) is the latest the request may still be *started*;
+    ``None`` means no deadline — the admission-control path ignores
+    it."""
     time: float
     twin_id: int
     horizon: int
+    deadline: Optional[float] = None
 
 
-def _emit(times, twins, horizons) -> List[Arrival]:
+def _emit(times, twins, horizons, deadlines=None) -> List[Arrival]:
     order = np.argsort(times, kind="stable")
-    return [Arrival(float(times[i]), int(twins[i]), int(horizons[i]))
+    return [Arrival(float(times[i]), int(twins[i]), int(horizons[i]),
+                    None if deadlines is None else float(deadlines[i]))
             for i in order]
 
 
@@ -116,6 +121,25 @@ def ragged_trace(seed: int, n_requests: int, *, rate_hz: float = 200.0,
     return _emit(times, twins, horizons)
 
 
+def deadline_trace(seed: int, n_requests: int, *, rate_hz: float = 200.0,
+                   population: int = 64, min_horizon: int = 4,
+                   max_horizon: int = 32, slack_s: float = 0.5,
+                   tight_fraction: float = 0.25) -> List[Arrival]:
+    """Poisson arrivals where every request carries a deadline: most get
+    ``slack_s`` of headroom (comfortably served), but a
+    ``tight_fraction`` get essentially zero slack — they expire the
+    moment any later arrival's pump looks at them.  The admission-
+    control trace: a correct server sheds exactly the stale ones and
+    accounts for every seq once."""
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / rate_hz, size=n_requests))
+    twins = rng.integers(0, population, size=n_requests)
+    horizons = rng.integers(min_horizon, max_horizon + 1, size=n_requests)
+    tight = rng.random(n_requests) < tight_fraction
+    deadlines = times + np.where(tight, 1e-9, slack_s)
+    return _emit(times, twins, horizons, deadlines)
+
+
 #: name -> generator, for CLI/benchmark selection.
 TRACES = {
     "poisson": poisson_trace,
@@ -123,6 +147,7 @@ TRACES = {
     "all_cold": all_cold_trace,
     "hot_loop": hot_loop_trace,
     "ragged": ragged_trace,
+    "deadline": deadline_trace,
 }
 
 

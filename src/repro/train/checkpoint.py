@@ -53,14 +53,19 @@ def _flatten(tree: Pytree):
 
 
 def save(ckpt_dir: str, step: int, tree: Pytree, *, keep: int = 3,
-         blocking: bool = True) -> str:
-    """Atomically persist a pytree; returns the final directory path."""
+         blocking: bool = True, extra: Optional[dict] = None) -> str:
+    """Atomically persist a pytree; returns the final directory path.
+
+    ``extra``: optional JSON-serialisable payload stored inside the
+    manifest (the serving snapshots keep their queue/stat state here —
+    it rides the same atomic publish as the arrays)."""
     named, _ = _flatten(tree)
     host = [(n, np.asarray(jax.device_get(x))) for n, x in named]
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = final + f".tmp{os.getpid()}_{next(_TMP_COUNTER)}"
 
     def write():
+        from repro.launch import chaos
         os.makedirs(tmp, exist_ok=True)
         manifest = {}
         for i, (name, arr) in enumerate(host):
@@ -68,9 +73,12 @@ def save(ckpt_dir: str, step: int, tree: Pytree, *, keep: int = 3,
             np.save(os.path.join(tmp, fname), arr)
             manifest[name] = {"file": fname, "dtype": str(arr.dtype),
                               "shape": list(arr.shape)}
+        body = {"schema": SCHEMA_VERSION, "step": step, "leaves": manifest}
+        if extra is not None:
+            body["extra"] = extra
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"schema": SCHEMA_VERSION, "step": step,
-                       "leaves": manifest}, f)
+            json.dump(body, f)
+        chaos.kill_point("snapshot:pre_rename")
         try:
             os.replace(tmp, final)      # atomic publish
         except OSError:
@@ -135,9 +143,18 @@ def _apply_retention(ckpt_dir: str, keep: int):
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and ".tmp" not in d]
+    steps = all_steps(ckpt_dir)
     return max(steps) if steps else None
+
+
+def all_steps(ckpt_dir: str) -> list:
+    """Every published checkpoint step under ``ckpt_dir``, ascending.
+    In-flight ``.tmp`` writes (interrupted or concurrent) are excluded —
+    only atomically renamed directories count as checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_") and ".tmp" not in d)
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +195,7 @@ def load_twin(ckpt_dir: str, params_template: Pytree, *,
                    shardings=wrapped_sh)["params"]
 
 
-def _read_manifest(path: str) -> dict:
+def read_manifest(path: str) -> dict:
     """Load + validate a checkpoint manifest, raising errors that say
     exactly what is wrong with the on-disk state (missing vs truncated
     vs corrupt vs incompatible) instead of a bare ``KeyError``."""
@@ -210,6 +227,44 @@ def _read_manifest(path: str) -> dict:
             f"reader understands schema {SCHEMA_VERSION} — upgrade the "
             f"checkpoint (or the reader) before restoring")
     return manifest
+
+
+_read_manifest = read_manifest          # pre-public-API internal name
+
+
+def load_arrays(path: str):
+    """Blind restore of one checkpoint directory: every leaf the
+    manifest lists, as raw NumPy arrays keyed by leaf name — no
+    template required.  This is the flat-snapshot reader the serving
+    recovery path uses (a snapshot's structure is data, not code).
+
+    Returns ``(arrays, manifest)``; raises the same damage taxonomy as
+    :func:`read_manifest` / :func:`restore` (missing dir, interrupted
+    write, corrupt manifest, truncated or corrupt arrays, shape drift
+    between manifest and file).
+    """
+    manifest = read_manifest(path)
+    arrays = {}
+    for name, meta in manifest["leaves"].items():
+        fpath = os.path.join(path, meta["file"])
+        if not os.path.exists(fpath):
+            raise FileNotFoundError(
+                f"checkpoint {path!r} is truncated: manifest lists "
+                f"{meta['file']!r} for leaf {name!r} but the file is "
+                f"missing")
+        try:
+            arr = np.load(fpath)
+        except (ValueError, OSError) as e:
+            raise ValueError(
+                f"checkpoint array {fpath!r} (leaf {name!r}) is "
+                f"corrupt: {e}") from e
+        if list(arr.shape) != list(meta["shape"]):
+            raise ValueError(
+                f"{name}: array shape {list(arr.shape)} != manifest "
+                f"shape {meta['shape']} — the checkpoint is internally "
+                f"inconsistent")
+        arrays[name] = arr
+    return arrays, manifest
 
 
 def restore(ckpt_dir: str, step: int, target: Pytree,

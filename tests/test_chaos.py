@@ -1,0 +1,365 @@
+"""Crash-safety: the journal/snapshot recovery path under injected
+process deaths at every kill point, on every substrate tier.
+
+The load-bearing claim (docs/robustness.md): kill the serving process at
+ANY instrumented point — mid-pump, mid-scatter, mid-eviction,
+mid-snapshot publish, mid-journal-append — and
+``StreamingFleetServer.recover`` + re-feeding the unsubmitted trace
+suffix produces carried states and completion sets **bitwise equal**
+(f32) to a run that never crashed.  The determinism contract makes this
+provable: every time value and every analogue read-noise draw is keyed
+by the twin's *global* step, so replayed windows recompute the crash-free
+arithmetic exactly regardless of how batches re-form after recovery.
+
+The kill-point x tier matrix tests carry "matrix" in their names so the
+CI chaos-smoke step can select them (``-k "matrix and fused_f32"``).
+"""
+import functools
+import os
+import struct
+
+import jax
+import numpy as np
+import pytest
+
+import traffic
+from repro.core.analogue import AnalogueSpec
+from repro.core.backends import (DigitalBackend, FusedAnalogueBackend,
+                                 FusedPallasBackend)
+from repro.core.twin import TwinFleet, make_autonomous_twin
+from repro.launch import chaos
+from repro.launch import journal as journal_lib
+from repro.launch.fleet_serving import StreamingFleetServer
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+DT = 0.01
+DIM = 3
+
+TIERS = {
+    "digital": lambda: DigitalBackend(),
+    "fused_f32": lambda: FusedPallasBackend(precision="f32"),
+    "analogue_fused": lambda: FusedAnalogueBackend(
+        spec=AnalogueSpec(read_noise=0.02),
+        prog_key=jax.random.PRNGKey(7)),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet(tier: str):
+    twin = make_autonomous_twin(state_dim=DIM, hidden=8, n_hidden_layers=1,
+                                backend=TIERS[tier]())
+    params = twin.init(jax.random.PRNGKey(0))
+    return TwinFleet(twin=twin), params
+
+
+def _y0_of(tid):
+    return (np.random.default_rng(100 + tid).normal(size=DIM)
+            .astype(np.float32) * 0.1)
+
+
+_KW = dict(dt=DT, hot_capacity=4, max_batch=4, max_window=8,
+           horizon_quantum=4)
+
+
+def _trace(seed=0, n=16):
+    return traffic.poisson_trace(seed, n, population=6, max_horizon=10)
+
+
+@functools.lru_cache(maxsize=None)
+def _reference(tier: str, seed: int = 0, n: int = 16):
+    """Crash-free run: per-twin (state, step) + completion seq set."""
+    fleet, params = _fleet(tier)
+    server = StreamingFleetServer(fleet, params, **_KW)
+    done = server.serve_trace(_trace(seed, n), y0_of=_y0_of)
+    ids, _, _, _ = server.store.export_state()
+    states = {tid: server.store.peek(tid) for tid in ids}
+    return server, done, states
+
+
+def _crash_recover_cycle(tier, kill, hit, tmp_path, seed=0, n=16,
+                         snapshot_every=3):
+    """Run the trace with ``kill`` armed; on crash, recover + resume.
+    Returns (recovered_server, all_completions) — or (None, None) if the
+    kill point never fired on this schedule (caller decides if that's
+    acceptable)."""
+    fleet, params = _fleet(tier)
+    trace = _trace(seed, n)
+    d = str(tmp_path)
+    live = StreamingFleetServer(fleet, params, durability_dir=d,
+                                snapshot_every=snapshot_every, **_KW)
+    delivered = []           # completions the "client" received pre-crash
+    fired = False
+    try:
+        with chaos.crash_at(kill, hit=hit):
+            live.serve_trace(trace, y0_of=_y0_of, sink=delivered)
+    except chaos.SimulatedCrash:
+        fired = True
+    if not fired:
+        return None, None
+    rec, redelivered = StreamingFleetServer.recover(d, fleet, params)
+    resumed = rec.serve_trace(trace, y0_of=_y0_of,
+                              start=rec.stream_stats.enqueued)
+    # at-least-once delivery: redelivered may overlap what the client
+    # already saw (commits after the last snapshot, before the crash)
+    return rec, delivered + list(redelivered) + list(resumed)
+
+
+def _assert_parity(tier, rec, got, seed=0, n=16):
+    _, ref_done, ref_states = _reference(tier, seed, n)
+    assert {c.seq for c in got} == {c.seq for c in ref_done}, \
+        "completion sets differ after recovery"
+    for tid, (y_ref, s_ref) in ref_states.items():
+        y_rec, s_rec = rec.store.peek(tid)
+        assert s_rec == s_ref, \
+            f"twin {tid}: step {s_rec} != crash-free {s_ref}"
+        np.testing.assert_array_equal(
+            y_rec, y_ref,
+            err_msg=f"twin {tid}: state not bitwise-equal after recovery")
+    ref_traj = {c.seq: c.trajectory
+                for c in sorted(ref_done, key=lambda c: c.seq)}
+    for c in got:
+        np.testing.assert_array_equal(
+            c.trajectory, ref_traj[c.seq],
+            err_msg=f"seq {c.seq}: redelivered trajectory differs")
+    traffic.check_conservation(rec)
+
+
+# ---------------------------------------------------------------------------
+# The kill-point x tier matrix (CI selects these via -k "matrix")
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kill,hit", [
+    ("pump:pre_commit", 2),
+    ("pump:post_commit", 2),
+    ("store:evict", 1),
+    ("snapshot:pre_rename", 1),
+    ("journal:torn_append", 5),
+])
+@pytest.mark.parametrize("tier", sorted(TIERS))
+def test_chaos_matrix_recovery_parity(tier, kill, hit, tmp_path):
+    """Crash at every kill point on every substrate tier: recovery +
+    resume must be bitwise-equal (f32) to the crash-free run — states,
+    steps, trajectories, and the exact completion set."""
+    rec, got = _crash_recover_cycle(tier, kill, hit, tmp_path)
+    assert rec is not None, \
+        f"kill point {kill!r} (hit={hit}) never fired on this schedule"
+    _assert_parity(tier, rec, got)
+
+
+def test_chaos_matrix_seeded_random_points(tmp_path):
+    """Seeded pseudo-random (kill, hit, trace-seed) draws — the
+    always-run stand-in for the hypothesis property below."""
+    rng = np.random.default_rng(42)
+    kills = ["pump:pre_commit", "pump:post_commit", "journal:torn_append"]
+    for i in range(4):
+        kill = kills[int(rng.integers(len(kills)))]
+        hit = int(rng.integers(1, 6))
+        seed = int(rng.integers(100))
+        d = tmp_path / f"case{i}"
+        rec, got = _crash_recover_cycle("fused_f32", kill, hit, d,
+                                        seed=seed)
+        if rec is None:
+            continue                 # hit too deep for this schedule
+        _assert_parity("fused_f32", rec, got, seed=seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(data=st.data())
+    @settings(max_examples=8, deadline=None)
+    def test_chaos_property_any_crash_recovers(data, tmp_path_factory):
+        kill = data.draw(st.sampled_from(list(chaos.KILL_POINTS)))
+        hit = data.draw(st.integers(1, 8))
+        seed = data.draw(st.integers(0, 50))
+        d = tmp_path_factory.mktemp("chaos")
+        rec, got = _crash_recover_cycle("fused_f32", kill, hit, d,
+                                        seed=seed)
+        if rec is None:
+            return                   # kill never fired: vacuously safe
+        _assert_parity("fused_f32", rec, got, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Journal mechanics
+# ---------------------------------------------------------------------------
+
+def test_journal_round_trip(tmp_path):
+    p = tmp_path / "journal.wal"
+    j = journal_lib.Journal(p)
+    recs = [{"t": "submit", "seq": i, "id": i % 3, "h": 4,
+             "ta": 0.1 * i, "dl": None} for i in range(7)]
+    for r in recs:
+        j.append(r)
+    j.close()
+    back, valid, torn = journal_lib.read_journal(p)
+    assert back == recs and torn == 0
+    assert valid == os.path.getsize(p)
+
+
+def test_journal_torn_tail_truncated_on_reopen(tmp_path):
+    """A partial trailing frame (mid-write death) is invisible to the
+    reader and physically truncated on reopen; appends then continue."""
+    p = tmp_path / "journal.wal"
+    j = journal_lib.Journal(p)
+    j.append({"t": "submit", "seq": 0})
+    j.append({"t": "commit", "seqs": [0]})
+    j.close()
+    whole = os.path.getsize(p)
+    with open(p, "ab") as f:                # torn half-frame on the tail
+        f.write(struct.pack("<II", 999, 12345) + b'{"t":"sub')
+    back, valid, torn = journal_lib.read_journal(p)
+    assert len(back) == 2 and valid == whole and torn > 0
+    j2 = journal_lib.Journal(p)
+    assert j2.torn_bytes_dropped == torn
+    assert os.path.getsize(p) == whole      # tail physically removed
+    j2.append({"t": "submit", "seq": 1})
+    j2.close()
+    back2, _, torn2 = journal_lib.read_journal(p)
+    assert [r["t"] for r in back2] == ["submit", "commit", "submit"]
+    assert torn2 == 0
+
+
+def test_journal_crc_stops_at_corruption(tmp_path):
+    """A flipped byte mid-file fails that frame's CRC: every record
+    before it is served, everything after is dropped (the suffix cannot
+    be trusted once framing is lost)."""
+    p = tmp_path / "journal.wal"
+    j = journal_lib.Journal(p)
+    for i in range(5):
+        j.append({"t": "submit", "seq": i})
+    j.close()
+    # find the byte offset of record 2 and flip one payload byte
+    _, _, _ = journal_lib.read_journal(p)
+    raw = bytearray(p.read_bytes())
+    off = 0
+    for _ in range(2):
+        ln = struct.unpack_from("<I", raw, off)[0]
+        off += 8 + ln
+    raw[off + 8] ^= 0xFF
+    p.write_bytes(bytes(raw))
+    back, valid, torn = journal_lib.read_journal(p)
+    assert [r["seq"] for r in back] == [0, 1]
+    assert valid == off and torn == len(raw) - off
+
+
+def test_journal_config_header_written_once(tmp_path):
+    fleet, params = _fleet("fused_f32")
+    d = str(tmp_path)
+    server = StreamingFleetServer(fleet, params, durability_dir=d, **_KW)
+    server.register_twin(0, np.zeros(DIM, np.float32))
+    server._journal.close()
+    recs, _, _ = journal_lib.read_journal(journal_lib.journal_path(d))
+    assert recs[0]["t"] == "config" and recs[0]["schema"] == 1
+    assert recs[0]["cfg"]["max_batch"] == _KW["max_batch"]
+    assert recs[1]["t"] == "register"
+
+
+def test_recover_refuses_fresh_server_on_history(tmp_path):
+    """Constructing a FRESH server on a directory with journal history
+    would fork that history — it must refuse and point at recover()."""
+    fleet, params = _fleet("fused_f32")
+    d = str(tmp_path)
+    server = StreamingFleetServer(fleet, params, durability_dir=d, **_KW)
+    server.register_twin(0, np.zeros(DIM, np.float32))
+    server.submit(0, 4)
+    server.drain()
+    with pytest.raises(ValueError, match="recover"):
+        StreamingFleetServer(fleet, params, durability_dir=d, **_KW)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot atomicity
+# ---------------------------------------------------------------------------
+
+def test_snapshot_crash_before_rename_publishes_nothing(tmp_path):
+    """A death after the snapshot tmp dir is fully written but before
+    the atomic rename leaves NO published snapshot — recovery falls back
+    to pure journal replay and still reaches parity."""
+    fleet, params = _fleet("fused_f32")
+    d = str(tmp_path)
+    trace = _trace()
+    live = StreamingFleetServer(fleet, params, durability_dir=d,
+                                snapshot_every=3, **_KW)
+    with pytest.raises(chaos.SimulatedCrash):
+        with chaos.crash_at("snapshot:pre_rename"):
+            live.serve_trace(trace, y0_of=_y0_of)
+    assert journal_lib.load_latest_snapshot(d) is None
+    rec, redelivered = StreamingFleetServer.recover(d, fleet, params)
+    resumed = rec.serve_trace(trace, y0_of=_y0_of,
+                              start=rec.stream_stats.enqueued)
+    _assert_parity("fused_f32", rec, list(redelivered) + list(resumed))
+
+
+def test_snapshot_damaged_newest_falls_back_to_older(tmp_path):
+    """A corrupted newest snapshot is skipped: recovery loads the older
+    valid one, replays the longer journal suffix, and still reaches
+    bitwise parity."""
+    fleet, params = _fleet("fused_f32")
+    d = str(tmp_path)
+    trace = _trace()
+    live = StreamingFleetServer(fleet, params, durability_dir=d,
+                                snapshot_every=2, **_KW)
+    done = live.serve_trace(trace, y0_of=_y0_of)
+    snap_root = os.path.join(d, journal_lib.SNAPSHOT_DIR)
+    steps = sorted(int(s.split("_")[1]) for s in os.listdir(snap_root)
+                   if s.startswith("step_") and ".tmp" not in s)
+    assert len(steps) >= 2, "schedule produced fewer than 2 snapshots"
+    newest = os.path.join(snap_root, f"step_{steps[-1]:010d}")
+    arrs = [f for f in os.listdir(newest) if f.endswith(".npy")]
+    with open(os.path.join(newest, arrs[0]), "r+b") as f:
+        f.write(b"\x00" * 64)                       # corrupt arrays blob
+    lsn, _, _ = journal_lib.load_latest_snapshot(d)
+    assert lsn == steps[-2], "damaged newest snapshot was not skipped"
+    rec, redelivered = StreamingFleetServer.recover(d, fleet, params)
+    _assert_parity("fused_f32", rec, done + list(redelivered))
+
+
+def test_recover_after_clean_run_is_parity(tmp_path):
+    """Recovery is not crash-only: recovering a cleanly-finished
+    directory reproduces the final state exactly and a further drain
+    serves nothing."""
+    fleet, params = _fleet("fused_f32")
+    d = str(tmp_path)
+    trace = _trace()
+    live = StreamingFleetServer(fleet, params, durability_dir=d,
+                                snapshot_every=4, **_KW)
+    done = live.serve_trace(trace, y0_of=_y0_of)
+    rec, redelivered = StreamingFleetServer.recover(d, fleet, params)
+    _assert_parity("fused_f32", rec, done + list(redelivered))
+    assert rec.drain() == [] and rec.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# Chaos harness hygiene
+# ---------------------------------------------------------------------------
+
+def test_chaos_unknown_kill_point_rejected():
+    with pytest.raises(ValueError, match="unknown kill point"):
+        with chaos.crash_at("pump:typo"):
+            pass
+    with pytest.raises(ValueError, match="hit"):
+        with chaos.crash_at("pump:pre_commit", hit=0):
+            pass
+    with pytest.raises(ValueError, match="times"):
+        with chaos.flaky("x", times=0):
+            pass
+
+
+def test_chaos_disarms_after_fire_and_on_exit():
+    fired = []
+    try:
+        with chaos.crash_at("store:evict"):
+            chaos.kill_point("store:evict")
+    except chaos.SimulatedCrash:
+        fired.append(True)
+    assert fired
+    chaos.kill_point("store:evict")          # disarmed: must not raise
+    with chaos.crash_at("store:evict", hit=3):
+        chaos.kill_point("store:evict")
+        chaos.kill_point("store:evict")      # hits 1, 2: survive
+    chaos.kill_point("store:evict")          # exited: disarmed
+    assert chaos.SimulatedCrash.__bases__ == (BaseException,)

@@ -6,7 +6,9 @@ for the test suite and adds the *invariant checkers* the stress tests
 run after every replayed schedule:
 
   * no request is dropped         (every submitted seq completes or is
-                                   counted failed)
+                                   counted in an explicit terminal
+                                   bucket: failed/shed/expired/
+                                   quarantined)
   * per-twin arrival order holds  (a twin's completions carry strictly
                                    increasing seqs and consume horizons
                                    in submission order)
@@ -14,30 +16,36 @@ run after every replayed schedule:
                                    steps actually served to it, its
                                    state is finite, and the store's
                                    structural audit passes)
-  * stats conservation            (enqueued == served + failed + pending)
+  * stats conservation            (enqueued == served + failed + shed +
+                                   expired + quarantined + pending —
+                                   every seq in exactly ONE bucket)
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.launch.traffic import (Arrival, TRACES, all_cold_trace,  # noqa: F401
-                                  bursty_trace, hot_loop_trace,
-                                  poisson_trace, population_of,
-                                  ragged_trace)
+                                  bursty_trace, deadline_trace,
+                                  hot_loop_trace, poisson_trace,
+                                  population_of, ragged_trace)
 
 __all__ = [
     "Arrival", "TRACES", "all_cold_trace", "bursty_trace",
-    "hot_loop_trace", "poisson_trace", "population_of", "ragged_trace",
+    "deadline_trace", "hot_loop_trace", "poisson_trace",
+    "population_of", "ragged_trace",
     "check_no_drops", "check_arrival_order", "check_conservation",
     "check_state_safety", "check_all",
 ]
 
 
 def check_no_drops(server, trace, done) -> None:
-    """Every arrival was served exactly once (failures must be explicit:
-    this checker is for healthy schedules where nothing may fail)."""
-    assert server.stats.failed == 0, \
-        f"{server.stats.failed} requests failed on a healthy schedule"
+    """Every arrival was served exactly once (losses must be explicit:
+    this checker is for healthy schedules where nothing may fail, shed,
+    expire or quarantine)."""
+    s = server.stats().stream
+    for leg in ("failed", "shed", "expired", "quarantined"):
+        assert getattr(s, leg) == 0, \
+            f"{getattr(s, leg)} requests {leg} on a healthy schedule"
     assert server.pending == 0, f"{server.pending} requests still queued"
     assert len(done) == len(trace), \
         f"{len(trace)} arrivals but {len(done)} completions"
@@ -56,12 +64,29 @@ def check_arrival_order(done) -> None:
             f"twin {twin_id!r} served out of arrival order: {seqs}"
 
 
-def check_conservation(server) -> None:
-    """enqueued == served + failed + pending, and the per-batch step
-    accounting is consistent with the padded-work counter."""
-    s = server.stats
-    assert s.enqueued == s.served + s.failed + server.pending, \
-        f"conservation violated: {s.as_dict()}, pending={server.pending}"
+def check_conservation(server, done=None) -> None:
+    """Every submitted request lands in exactly one terminal bucket:
+    ``enqueued == served + failed + shed + expired + quarantined +
+    pending``.  With ``done`` given, the completion list is tied to the
+    ``served`` counter and the quarantine ledger to its counter — a
+    request counted twice (e.g. expired AND served) breaks the sum."""
+    s = server.stats().stream
+    total = (s.served + s.failed + s.shed + s.expired + s.quarantined
+             + server.pending)
+    assert s.enqueued == total, \
+        (f"conservation violated: enqueued={s.enqueued} != "
+         f"served+failed+shed+expired+quarantined+pending={total} "
+         f"({s.as_dict()}, pending={server.pending})")
+    assert len(server.quarantine) == s.quarantined, \
+        (f"quarantine ledger has {len(server.quarantine)} entries but "
+         f"counter says {s.quarantined}")
+    if done is not None:
+        assert len(done) == s.served, \
+            f"{len(done)} completions but served counter says {s.served}"
+        seqs = [c.seq for c in done]
+        assert len(set(seqs)) == len(seqs), "a seq completed twice"
+        assert not set(seqs) & set(server.quarantine), \
+            "a seq is both completed and quarantined"
     assert s.twin_steps >= 0 and s.padded_steps >= 0
 
 
@@ -70,15 +95,23 @@ def check_state_safety(server, trace, done) -> None:
     global step counter equals the horizons actually completed for it,
     every carried state is finite, and the store's structural audit
     (tier partition, slot bijection) passes.  Horizons are matched in
-    arrival order, so a reordered or double-served window fails here
-    even if the step totals happen to agree."""
+    arrival order over the completions each twin actually got (shed/
+    expired/quarantined arrivals never advance state, so they are
+    skipped in the matching), so a reordered or double-served window
+    fails here even if the step totals happen to agree."""
     server.store.check_invariants()
-    arrival_h: dict = {}
-    for a in trace:
-        arrival_h.setdefault(a.twin_id, []).append(a.horizon)
+    arrival_h: dict = {}         # per twin: [(seq, horizon), ...]
+    for i, a in enumerate(trace):
+        arrival_h.setdefault(a.twin_id, []).append((i, a.horizon))
     served_steps: dict = {}
     for c in sorted(done, key=lambda c: c.seq):
-        expect = arrival_h[c.twin_id].pop(0)
+        pending = arrival_h[c.twin_id]
+        while pending and pending[0][0] != c.seq:
+            pending.pop(0)       # an arrival that shed/expired/parked
+        assert pending, \
+            (f"twin {c.twin_id!r} seq {c.seq}: completion with no "
+             f"matching arrival (double-served?)")
+        _, expect = pending.pop(0)
         got = c.trajectory.shape[0] - 1
         assert got == expect, \
             (f"twin {c.twin_id!r} seq {c.seq}: served {got} steps, "
@@ -96,5 +129,5 @@ def check_state_safety(server, trace, done) -> None:
 def check_all(server, trace, done) -> None:
     check_no_drops(server, trace, done)
     check_arrival_order(done)
-    check_conservation(server)
+    check_conservation(server, done)
     check_state_safety(server, trace, done)
