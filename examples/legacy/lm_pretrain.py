@@ -6,14 +6,14 @@ Also demonstrates the paper's technique inside the LM stack: pass
 ``--ode-depth 4`` to execute the residual stack as a weight-tied neural
 ODE (continuous depth, RK4).
 
-Run:  PYTHONPATH=src python examples/lm_pretrain.py [--steps 300]
+Run:  PYTHONPATH=src python examples/legacy/lm_pretrain.py [--steps 300]
 """
 import argparse
 import dataclasses
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
 
 def main():
@@ -23,7 +23,7 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
     args = ap.parse_args()
 
-    from repro.launch.train import main as train_main
+    from repro.launch.legacy.train import main as train_main
 
     argv = ["--arch", "qwen3-1.7b", "--smoke",
             "--d-model", "256", "--layers", "4", "--vocab", "4096",
@@ -32,7 +32,7 @@ def main():
             "--ckpt-every", "100", "--log-every", "25"]
     if args.ode_depth:
         # continuous-depth execution: swap the config before the driver
-        import repro.launch.train as t
+        import repro.launch.legacy.train as t
 
         orig = t.build_config
 

@@ -458,3 +458,175 @@ class AnalogueMLPVectorField:
         if self.key is not None and self.spec.read_noise > 0:
             k = _read_key(self.key, t)
         return analogue_mlp_apply(list(self.progs), inp, self.spec, k)
+
+
+# ---------------------------------------------------------------------------
+# Hardware-in-the-loop calibration
+# ---------------------------------------------------------------------------
+#
+# A real array is characterised once (g_on/g_off, level count, noise
+# sigmas, drift law, peripheral power) and the measurements land in a
+# small JSON file; these loaders swap the measured constants into the
+# device model (`spec_from_calibration`), the fault model
+# (`drift_from_calibration`) and the energy projection
+# (`repro.core.energy.constants_from_calibration`) — so the whole stack
+# (training, serving, scorecard) runs against the characterised device
+# instead of the paper's published statistics.  See
+# `calibration/paper_device.json` for the reference file (the paper's
+# Fig. 2 numbers).
+
+CALIBRATION_SCHEMA = 1
+
+#: field name -> (required, constraint) per section; constraints are
+#: "pos" (> 0), "nonneg" (>= 0), "int" (positive integer) or None
+_CALIBRATION_FIELDS = {
+    "device": {
+        "g_off_S": (True, "pos"),
+        "g_on_S": (True, "pos"),
+        "levels": (True, "int"),
+        "prog_noise_sigma": (True, "nonneg"),
+        "read_noise_sigma": (True, "nonneg"),
+        "v_clamp": (False, "pos"),          # null = no clamp
+    },
+    "drift": {
+        "nu": (True, "nonneg"),
+        "tau": (True, "pos"),
+    },
+    "energy": {
+        "t_settle_us": (False, "pos"),
+        "p_base_w": (False, "pos"),
+        "p_int_w": (False, "pos"),
+        "v_read": (False, "pos"),
+        "g_mean_s": (False, "pos"),
+    },
+}
+
+
+def _check_calibration_field(sec: str, key: str, value, constraint):
+    where = f"calibration: {sec}.{key}"
+    if constraint == "int":
+        if isinstance(value, bool) or not isinstance(value, int):
+            raise ValueError(f"{where} must be an integer, got {value!r}")
+        if value < 2:
+            raise ValueError(f"{where} must be >= 2, got {value}")
+        return value
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        raise ValueError(f"{where} must be a number, got {value!r}")
+    v = float(value)
+    if constraint == "pos" and not v > 0:
+        raise ValueError(f"{where} must be > 0, got {value}")
+    if constraint == "nonneg" and v < 0:
+        raise ValueError(f"{where} must be >= 0, got {value}")
+    return v
+
+
+def load_calibration(source) -> dict:
+    """Load + validate a measured device-constants file.
+
+    ``source`` is a path to a JSON measurement file or an already-parsed
+    dict.  Returns the validated dict (numbers coerced to float).  Every
+    validation error names the offending field (``calibration:
+    device.g_on_S must be > 0, got ...``), matching the repo's
+    error-message convention.
+
+    Schema (``"schema": 1``): a required ``device`` section (``g_off_S``,
+    ``g_on_S``, ``levels``, ``prog_noise_sigma``, ``read_noise_sigma``,
+    optional ``v_clamp``), plus optional ``drift`` (``nu``, ``tau``) and
+    ``energy`` (any of ``t_settle_us``, ``p_base_w``, ``p_int_w``,
+    ``v_read``, ``g_mean_s``; missing ones keep the paper-calibrated
+    defaults) sections.  Unknown sections/fields are rejected by name —
+    a typo must not silently fall back to a default.
+    """
+    import json
+    import os
+
+    if isinstance(source, (str, os.PathLike)):
+        with open(source) as fh:
+            try:
+                cal = json.load(fh)
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"calibration file {os.fspath(source)}: invalid JSON "
+                    f"({e})") from e
+    elif isinstance(source, dict):
+        cal = source
+    else:
+        raise TypeError(
+            f"load_calibration takes a path or a dict, got "
+            f"{type(source).__name__}")
+    if not isinstance(cal, dict):
+        raise ValueError("calibration: top level must be a JSON object")
+
+    schema = cal.get("schema")
+    if schema != CALIBRATION_SCHEMA:
+        raise ValueError(
+            f"calibration: schema must be {CALIBRATION_SCHEMA}, "
+            f"got {schema!r}")
+
+    known = set(_CALIBRATION_FIELDS) | {"schema", "source"}
+    for sec in cal:
+        if sec not in known:
+            raise ValueError(f"calibration: unknown section {sec!r}")
+    if "device" not in cal:
+        raise ValueError("calibration: missing required section 'device'")
+
+    out = {"schema": CALIBRATION_SCHEMA}
+    if "source" in cal:
+        out["source"] = str(cal["source"])
+    for sec, fields in _CALIBRATION_FIELDS.items():
+        if sec not in cal:
+            continue
+        raw = cal[sec]
+        if not isinstance(raw, dict):
+            raise ValueError(
+                f"calibration: section {sec!r} must be an object, "
+                f"got {raw!r}")
+        parsed = {}
+        for key in raw:
+            if key not in fields:
+                raise ValueError(
+                    f"calibration: unknown field {sec}.{key}")
+        for key, (required, constraint) in fields.items():
+            if key not in raw or raw[key] is None:
+                if required:
+                    raise ValueError(
+                        f"calibration: missing field {sec}.{key}")
+                continue
+            parsed[key] = _check_calibration_field(
+                sec, key, raw[key], constraint)
+        out[sec] = parsed
+
+    dev = out["device"]
+    if not dev["g_on_S"] > dev["g_off_S"]:
+        raise ValueError(
+            f"calibration: device.g_on_S ({dev['g_on_S']}) must exceed "
+            f"device.g_off_S ({dev['g_off_S']}) — the differential range "
+            f"is the weight-mapping denominator")
+    return out
+
+
+def spec_from_calibration(source, **overrides) -> AnalogueSpec:
+    """Build an :class:`AnalogueSpec` from a measured calibration file.
+
+    ``overrides`` replace individual spec fields after the measured
+    values are applied (e.g. ``read_noise=0.0`` to model a clean read
+    channel on a characterised array).
+    """
+    dev = load_calibration(source)["device"]
+    kw = dict(g_min=dev["g_off_S"], g_max=dev["g_on_S"],
+              levels=dev["levels"],
+              prog_noise=dev["prog_noise_sigma"],
+              read_noise=dev["read_noise_sigma"],
+              v_clamp=dev.get("v_clamp"))
+    kw.update(overrides)
+    return AnalogueSpec(**kw)
+
+
+def drift_from_calibration(source):
+    """The measured drift law as a :class:`repro.core.faults.ConductanceDrift`
+    mechanism (``None`` when the file has no ``drift`` section)."""
+    cal = load_calibration(source)
+    if "drift" not in cal:
+        return None
+    from repro.core.faults import ConductanceDrift
+    return ConductanceDrift(nu=cal["drift"]["nu"], tau=cal["drift"]["tau"])

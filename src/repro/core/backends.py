@@ -620,10 +620,19 @@ class FusedAnalogueBackend(FusedPallasBackend):
     ``jax.random`` stream of :class:`AnalogueBackend` (equal in
     distribution, not bitwise).
 
-    Inference-only: the analogue substrate does not backpropagate (the
-    paper trains digitally, then deploys), so every gradient mode
-    detaches; and always float32 — conductances are physical quantities,
-    the mixed-precision policies do not apply.
+    Serving is inference-only: frozen conductances are physical
+    quantities, so the fused analogue rollout detaches every gradient
+    mode and always runs float32 (the mixed-precision policies do not
+    apply).  ``trainable=True`` arms the *differentiable training mode*:
+    ``program`` additionally stages the float32 master weights, and a
+    non-detached ``_solve`` passes them through the hardware-aware write
+    path (:mod:`repro.train.hw_aware` — STE quantise + programming/read
+    noise + this backend's fault model, keyed by ``read_seed`` and
+    ``step_offset``) before integrating on the fused digital kernel with
+    its reverse-time VJP.  Forward sees device-degraded weights; the
+    gradient reaches the masters through the straight-through estimator.
+    (`train_twin(backend="analogue_fused")` routes through the same
+    transform at the loss level — see ``segment_loss_fn``.)
 
     ``apply`` (single vector-field evaluations) keeps the jnp simulator
     path of the programmed field — only the rollouts are fused.
@@ -637,6 +646,7 @@ class FusedAnalogueBackend(FusedPallasBackend):
     faults: Optional[FaultModel] = None
     verify: Optional[VerifyConfig] = None
     n_reads: int = 0                # reads already served before t0 (drift)
+    trainable: bool = False         # arm the differentiable training mode
 
     # -- deployment --------------------------------------------------------
     def program(self, field: Callable, params: Pytree) -> ExecState:
@@ -687,22 +697,50 @@ class FusedAnalogueBackend(FusedPallasBackend):
         a_field = AnalogueMLPVectorField(
             progs=progs, spec=self.spec,
             drive=getattr(field, "drive", None), key=None)
+        if self.trainable:
+            # training mode keeps the f32 masters alongside the frozen
+            # conductances — the differentiable _solve path reads them
+            staged["weights"] = [p["w"].astype(jnp.float32)
+                                 for p in params]
+            staged["biases"] = [p["b"].astype(jnp.float32)
+                                for p in params]
         return ExecState(field=a_field, params=None, extra=staged)
 
     # -- execution ---------------------------------------------------------
     def _solve(self, state: ExecState, y0s, uh, dt, bt, gradient,
                precision=None, step_offset=0):
-        """Dispatch the fused analogue solve.  ``gradient`` is ignored
-        (always detached — see class docstring) and so is ``precision``
+        """Dispatch the fused analogue solve.  ``precision`` is ignored
         (the substrate is float32).  ``step_offset`` keys the read-noise
         salts and drift exponent to the global step index of ``y0s``, so
         a resumed rollout replays the uninterrupted noise stream — it is
         only exact when the whole batch shares one offset
         (``rollout_batch_resumed`` passes 0 for mixed-phase batches:
         deterministic per batch, equal in distribution, not a bitwise
-        replay)."""
-        del gradient, precision
+        replay).
+
+        Serving (``trainable=False``) always detaches, whatever
+        ``gradient`` says.  With ``trainable=True`` and a non-detached
+        ``gradient``, the solve becomes differentiable: the staged f32
+        masters go through the hardware-aware write path (one device
+        realisation keyed by ``(read_seed, step_offset)``) and the fused
+        digital kernel's reverse-time VJP carries the gradient back to
+        them through the STE."""
+        del precision
         from repro.kernels import ops
+        if self.trainable and gradient != "stopgrad":
+            from repro.train.hw_aware import (HwAwareConfig,
+                                              hw_aware_params)
+            masters = [{"w": w, "b": b}
+                       for w, b in zip(state.extra["weights"],
+                                       state.extra["biases"])]
+            cfg = HwAwareConfig.from_backend(self, k_draws=1)
+            eff = hw_aware_params(masters, cfg, step_offset, draw=0)
+            return ops.fused_node_rollout(
+                eff, y0s, uh, dt, batch_tile=bt,
+                time_chunk=self.time_chunk, interpret=self.interpret,
+                vmem_budget_bytes=self.vmem_budget_bytes,
+                gradient="fused_vjp", precision="f32")
+        del gradient
         return ops.fused_analogue_rollout(
             state.extra, y0s, uh, dt, batch_tile=bt,
             time_chunk=self.time_chunk, interpret=self.interpret,

@@ -24,8 +24,17 @@ Two layers of fidelity:
      17.0 uJ (HP) exactly and the Lorenz96 energy-gain column to <=17%.
 
 Tests assert the model hits every anchor within 20% (most are <6%).
+
+The analogue-side constants are replaceable with measured values
+(hardware in the loop): :class:`EnergyConstants` carries them,
+:func:`constants_from_calibration` loads them from the same JSON
+measurement file as ``repro.core.analogue.spec_from_calibration``, and
+``project(..., constants=...)`` projects with the characterised device
+instead of the paper-calibrated defaults.
 """
 from __future__ import annotations
+
+import dataclasses
 
 # ---------------------------------------------------------------------------
 # Paper-reported anchors (verbatim from the text)
@@ -68,6 +77,43 @@ P_INT_W = 0.134           # per IVP-integrator channel power
 V_READ = 0.1              # V (inference read amplitude, calibrated)
 G_MEAN_S = 30e-6          # mean device conductance incl. parked G_min pairs
 
+@dataclasses.dataclass(frozen=True)
+class EnergyConstants:
+    """The analogue-side constants of the projection model, as one
+    swappable value object.  Defaults are the paper-calibrated numbers
+    above; :func:`constants_from_calibration` fills them from a measured
+    device file instead."""
+
+    t_settle_us: float = T_SETTLE_US
+    p_base_w: float = P_BASE_W
+    p_int_w: float = P_INT_W
+    v_read: float = V_READ
+    g_mean_s: float = G_MEAN_S
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or not v > 0:
+                raise ValueError(
+                    f"EnergyConstants.{f.name} must be a number > 0, "
+                    f"got {v!r}")
+
+
+DEFAULT_CONSTANTS = EnergyConstants()
+
+
+def constants_from_calibration(source) -> EnergyConstants:
+    """Measured :class:`EnergyConstants` from a calibration JSON file (or
+    parsed dict) — the ``energy`` section of the schema validated by
+    :func:`repro.core.analogue.load_calibration`.  Fields absent from the
+    file keep the paper-calibrated defaults; validation errors name the
+    offending field."""
+    from repro.core.analogue import load_calibration
+    cal = load_calibration(source)
+    return EnergyConstants(**cal.get("energy", {}))
+
+
 SYSTEMS = ("analogue_node", "node_gpu", "resnet_gpu", "lstm_gpu", "gru_gpu",
            "rnn_gpu")
 _GATES = {"lstm_gpu": 4.0, "gru_gpu": 3.0, "rnn_gpu": 1.0, "resnet_gpu": 1.0}
@@ -109,19 +155,23 @@ def project_from_macs(system: str, macs: float, hidden: int, n_steps: int):
 
 
 def project(system: str, hidden: int, in_dim: int = 2, out_dim: int = 1,
-            n_layers: int = 3, n_steps: int = 500):
+            n_layers: int = 3, n_steps: int = 500,
+            constants: EnergyConstants | None = None):
     """Project (time_us, energy_uj) for one inference trajectory.
 
     ``n_layers`` counts weight matrices (HP twin: 3; Lorenz96 twin: 4).
     ``n_steps``: trajectory length (HP: 500; Lorenz96 interpolation: 1800).
+    ``constants`` swaps in measured analogue-side constants
+    (:func:`constants_from_calibration`); digital systems ignore it.
     """
     sizes = [in_dim] + [hidden] * (n_layers - 1) + [out_dim]
     if system == "analogue_node":
+        c = DEFAULT_CONSTANTS if constants is None else constants
         # stages = crossbar layers + the IVP-integrator stage
-        t_us = n_steps * (n_layers + 1) * T_SETTLE_US
+        t_us = n_steps * (n_layers + 1) * c.t_settle_us
         cells = 2.0 * _mlp_macs(sizes)
-        p_array_w = cells * V_READ ** 2 * G_MEAN_S
-        p_w = P_BASE_W + P_INT_W * out_dim + p_array_w
+        p_array_w = cells * c.v_read ** 2 * c.g_mean_s
+        p_w = c.p_base_w + c.p_int_w * out_dim + p_array_w
         e_uj = p_w * t_us
         return t_us, e_uj
     if system == "node_gpu":

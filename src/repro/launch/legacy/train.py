@@ -14,7 +14,7 @@ hundred steps" entry point, with the production fault-tolerance loop:
     --xla_tpu_overlap_compute_collective_tc=true
 
 Usage (CPU demo, ~100M model):
-  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+  PYTHONPATH=src python -m repro.launch.legacy.train --arch qwen3-1.7b --smoke \
       --d-model 512 --layers 8 --steps 200
 """
 from __future__ import annotations

@@ -1,0 +1,242 @@
+"""Hardware-aware robust training: pass the weights through the analogue
+write path *inside* the loss, so training optimises the weights the array
+will actually realise.
+
+The paper trains clean digital weights and programs them post-hoc
+(quantise to 6-bit conductance levels, add programming noise, serve under
+read noise).  PR 7 measured what that costs under device imperfection;
+this module closes the loop: during ``fit()`` every loss evaluation sees
+``params`` through the same device model the serving kernels apply —
+
+  fold bias -> differential pair (G+, G-) -> 6-bit quantise ->
+  multiplicative programming noise -> stuck-cell pinning ->
+  drift snapshot -> multiplicative read noise -> back to weight units
+
+— wrapped in a straight-through estimator (STE) so gradients flow as if
+the chain were the identity:
+
+    w_eff = w + stop_gradient(write_path(w) - w)
+
+The forward pass is exactly the degraded weights; the backward pass is
+``dL/dw = dL/dw_eff`` — the standard quantisation-aware-training
+gradient, which needs NO changes to the fused reverse-time VJP kernel
+(``params`` are already differentiable kernel inputs, the device model is
+a weight-space pre-transform).
+
+**Determinism contract.**  Every stochastic perturbation is drawn from
+the counter-derived stream of :mod:`repro.kernels.noise` — the same
+generator the analogue kernels use — keyed by ``(noise_seed,
+global training step, draw index, layer, pair, channel)``.  No
+``jax.random`` key is threaded for the device model, so the scan-compiled
+training engine stays ONE jit, and the same seed gives a
+bitwise-identical loss history (pinned by ``tests/test_hw_aware.py``).
+Salts live in their own block (:data:`HW_SALT_BASE`), disjoint from the
+kernels' read-noise salts (which count up from 0) and from the fault-mask
+block (``FAULT_SALT_BASE = 0x0F00_0000``).
+
+Read noise is a *per-evaluation* phenomenon in the kernels; here each
+draw applies one weight-space realisation per step — the standard
+noise-injection-training surrogate (fresh realisations every step make
+the optimiser see the same perturbation distribution the serving rollout
+integrates over).  The expectation over ``k_draws`` independent
+realisations per step (:func:`expectation_over_draws`) reduces gradient
+variance without leaving the single-jit engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.analogue import (AnalogueSpec, _fold_bias, conductance_pair,
+                                 quantize_conductance)
+from repro.kernels.noise import counter_normal, splitmix32
+
+Pytree = Any
+
+#: Base of the hw-aware training salt block.  The fused kernels' read
+#: noise salts count up from 0 (8 * layers per RK4 step) and the fault
+#: masks start at 0x0F00_0000, so this block sits safely between them
+#: for any realistic (step * k_draws * layers) product.
+HW_SALT_BASE = 0x0A00_0000
+
+
+@dataclasses.dataclass(frozen=True)
+class HwAwareConfig:
+    """Policy object for hardware-aware training (``fit(hw_aware=...)``).
+
+    ``spec`` is the device model trained against (quantisation levels,
+    programming-noise sigma, read-noise sigma — load a measured one with
+    :func:`repro.core.analogue.spec_from_calibration`).  ``read_sigma``
+    overrides ``spec.read_noise`` for training only (train against a
+    harsher read channel than you expect to serve).  ``k_draws``
+    independent device realisations are averaged per step.
+
+    Fault-ensemble sampling (optional): ``faults`` injects the composed
+    device-fault model of :mod:`repro.core.faults` into the write path —
+    stuck cells pinned at G_on/G_off, and (with ``drift_reads > 0``)
+    drift snapshots spread across the draws so the ensemble covers array
+    ages 0..``drift_reads``.  ``fault_ensemble=True`` re-derives the
+    stuck mask per (step, draw) instead of training against one frozen
+    mask — weights become robust to the *distribution* of arrays, not
+    one unlucky array.
+    """
+
+    spec: AnalogueSpec = AnalogueSpec()
+    k_draws: int = 4
+    noise_seed: int = 0
+    read_sigma: Optional[float] = None   # None = spec.read_noise
+    faults: Optional[Any] = None         # FaultModel | None
+    fault_ensemble: bool = False
+    drift_reads: int = 0                 # max array age covered by draws
+
+    def __post_init__(self):
+        if self.k_draws < 1:
+            raise ValueError(
+                f"HwAwareConfig.k_draws must be >= 1, got {self.k_draws}")
+        if self.read_sigma is not None and self.read_sigma < 0:
+            raise ValueError(
+                f"HwAwareConfig.read_sigma must be >= 0, "
+                f"got {self.read_sigma}")
+        if self.drift_reads < 0:
+            raise ValueError(
+                f"HwAwareConfig.drift_reads must be >= 0, "
+                f"got {self.drift_reads}")
+        if self.fault_ensemble and self.faults is None:
+            raise ValueError(
+                "HwAwareConfig.fault_ensemble=True needs a fault model "
+                "(faults=...) to resample from")
+
+    @property
+    def effective_read_sigma(self) -> float:
+        return (self.spec.read_noise if self.read_sigma is None
+                else self.read_sigma)
+
+    @classmethod
+    def from_backend(cls, backend, **overrides) -> "HwAwareConfig":
+        """Derive the training policy from a ``FusedAnalogueBackend`` —
+        train against exactly the substrate that will serve (same spec,
+        same fault model, noise stream keyed by the backend's
+        ``read_seed``)."""
+        kw = dict(spec=backend.spec, noise_seed=int(backend.read_seed),
+                  faults=backend.faults)
+        kw.update(overrides)
+        return cls(**kw)
+
+
+def _hw_salt(cfg: HwAwareConfig, step, draw: int, layer: int,
+             pair: int, channel: int, num_layers: int):
+    """Unique salt per (step, draw, layer, pair, channel); ``step`` may
+    be traced (the scan engine's int32 counter)."""
+    u = jnp.uint32
+    s = jnp.asarray(step, u) * u(cfg.k_draws) + u(draw)
+    s = (s * u(num_layers) + u(layer)) * u(4) + u(2 * pair + channel)
+    return u(HW_SALT_BASE) + s
+
+
+def write_path_tensor(folded: jax.Array, cfg: HwAwareConfig, step,
+                      draw: int, layer: int, num_layers: int) -> jax.Array:
+    """One tensor through the analogue write path (weight units in,
+    weight units out; ``folded`` carries the bias as its last row).
+
+    Mirrors ``program_tensor`` + the fused kernel's read model, with the
+    ``jax.random`` draws replaced by the counter stream:
+    differential-pair map, 6-bit quantise, multiplicative programming
+    noise (clipped to the physical range like ``program_tensor``),
+    stuck-cell pinning, drift snapshot, multiplicative read noise,
+    differential read back to weight units.  Pure function of
+    ``(folded, cfg, step, draw)`` — bitwise reproducible.
+    """
+    spec = cfg.spec
+    gp, gm, scale = conductance_pair(folded, spec,
+                                     name=f"params[{layer}] (w|b folded)")
+    gp = quantize_conductance(gp, spec)
+    gm = quantize_conductance(gm, spec)
+
+    def salt(pair, channel):
+        return _hw_salt(cfg, step, draw, layer, pair, channel, num_layers)
+
+    if spec.prog_noise > 0:
+        ep = counter_normal(cfg.noise_seed, salt(0, 0), gp.shape)
+        em = counter_normal(cfg.noise_seed, salt(1, 0), gm.shape)
+        gp = jnp.clip(gp * (1.0 + spec.prog_noise * ep), 0.0,
+                      spec.g_max * 1.5)
+        gm = jnp.clip(gm * (1.0 + spec.prog_noise * em), 0.0,
+                      spec.g_max * 1.5)
+
+    if cfg.faults is not None and cfg.faults.stuck_rate > 0:
+        from repro.core.faults import fault_salt
+        from repro.kernels.noise import stuck_cell_masks
+        seed = jnp.uint32(cfg.faults.seed)
+        if cfg.fault_ensemble:
+            # fresh array per (step, draw): robustness to the fault
+            # DISTRIBUTION, not one frozen mask
+            seed = splitmix32(seed ^ (jnp.asarray(step, jnp.uint32)
+                                      * jnp.uint32(cfg.k_draws)
+                                      + jnp.uint32(draw)))
+        rate = cfg.faults.stuck.rate
+        on_frac = cfg.faults.stuck.on_frac
+        for pair, g in ((0, gp), (1, gm)):
+            is_stuck, stuck_on = stuck_cell_masks(
+                seed, fault_salt(layer, pair), g.shape, rate, on_frac)
+            val = jnp.where(stuck_on, jnp.float32(spec.g_max),
+                            jnp.float32(spec.g_min))
+            g = jnp.where(is_stuck, val, g)
+            if pair == 0:
+                gp = g
+            else:
+                gm = g
+
+    if (cfg.faults is not None and cfg.faults.drift is not None
+            and cfg.drift_reads > 0):
+        # draws span array ages 0 .. drift_reads (both pair halves decay
+        # together — a global gain droop, exactly the kernel's live model)
+        from repro.core.faults import drift_factor
+        age = cfg.drift_reads * draw // max(cfg.k_draws - 1, 1)
+        dfac = drift_factor(cfg.faults, age)
+        gp = gp * dfac
+        gm = gm * dfac
+
+    sigma = cfg.effective_read_sigma
+    if sigma > 0:
+        rp = counter_normal(cfg.noise_seed, salt(0, 1), gp.shape)
+        rm = counter_normal(cfg.noise_seed, salt(1, 1), gm.shape)
+        gp = gp * (1.0 + sigma * rp)
+        gm = gm * (1.0 + sigma * rm)
+
+    return (gp - gm) / scale
+
+
+def hw_aware_params(params: Pytree, cfg: HwAwareConfig, step,
+                    draw: int = 0) -> Pytree:
+    """The core MLP param list through the write path, with the STE.
+
+    Forward value: the degraded weights the array would realise at
+    training step ``step``, device realisation ``draw``.  Gradient:
+    identity (``dL/dw = dL/dw_eff``), so the chain composes with any
+    differentiable rollout — digital adjoint or the fused reverse-time
+    VJP — without touching the kernels.
+    """
+    L = len(params)
+    out = []
+    for li, layer in enumerate(params):
+        folded = _fold_bias({"w": layer["w"].astype(jnp.float32),
+                             "b": layer["b"].astype(jnp.float32)})
+        w_hw = write_path_tensor(folded, cfg, step, draw, li, L)
+        eff = folded + lax.stop_gradient(w_hw - folded)
+        out.append({"w": eff[:-1], "b": eff[-1]})
+    return out
+
+
+def expectation_over_draws(per_draw_loss, cfg: HwAwareConfig):
+    """Mean loss over ``k_draws`` independent device realisations.
+
+    ``per_draw_loss(draw) -> scalar``; draws are unrolled statically
+    (``k_draws`` is small), so the whole expectation stays inside the
+    one scan-compiled jit.
+    """
+    losses = [per_draw_loss(d) for d in range(cfg.k_draws)]
+    return jnp.mean(jnp.stack(losses))

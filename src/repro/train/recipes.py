@@ -30,7 +30,7 @@ L96_DT = 0.0025
 
 def train_hp_twin(seed: int = 42, pretrain_steps: int = 400,
                   train_steps: int = 600, hidden: int = 14,
-                  backend=None):
+                  backend=None, hw_aware=None):
     """Train the HP twin on the sine drive (paper Methods: 500 pts, 1e-3 s).
 
     ``backend``: training substrate for the trajectory phase (Backend
@@ -38,6 +38,13 @@ def train_hp_twin(seed: int = 42, pretrain_steps: int = 400,
     serving substrate — the weights-stationary kernel plus its
     reverse-time VJP; the derivative-matching warm start stays digital
     (it evaluates the bare field, no ODE solve).
+
+    ``hw_aware``: optional :class:`repro.train.hw_aware.HwAwareConfig` —
+    the trajectory phase trains through the analogue write path (STE
+    quantise + programming/read noise + optional fault ensemble) so the
+    weights survive deployment on the analogue substrate.  The warm
+    start stays clean: it shapes the field, the trajectory phase
+    hardens it.
     """
     ts, xs, vs, cur = hp.generate("sine", num_points=500, dt=1e-3,
                                   amp=HP_AMP, freq=HP_FREQ)
@@ -52,7 +59,8 @@ def train_hp_twin(seed: int = 42, pretrain_steps: int = 400,
         twin, params, ts, ys,
         optimizer=adam(warmup_cosine_schedule(3e-3, 50, train_steps)),
         num_steps=train_steps, segment_len=50, loss="l1", noise_std=0.002,
-        key=jax.random.PRNGKey(seed + 1), backend=backend)
+        key=jax.random.PRNGKey(seed + 1), backend=backend,
+        hw_aware=hw_aware)
     return twin, params, float(hist[-1])
 
 
@@ -140,11 +148,13 @@ def l96_data(num_points: int = 2400, dt: float = L96_DT):
 def train_l96_twin(seed: int = 7, pretrain_steps: int = 5000,
                    train_steps: tuple = ((60, 600, 1e-3), (200, 600, 4e-4)),
                    hidden: int = 64, tube_noise: float = 0.03,
-                   data=None, backend=None):
+                   data=None, backend=None, hw_aware=None):
     """Noisy-tube derivative pretraining + multiple-shooting curriculum.
 
     ``backend``: trajectory-phase training substrate (see
-    :func:`repro.train.trainer.segment_loss_fn`)."""
+    :func:`repro.train.trainer.segment_loss_fn`).  ``hw_aware``: optional
+    :class:`repro.train.hw_aware.HwAwareConfig` — the curriculum phases
+    train through the analogue write path (noise-aware training)."""
     ts, ys, split = data if data is not None else l96_data()
     ts_tr, ys_tr = ts[:split], ys[:split]
     twin = make_autonomous_twin(6, hidden=hidden)
@@ -169,7 +179,8 @@ def train_l96_twin(seed: int = 7, pretrain_steps: int = 5000,
             optimizer=adam(warmup_cosine_schedule(lr, 50, steps),
                            weight_decay=1e-4),
             num_steps=steps, segment_len=seg, loss="l1", noise_std=0.02,
-            key=jax.random.PRNGKey(seed + 2), backend=backend)
+            key=jax.random.PRNGKey(seed + 2), backend=backend,
+            hw_aware=hw_aware)
     return twin, params
 
 

@@ -38,16 +38,35 @@ Pytree = Any
 
 
 def _step_body(loss_fn: Callable, optimizer: Optimizer, has_key: bool,
-               params, opt_state, key):
-    """One descent step — the shared body of both training engines."""
+               params, opt_state, key, step=None):
+    """One descent step — the shared body of both training engines.
+
+    ``step`` (a traced int32, threaded only for losses that declare
+    ``loss_fn.wants_step = True``) is the global step counter that keys
+    the hardware-aware device-model noise draws — see
+    :mod:`repro.train.hw_aware`."""
     if has_key:
         key, sub = jax.random.split(key)
     else:
         sub = None
-    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, sub))(params)
+    if step is None:
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, sub))(params)
+    else:
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, sub, step))(params)
     updates, opt_state = optimizer.update(grads, opt_state, params)
     params = apply_updates(params, updates)
     return params, opt_state, key, loss
+
+
+def _wants_step(loss_fn: Callable) -> bool:
+    """Does the loss want the global step counter as a third argument?
+
+    Step-keyed losses (hardware-aware training) opt in by setting
+    ``loss_fn.wants_step = True``; the engines then carry an int32 step
+    counter through the scan and call ``loss_fn(params, key, step)``.
+    Plain losses keep the exact legacy engine signatures."""
+    return bool(getattr(loss_fn, "wants_step", False))
 
 
 def make_step_fn(loss_fn: Callable, optimizer: Optimizer,
@@ -56,7 +75,19 @@ def make_step_fn(loss_fn: Callable, optimizer: Optimizer,
 
     The per-step engine — one device dispatch per optimisation step.
     Kept as the reference implementation for :func:`fit_per_step` and the
-    ``train_throughput`` benchmark baseline."""
+    ``train_throughput`` benchmark baseline.  For step-keyed losses
+    (``loss_fn.wants_step``) the signature gains a trailing int32 step
+    counter: (params, opt_state, key, step) -> same + loss."""
+
+    if _wants_step(loss_fn):
+        @jax.jit
+        def step_keyed(params, opt_state, key, step):
+            params, opt_state, key, loss = _step_body(
+                loss_fn, optimizer, has_key, params, opt_state, key,
+                step=step)
+            return params, opt_state, key, step + jnp.int32(1), loss
+
+        return step_keyed
 
     @jax.jit
     def step(params, opt_state, key):
@@ -77,7 +108,32 @@ def make_scan_engine(loss_fn: Callable, optimizer: Optimizer, has_key: bool,
     buffers to the chunk (in-place on accelerators; ignored on CPU).
     ``unroll`` unrolls the scan body (same ops in the same order — purely
     a loop-overhead optimisation for the tiny paper-sized step bodies).
+
+    For step-keyed losses (``loss_fn.wants_step``, hardware-aware
+    training) the engine is instead
+    (params, opt_state, key, step0, n) -> carries + step0 + losses —
+    the int32 global step counter rides in the scan carry so the chunk
+    remains ONE jit and every device-model draw is keyed by the absolute
+    step, independent of chunking.
     """
+
+    if _wants_step(loss_fn):
+        def scan_step_keyed(carry, _):
+            params, opt_state, key, si = carry
+            params, opt_state, key, loss = _step_body(
+                loss_fn, optimizer, has_key, params, opt_state, key, step=si)
+            return (params, opt_state, key, si + jnp.int32(1)), loss
+
+        @functools.partial(jax.jit, static_argnums=4,
+                           donate_argnums=(0, 1) if donate else ())
+        def run_chunk_keyed(params, opt_state, key, step0, n):
+            carry = (params, opt_state, key, jnp.asarray(step0, jnp.int32))
+            (params, opt_state, key, step0), losses = lax.scan(
+                scan_step_keyed, carry, None, length=n,
+                unroll=min(unroll, n))
+            return params, opt_state, key, step0, losses
+
+        return run_chunk_keyed
 
     def scan_step(carry, _):
         params, opt_state, key = carry
@@ -142,11 +198,18 @@ def fit(loss_fn: Callable, params: Pytree, optimizer: Optimizer,
         opt_state = jax.tree_util.tree_map(jnp.copy, opt_state)
     run_chunk = make_scan_engine(loss_fn, optimizer, key is not None,
                                  donate=donate)
+    wants_step = _wants_step(loss_fn)
+    step0 = jnp.asarray(0, jnp.int32)
 
     chunks, done = [], 0
     while done < num_steps:
         n = min(scan_chunk, num_steps - done)
-        params, opt_state, key, losses = run_chunk(params, opt_state, key, n)
+        if wants_step:
+            params, opt_state, key, step0, losses = run_chunk(
+                params, opt_state, key, step0, n)
+        else:
+            params, opt_state, key, losses = run_chunk(
+                params, opt_state, key, n)
         if log_every:
             hist = np.asarray(losses)       # one host sync per chunk
             for t in range(n):
@@ -168,9 +231,15 @@ def fit_per_step(loss_fn: Callable, params: Pytree, optimizer: Optimizer,
     """
     opt_state = optimizer.init(params)
     step = make_step_fn(loss_fn, optimizer, key is not None)
+    wants_step = _wants_step(loss_fn)
+    si = jnp.asarray(0, jnp.int32)
     losses = []
     for i in range(num_steps):
-        params, opt_state, key, loss = step(params, opt_state, key)
+        if wants_step:
+            params, opt_state, key, si, loss = step(params, opt_state,
+                                                    key, si)
+        else:
+            params, opt_state, key, loss = step(params, opt_state, key)
         losses.append(loss)
         if log_every and (i % log_every == 0 or i == num_steps - 1):
             print(f"  step {i:5d}  loss {float(loss):.6f}")
@@ -223,7 +292,7 @@ def _segment_objective(loss: str, gamma: float, preds, ys_seg,
 
 
 def _fused_segment_loss_fn(twin, backend, ts_seg, ys_seg, loss: str,
-                           gamma: float, noise_std: float):
+                           gamma: float, noise_std: float, hw_aware=None):
     """Multiple-shooting loss on the fused-Pallas substrate.
 
     The segments become the kernel's BATCH dimension: one grid-tiled
@@ -233,6 +302,15 @@ def _fused_segment_loss_fn(twin, backend, ts_seg, ys_seg, loss: str,
     the reverse-time kernel carries the gradients.  Differs from the
     digital vmap path only by the substrate; the objective, segmentation
     and noise regularisation are identical.
+
+    ``hw_aware`` (an :class:`repro.train.hw_aware.HwAwareConfig`) makes
+    the loss hardware-aware: each evaluation passes ``params`` through
+    the analogue write path (STE quantise + programming/read noise +
+    optional faults, keyed by the global training step) before the fused
+    rollout, averaged over ``k_draws`` device realisations.  The device
+    model is a weight-space pre-transform, so the reverse-time VJP kernel
+    is untouched; the returned loss sets ``wants_step`` so the engines
+    thread the step counter.
     """
     from repro.kernels import ops
     from repro.kernels.fused_ode_mlp import pad_fleet_to_tile
@@ -267,29 +345,42 @@ def _fused_segment_loss_fn(twin, backend, ts_seg, ys_seg, loss: str,
             drive, jnp.linspace(row[0], row[-1], T_fine + 1)))(ts_seg)
         uh = uh.astype(jnp.float32)
 
-    def loss_fn(params, key):
+    def loss_fn(params, key, step=None):
         y0s = ys_seg[:, 0]
         if noise_std > 0 and key is not None:
             y0s = y0s + noise_std * jax.random.normal(key, y0s.shape)
         # pad segments up to a tile multiple, as rollout_batch_local does
         y0p, uhp, bt, _ = pad_fleet_to_tile(y0s, uh, backend.batch_tile)
-        traj = ops.fused_node_rollout(
-            params, y0p, uhp, dt / sub, batch_tile=bt,
-            time_chunk=backend.time_chunk, interpret=backend.interpret,
-            vmem_budget_bytes=backend.vmem_budget_bytes,
-            gradient="fused_vjp", precision=backend.precision)
-        preds = jnp.transpose(traj[::sub, :S], (1, 0, 2))  # (S, L+1, D)
-        return _segment_objective(loss, gamma, preds, ys_seg,
-                                  kernelised=True,
-                                  interpret=backend.interpret,
-                                  precision=backend.precision)
 
+        def rollout_loss(p):
+            traj = ops.fused_node_rollout(
+                p, y0p, uhp, dt / sub, batch_tile=bt,
+                time_chunk=backend.time_chunk, interpret=backend.interpret,
+                vmem_budget_bytes=backend.vmem_budget_bytes,
+                gradient="fused_vjp", precision=backend.precision)
+            preds = jnp.transpose(traj[::sub, :S], (1, 0, 2))  # (S, L+1, D)
+            return _segment_objective(loss, gamma, preds, ys_seg,
+                                      kernelised=True,
+                                      interpret=backend.interpret,
+                                      precision=backend.precision)
+
+        if hw_aware is None:
+            return rollout_loss(params)
+        from repro.train.hw_aware import (expectation_over_draws,
+                                          hw_aware_params)
+        return expectation_over_draws(
+            lambda d: rollout_loss(hw_aware_params(params, hw_aware,
+                                                   step, d)),
+            hw_aware)
+
+    if hw_aware is not None:
+        loss_fn.wants_step = True
     return loss_fn
 
 
 def segment_loss_fn(twin, ts_seg, ys_seg, loss: str = "l1",
                     gamma: float = 0.1, noise_std: float = 0.0,
-                    backend=None):
+                    backend=None, hw_aware=None):
     """Loss over shooting segments solved in parallel.
 
     ``backend``: optional execution substrate (Backend instance or
@@ -297,24 +388,53 @@ def segment_loss_fn(twin, ts_seg, ys_seg, loss: str = "l1",
     analogue substrates vmap one solve per segment; the fused-Pallas
     substrate batches all segments through one weights-stationary kernel
     with the reverse-time VJP (train where you serve).
+
+    ``hw_aware``: optional :class:`repro.train.hw_aware.HwAwareConfig`
+    turning on hardware-aware training — every loss evaluation sees the
+    weights through the analogue write path (STE 6-bit quantise +
+    programming/read noise + optional fault ensemble), step-keyed and
+    bitwise-reproducible.  Works on any differentiable substrate.
+    Training directly on an ``analogue_fused``/``FusedAnalogueBackend``
+    substrate implies hardware-aware mode: the policy is auto-derived
+    from the backend's own spec/faults (``HwAwareConfig.from_backend``)
+    and the rollout integrates on the fused digital kernel with the
+    device-degraded weights — previously such training silently fell
+    through to the clean digital kernel with detached device physics.
     """
-    from repro.core.backends import FusedPallasBackend, resolve_backend
+    from repro.core.backends import (FusedAnalogueBackend,
+                                     FusedPallasBackend, resolve_backend)
 
     be = resolve_backend(backend) if backend is not None else twin.backend
+    if hw_aware is None and isinstance(be, FusedAnalogueBackend):
+        from repro.train.hw_aware import HwAwareConfig
+        hw_aware = HwAwareConfig.from_backend(be)
     if isinstance(be, FusedPallasBackend):
         return _fused_segment_loss_fn(twin, be, ts_seg, ys_seg, loss,
-                                      gamma, noise_std)
+                                      gamma, noise_std, hw_aware)
     if backend is not None:
         twin = twin.with_backend(be)
 
-    def loss_fn(params, key):
+    def loss_fn(params, key, step=None):
         y0s = ys_seg[:, 0]
         if noise_std > 0 and key is not None:
             y0s = y0s + noise_std * jax.random.normal(key, y0s.shape)
-        preds = jax.vmap(lambda y0, t: twin.simulate(params, y0, t))(
-            y0s, ts_seg)
-        return _segment_objective(loss, gamma, preds, ys_seg)
 
+        def rollout_loss(p):
+            preds = jax.vmap(lambda y0, t: twin.simulate(p, y0, t))(
+                y0s, ts_seg)
+            return _segment_objective(loss, gamma, preds, ys_seg)
+
+        if hw_aware is None:
+            return rollout_loss(params)
+        from repro.train.hw_aware import (expectation_over_draws,
+                                          hw_aware_params)
+        return expectation_over_draws(
+            lambda d: rollout_loss(hw_aware_params(params, hw_aware,
+                                                   step, d)),
+            hw_aware)
+
+    if hw_aware is not None:
+        loss_fn.wants_step = True
     return loss_fn
 
 
@@ -323,7 +443,8 @@ def train_twin(twin, params, ts: jax.Array, ys: jax.Array, *,
                segment_len: int = 50, loss: str = "l1",
                gamma: float = 0.1, noise_std: float = 0.0,
                key: jax.Array | None = None, log_every: int = 0,
-               backend=None, scan_chunk: int | None = None):
+               backend=None, scan_chunk: int | None = None,
+               hw_aware=None):
     """Train a twin on one observed trajectory (paper's training setup).
 
     ``backend`` selects the training substrate (see
@@ -334,10 +455,19 @@ def train_twin(twin, params, ts: jax.Array, ys: jax.Array, *,
     ``backend=FusedPallasBackend(precision="bf16_f32acc")`` trains on
     the reduced-precision substrate (bf16 slabs, f32 accumulation; the
     loss and optimizer state stay f32).
+
+    ``hw_aware`` (an :class:`repro.train.hw_aware.HwAwareConfig`) trains
+    noise-aware weights: every loss evaluation passes ``params`` through
+    the analogue write path first — 6-bit quantise-dequantise under a
+    straight-through estimator, programming + read noise from the
+    kernels' counter-derived stream keyed by the global step, optional
+    stuck-cell/drift ensemble — averaged over ``k_draws`` realisations.
+    The fit stays one scan-compiled jit; same seed ⇒ bitwise-identical
+    loss history.
     """
     ts_seg, ys_seg = make_segments(ts, ys, segment_len)
     loss_fn = segment_loss_fn(twin, ts_seg, ys_seg, loss, gamma, noise_std,
-                              backend=backend)
+                              backend=backend, hw_aware=hw_aware)
     if key is None:
         key = jax.random.PRNGKey(0)
     return fit(loss_fn, params, optimizer, num_steps, key, log_every,

@@ -1,0 +1,116 @@
+"""Hardware-in-the-loop calibration hooks: a measured device-constants
+JSON round-trips into AnalogueSpec / ConductanceDrift / EnergyConstants,
+and every validation error names the offending field."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import energy
+from repro.core.analogue import (AnalogueSpec, drift_from_calibration,
+                                 load_calibration, spec_from_calibration)
+
+GOOD = {
+    "schema": 1,
+    "source": "bench-top characterisation of array A7",
+    "device": {
+        "g_off_S": 18e-6,
+        "g_on_S": 95e-6,
+        "levels": 32,
+        "prog_noise_sigma": 0.05,
+        "read_noise_sigma": 0.013,
+        "v_clamp": None,
+    },
+    "drift": {"nu": 0.02, "tau": 500.0},
+    "energy": {"t_settle_us": 6.0e-3, "p_base_w": 1.2},
+}
+
+
+@pytest.fixture()
+def cal_file(tmp_path):
+    p = tmp_path / "device.json"
+    p.write_text(json.dumps(GOOD))
+    return str(p)
+
+
+def test_calibration_roundtrip_spec(cal_file):
+    spec = spec_from_calibration(cal_file)
+    assert spec == AnalogueSpec(g_min=18e-6, g_max=95e-6, levels=32,
+                                prog_noise=0.05, read_noise=0.013,
+                                v_clamp=None)
+    # overrides apply after the measured values
+    spec2 = spec_from_calibration(cal_file, read_noise=0.0)
+    assert spec2.read_noise == 0.0 and spec2.levels == 32
+
+
+def test_calibration_roundtrip_drift(cal_file):
+    drift = drift_from_calibration(cal_file)
+    assert drift is not None
+    assert (drift.nu, drift.tau) == (0.02, 500.0)
+    no_drift = dict(GOOD)
+    no_drift.pop("drift")
+    assert drift_from_calibration(no_drift) is None
+
+
+def test_calibration_roundtrip_energy(cal_file):
+    c = energy.constants_from_calibration(cal_file)
+    # measured fields land, missing ones keep the paper-calibrated values
+    assert c.t_settle_us == 6.0e-3 and c.p_base_w == 1.2
+    assert c.v_read == energy.DEFAULT_CONSTANTS.v_read
+    t_cal, e_cal = energy.project("analogue_node", 64, constants=c)
+    t_def, e_def = energy.project("analogue_node", 64)
+    # the measured (slower, cheaper-peripheral) device moves the projection
+    assert t_cal == pytest.approx(t_def * 6.0e-3 / energy.T_SETTLE_US)
+    assert e_cal != e_def
+    # digital systems ignore the analogue constants
+    assert (energy.project("node_gpu", 64, constants=c)
+            == energy.project("node_gpu", 64))
+
+
+def test_paper_device_file_matches_defaults():
+    """The committed reference file IS the paper's device: same spec as
+    the AnalogueSpec defaults (modulo the read-noise sweep point) and the
+    same energy constants as the calibrated module defaults."""
+    spec = spec_from_calibration("calibration/paper_device.json")
+    assert dataclasses.replace(spec, read_noise=0.0) == AnalogueSpec()
+    assert spec.read_noise == 0.02   # top of the paper's Fig. 4j sweep
+    c = energy.constants_from_calibration("calibration/paper_device.json")
+    assert c == energy.DEFAULT_CONSTANTS
+
+
+@pytest.mark.parametrize("mutate, needle", [
+    (lambda c: c.update(schema=2), "schema"),
+    (lambda c: c.pop("device"), "'device'"),
+    (lambda c: c["device"].pop("g_on_S"), "device.g_on_S"),
+    (lambda c: c["device"].update(g_on_S=1e-6), "device.g_on_S"),
+    (lambda c: c["device"].update(g_off_S=-2e-6), "device.g_off_S"),
+    (lambda c: c["device"].update(levels=63.5), "device.levels"),
+    (lambda c: c["device"].update(levels=1), "device.levels"),
+    (lambda c: c["device"].update(prog_noise_sigma=-0.1),
+     "device.prog_noise_sigma"),
+    (lambda c: c["device"].update(read_noise_sigma="high"),
+     "device.read_noise_sigma"),
+    (lambda c: c["device"].update(g_onS=1e-4), "device.g_onS"),
+    (lambda c: c["drift"].pop("tau"), "drift.tau"),
+    (lambda c: c["drift"].update(tau=0.0), "drift.tau"),
+    (lambda c: c["energy"].update(p_base_w=0), "energy.p_base_w"),
+    (lambda c: c.update(extras={}), "extras"),
+])
+def test_calibration_errors_name_offending_field(mutate, needle):
+    cal = json.loads(json.dumps(GOOD))   # deep copy
+    mutate(cal)
+    with pytest.raises(ValueError, match="calibration") as ei:
+        load_calibration(cal)
+    assert needle in str(ei.value)
+
+
+def test_calibration_invalid_json_names_file(tmp_path):
+    p = tmp_path / "broken.json"
+    p.write_text("{not json")
+    with pytest.raises(ValueError, match="invalid JSON"):
+        load_calibration(str(p))
+
+
+def test_energy_constants_validate_fields():
+    with pytest.raises(ValueError, match="EnergyConstants.v_read"):
+        energy.EnergyConstants(v_read=0.0)

@@ -1,0 +1,280 @@
+"""Hardware-aware training: STE semantics, the step-keyed determinism
+contract of ``fit(hw_aware=...)``, and the differentiable training mode
+of the fused analogue backend."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.analogue import AnalogueSpec, spec_from_calibration
+from repro.core.backends import FusedAnalogueBackend
+from repro.core.faults import make_fault_model
+from repro.data import hp_memristor as hp
+from repro.core.twin import make_driven_twin
+from repro.train import trainer
+from repro.train.hw_aware import (HwAwareConfig, expectation_over_draws,
+                                  hw_aware_params)
+from repro.train.optimizer import adam
+
+SPEC = spec_from_calibration("calibration/paper_device.json")
+
+
+@pytest.fixture(scope="module")
+def hp_setup():
+    ts, xs, _, _ = hp.generate("sine", num_points=500, dt=1e-3,
+                               amp=2.0, freq=2.0)
+    ys = xs[:, None]
+    twin = make_driven_twin(1, hp.WAVEFORMS["sine"](amp=2.0, freq=2.0),
+                            hidden=14)
+    params = twin.init(jax.random.PRNGKey(42))
+    ts_seg, ys_seg = trainer.make_segments(ts, ys, 50)
+    return twin, params, ts_seg, ys_seg
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _trees_equal(a, b):
+    return all(np.array_equal(x, y) for x, y in zip(_leaves(a), _leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# The write-path transform
+# ---------------------------------------------------------------------------
+
+def test_transform_is_deterministic_per_seed_step_draw(hp_setup):
+    _, params, _, _ = hp_setup
+    cfg = HwAwareConfig(spec=SPEC, k_draws=3, noise_seed=7)
+    a = hw_aware_params(params, cfg, 11, 1)
+    b = hw_aware_params(params, cfg, 11, 1)
+    assert _trees_equal(a, b)
+    # every key component changes the realisation
+    assert not _trees_equal(a, hw_aware_params(params, cfg, 12, 1))
+    assert not _trees_equal(a, hw_aware_params(params, cfg, 11, 2))
+    cfg2 = dataclasses.replace(cfg, noise_seed=8)
+    assert not _trees_equal(a, hw_aware_params(params, cfg2, 11, 1))
+    # under jit the traced step is deterministic too, and matches the
+    # eager realisation to float32 rounding (same counter-derived noise
+    # bits; only the fused float arithmetic differs between programs)
+    f = jax.jit(lambda s: hw_aware_params(params, cfg, s, 1))
+    c1, c2 = f(jnp.asarray(11, jnp.int32)), f(jnp.asarray(11, jnp.int32))
+    assert _trees_equal(c1, c2)
+    for x, y in zip(_leaves(a), _leaves(c1)):
+        np.testing.assert_allclose(x, y, rtol=2e-6, atol=1e-7)
+
+
+def test_transform_gradient_is_identity(hp_setup):
+    """The STE: d/dw sum(transform(w)) == 1 exactly, through quantise,
+    noise, stuck cells and drift."""
+    _, params, _, _ = hp_setup
+    fm = make_fault_model(("stuck", dict(rate=0.05)), "drift", seed=3)
+    cfg = HwAwareConfig(spec=SPEC, k_draws=2, noise_seed=0, faults=fm,
+                        fault_ensemble=True, drift_reads=1000)
+
+    def total(p):
+        eff = hw_aware_params(p, cfg, 4, 1)
+        return sum(jnp.sum(l["w"]) + jnp.sum(l["b"]) for l in eff)
+
+    g = jax.grad(total)(params)
+    for leaf in _leaves(g):
+        np.testing.assert_array_equal(leaf, np.ones_like(leaf))
+
+
+def test_transform_forward_matches_quantised_write(hp_setup):
+    """With all noise off, the forward value is exactly the post-hoc
+    deployment: a rollout with the transformed params on the fused
+    digital kernel matches the analogue_fused substrate."""
+    twin, params, _, _ = hp_setup
+    spec0 = dataclasses.replace(SPEC, prog_noise=0.0, read_noise=0.0)
+    cfg = HwAwareConfig(spec=spec0, k_draws=1)
+    eff = jax.tree_util.tree_map(np.asarray,
+                                 hw_aware_params(params, cfg, 0, 0))
+
+    ts = np.linspace(0.0, 0.05, 51).astype(np.float32)
+    y0 = jnp.asarray([[0.1]], jnp.float32)
+    be_a = FusedAnalogueBackend(spec=spec0, batch_tile=8)
+    st_a = be_a.program(twin.field, params)
+    out_a = be_a.rollout_batch_local(st_a, y0, jnp.asarray(ts))
+    from repro.core.backends import FusedPallasBackend
+    be_d = FusedPallasBackend(batch_tile=8)
+    st_d = be_d.program(twin.field, eff)
+    out_d = be_d.rollout_batch_local(st_d, y0, jnp.asarray(ts))
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_d),
+                               rtol=2e-4, atol=2e-6)
+
+
+def test_expectation_over_draws_averages():
+    cfg = HwAwareConfig(k_draws=4)
+    val = expectation_over_draws(lambda d: jnp.float32(d), cfg)
+    assert float(val) == pytest.approx(1.5)
+
+
+def test_config_validation_names_field():
+    with pytest.raises(ValueError, match="k_draws"):
+        HwAwareConfig(k_draws=0)
+    with pytest.raises(ValueError, match="read_sigma"):
+        HwAwareConfig(read_sigma=-0.1)
+    with pytest.raises(ValueError, match="fault_ensemble"):
+        HwAwareConfig(fault_ensemble=True)
+
+
+# ---------------------------------------------------------------------------
+# fit(hw_aware=...): one jitted scan, step-keyed, bitwise-reproducible
+# ---------------------------------------------------------------------------
+
+def test_fit_hw_aware_bitwise_reproducible(hp_setup):
+    """The acceptance contract: same seed => bitwise-identical loss
+    history run to run, and the same history for any chunking of the
+    scan (the noise draws are keyed by the ABSOLUTE step carried through
+    the scan, not the chunk layout) and for the per-step reference
+    engine — to float32 rounding across those distinct compiled
+    programs."""
+    twin, params, ts_seg, ys_seg = hp_setup
+    cfg = HwAwareConfig(spec=SPEC, k_draws=2, noise_seed=1)
+    loss_fn = trainer.segment_loss_fn(twin, ts_seg, ys_seg, "l1",
+                                      noise_std=0.002, hw_aware=cfg)
+    assert loss_fn.wants_step
+    steps = 9
+    runs = {}
+    for chunk in (None, 1, 4):
+        _, hist = trainer.fit(loss_fn, params, adam(1e-3), steps,
+                              jax.random.PRNGKey(6), scan_chunk=chunk)
+        runs[chunk] = np.asarray(hist)
+    _, h_ref = trainer.fit_per_step(loss_fn, params, adam(1e-3), steps,
+                                    jax.random.PRNGKey(6))
+    np.testing.assert_allclose(runs[None], runs[1], rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(runs[None], runs[4], rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(runs[None], np.asarray(h_ref),
+                               rtol=1e-6, atol=1e-8)
+    # run-to-run bitwise repeatability (no hidden state anywhere) — THE
+    # acceptance gate: same seed, same chunking => identical history
+    _, again = trainer.fit(loss_fn, params, adam(1e-3), steps,
+                           jax.random.PRNGKey(6), scan_chunk=4)
+    np.testing.assert_array_equal(runs[4], np.asarray(again))
+
+
+def test_fit_hw_aware_step_keying_matters(hp_setup):
+    """Different noise_seed => different loss history (the device draws
+    are live, not constant-folded away)."""
+    twin, params, ts_seg, ys_seg = hp_setup
+    hists = []
+    for seed in (1, 2):
+        cfg = HwAwareConfig(spec=SPEC, k_draws=2, noise_seed=seed)
+        loss_fn = trainer.segment_loss_fn(twin, ts_seg, ys_seg, "l1",
+                                          hw_aware=cfg)
+        _, h = trainer.fit(loss_fn, params, adam(1e-3), 5,
+                           jax.random.PRNGKey(6))
+        hists.append(np.asarray(h))
+    assert not np.array_equal(hists[0], hists[1])
+
+
+def test_fused_substrate_hw_aware_loss(hp_setup):
+    """hw_aware composes with the fused-Pallas training path (the STE is
+    upstream of the kernel, so the reverse-time VJP needs no changes)."""
+    from repro.core.backends import FusedPallasBackend
+    twin, params, ts_seg, ys_seg = hp_setup
+    cfg = HwAwareConfig(spec=SPEC, k_draws=2, noise_seed=1)
+    be = FusedPallasBackend(batch_tile=8)
+    loss_fn = trainer.segment_loss_fn(twin, ts_seg, ys_seg, "l1",
+                                      backend=be, hw_aware=cfg)
+    assert loss_fn.wants_step
+    _, h1 = trainer.fit(loss_fn, params, adam(1e-3), 4,
+                        jax.random.PRNGKey(0), scan_chunk=2)
+    _, h2 = trainer.fit(loss_fn, params, adam(1e-3), 4,
+                        jax.random.PRNGKey(0), scan_chunk=None)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    assert np.all(np.isfinite(np.asarray(h1)))
+
+
+def test_analogue_fused_backend_training_auto_hw_aware(hp_setup):
+    """Training on the analogue_fused substrate implies hardware-aware
+    mode: the loss is step-keyed and sees the backend's own device model
+    (previously this silently trained on the clean digital kernel)."""
+    twin, params, ts_seg, ys_seg = hp_setup
+    be = FusedAnalogueBackend(spec=SPEC, batch_tile=8)
+    loss_fn = trainer.segment_loss_fn(twin, ts_seg, ys_seg, "l1",
+                                      backend=be)
+    assert getattr(loss_fn, "wants_step", False)
+    clean_fn = trainer.segment_loss_fn(twin, ts_seg, ys_seg, "l1",
+                                       backend="fused_pallas")
+    l_hw = float(loss_fn(params, None, jnp.int32(0)))
+    l_clean = float(clean_fn(params, None))
+    assert np.isfinite(l_hw) and l_hw != l_clean
+
+
+@pytest.mark.slow
+def test_noise_aware_training_beats_clean_2x():
+    """The headline acceptance gate (ISSUE / ``BENCH_robustness.json``):
+    at the paper-level operating point (6-bit quantisation, calibrated
+    programming + read noise), noise-aware-trained weights deployed on
+    the noisy ``analogue_fused`` substrate cut the trajectory error by
+    >= 2x vs clean-trained post-hoc-quantised weights, and land within
+    the acceptable margin (2x the clean weights' noise-free analogue
+    error — the same convention as the fault-tolerance gates).
+
+    Full paper training budget; k_draws=2 keeps it ~2 min (measured
+    improvement ~4.7x, so the 2x gate has wide headroom)."""
+    from repro.train import recipes
+    from repro.train.hw_aware import HwAwareConfig
+
+    twin, p_clean, _ = recipes.train_hp_twin(seed=42)
+    cfg = HwAwareConfig(spec=SPEC, k_draws=2, noise_seed=0)
+    _, p_hw, _ = recipes.train_hp_twin(seed=42, hw_aware=cfg)
+
+    def an_mre(params, spec, seeds=(0, 1)):
+        errs = []
+        for rs in seeds:
+            be = FusedAnalogueBackend(spec=spec,
+                                      prog_key=jax.random.PRNGKey(100),
+                                      read_seed=rs)
+            errs.append(recipes.eval_hp_twin(twin, params, "sine",
+                                             backend=be)["mre"])
+        return float(np.mean(errs))
+
+    spec_nf = dataclasses.replace(SPEC, read_noise=0.0)
+    margin = 2.0 * an_mre(p_clean, spec_nf, seeds=(0,))
+    e_clean = an_mre(p_clean, SPEC)
+    e_hw = an_mre(p_hw, SPEC)
+    assert e_hw <= margin, (
+        f"hw-aware weights outside the deployment margin: "
+        f"mre {e_hw:.4f} > {margin:.4f}")
+    assert e_clean / e_hw >= 2.0, (
+        f"noise-aware training below the 2x gate: clean {e_clean:.4f} "
+        f"vs hw-aware {e_hw:.4f} (x{e_clean / e_hw:.2f})")
+
+
+def test_trainable_backend_solve_is_differentiable(hp_setup):
+    """FusedAnalogueBackend(trainable=True): gradients flow through the
+    write path to the f32 masters; trainable=False stays detached."""
+    twin, params, _, _ = hp_setup
+    ts = jnp.linspace(0.0, 0.05, 51)
+    y0 = jnp.asarray([0.1], jnp.float32)
+
+    def loss_through(be):
+        state = be.program(twin.field, params)
+        if be.trainable:
+            masters = [{"w": w, "b": b}
+                       for w, b in zip(state.extra["weights"],
+                                       state.extra["biases"])]
+
+            def f(ms):
+                st = dataclasses.replace(be, trainable=True).program(
+                    twin.field, ms)
+                return jnp.sum(be.rollout(st, y0, ts))
+            return jax.grad(f)(masters)
+        return None
+
+    be = FusedAnalogueBackend(spec=SPEC, batch_tile=8, trainable=True)
+    grads = loss_through(be)
+    leaves = _leaves(grads)
+    assert all(np.all(np.isfinite(l)) for l in leaves)
+    assert any(np.any(l != 0) for l in leaves)
+
+    # non-trainable stays detached whatever gradient mode is requested
+    be0 = FusedAnalogueBackend(spec=SPEC, batch_tile=8)
+    st0 = be0.program(twin.field, params)
+    out = be0.rollout(st0, y0, ts, gradient="fused_vjp")
+    assert np.all(np.isfinite(np.asarray(out)))

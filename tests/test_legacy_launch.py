@@ -1,0 +1,70 @@
+"""Quarantined LM-era launch modules (``repro.launch.legacy``): pipeline
+parallelism and the LM train driver.  Kept runnable — same contract as
+``tests/test_legacy_kernels.py`` for the PR-6 kernel quarantine — but the
+twin-serving stack no longer imports them."""
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.train import checkpoint as ckpt
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Pipeline parallelism
+# ---------------------------------------------------------------------------
+
+def test_pipeline_matches_sequential_subprocess():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.legacy.pipeline import make_pipeline_forward
+
+        n_stages, n_micro, mb, d = 4, 8, 2, 16
+        mesh = jax.make_mesh((4,), ("pipe",))
+        key = jax.random.PRNGKey(0)
+        ws = jax.random.normal(key, (n_stages, d, d)) / d ** 0.5
+
+        def block(w, x):
+            return jnp.tanh(x @ w)
+
+        x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
+        fwd = make_pipeline_forward(block, n_stages, n_micro, mesh)
+        y_pipe = fwd(ws, x)
+
+        y_ref = x
+        for s in range(n_stages):
+            y_ref = block(ws[s], y_ref)
+        np.testing.assert_allclose(np.asarray(y_pipe), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+        # gradients flow through ppermute
+        g = jax.grad(lambda w: fwd(w, x).sum())(ws)
+        assert all(np.isfinite(np.asarray(x)).all()
+                   for x in jax.tree_util.tree_leaves(g))
+        print("PIPELINE_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env={**os.environ,
+                                        "PYTHONPATH": f"{REPO}/src"})
+    assert "PIPELINE_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])
+
+
+# ---------------------------------------------------------------------------
+# Train driver end-to-end (resume-after-preemption semantics)
+# ---------------------------------------------------------------------------
+
+def test_train_driver_runs_and_resumes(tmp_path):
+    from repro.launch.legacy.train import main as train_main
+    args = ["--arch", "qwen3-1.7b", "--smoke", "--steps", "6",
+            "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path),
+            "--ckpt-every", "3", "--log-every", "100"]
+    losses1 = train_main(args)
+    assert ckpt.latest_step(str(tmp_path)) == 6
+    # resume: should continue from step 6 (no steps left -> quick exit)
+    losses2 = train_main([*args[:-6], "--ckpt-dir", str(tmp_path),
+                          "--ckpt-every", "3", "--log-every", "100"])
+    assert len(losses1) == 6
